@@ -1,0 +1,77 @@
+"""Shared benchmark utilities + the blocking (MESSI stand-in) executor."""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, List, Optional, Sequence
+
+from repro.core.refresh import Injectors, WorkerCrash, _split
+from repro.core.traverse import Executor, StageStats
+
+
+class BlockingExecutor(Executor):
+    """MESSI-style stage execution: static equal split, barrier at the end
+    (thread join).  A delayed worker delays the WHOLE stage; a crashed
+    worker leaves its chunk unprocessed and, in a real barrier, would hang
+    the stage forever — modelled by `crash_hangs` (we raise after a grace
+    timeout instead of deadlocking the benchmark)."""
+
+    def __init__(self, n_threads: int = 4,
+                 injectors: Optional[Injectors] = None,
+                 crash_hang_timeout: Optional[float] = None):
+        self.n_threads = max(1, n_threads)
+        self.injectors = injectors or Injectors()
+        self.crash_hang_timeout = crash_hang_timeout
+        self.last_stats: Optional[StageStats] = None
+
+    def run(self, items: Sequence, f: Callable, param=None) -> None:
+        n = len(items)
+        spans = _split(n, self.n_threads)
+        t0 = time.perf_counter()
+        crashed = []
+
+        def worker(tid: int, lo: int, hi: int):
+            try:
+                for i in range(lo, hi):
+                    inj = self.injectors
+                    if inj.delay is not None:
+                        d = inj.delay(tid, 3, i)
+                        if d and d > 0:
+                            time.sleep(d)
+                    if inj.crash is not None and inj.crash(tid, 3, i):
+                        raise WorkerCrash
+                    f(items[i]) if param is None else f(items[i], param)
+            except WorkerCrash:
+                crashed.append(tid)
+
+        threads = [threading.Thread(target=worker, args=(t, lo, hi))
+                   for t, (lo, hi) in enumerate(spans)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()          # the barrier
+        if crashed and self.crash_hang_timeout is None:
+            raise RuntimeError(
+                f"blocking stage lost workers {crashed}: with a real "
+                "barrier this never terminates (paper Section VI)")
+        self.last_stats = StageStats(
+            wall_time=time.perf_counter() - t0, applications=n,
+            crashed_workers=len(crashed))
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

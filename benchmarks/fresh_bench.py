@@ -1,0 +1,257 @@
+"""Paper-figure benchmarks (Section VI), scaled to this container.
+
+One function per figure; each returns CSV rows `name,us_per_call,derived`.
+Dataset sizes are scaled down (the paper uses 100-200 GB in-memory; we use
+10-50 MB) — the COMPARISONS are what reproduce the paper's claims:
+
+  fig3   FreSh vs blocking (MESSI stand-in) vs fine-grained-lock variant,
+         scaling with thread count, per phase.
+  fig5   dataset-size scaling (Random + seismic-like).
+  fig6a  query-difficulty sweep (noise sigma).
+  fig6bc index-creation variants: FreSh / Subtree / Standard / TreeCopy.
+  fig6d  buffer-creation baselines: DoAll-Split / FAI / CAS vs Refresh.
+  fig7   thread delays: blocking degrades linearly, FreSh absorbs.
+  fig8   permanent crashes: FreSh terminates and tracks the no-failure
+         time of the surviving thread count; blocking never terminates
+         (asserted, not timed).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_index, build_index_host, search
+from repro.core.baselines import CasBased, DoAllSplit, FaiBased
+from repro.core.refresh import Injectors, RefreshExecutor
+from repro.core.tree import FatLeafTree
+from repro.data.synthetic import query_workload, random_walk, seismic_like
+
+from .common import BlockingExecutor, row, timeit
+
+N_SERIES = 20_000
+N_QUERIES = 32
+
+
+def _host_build_time(executor, walks, n_threads) -> float:
+    t0 = time.perf_counter()
+    build_index_host(walks, executor, leaf_capacity=32,
+                     n_threads=n_threads, chunk_elems=256)
+    return time.perf_counter() - t0
+
+
+def fig3_thread_scaling() -> List[str]:
+    out = []
+    walks = random_walk(N_SERIES, 256, seed=0)
+    _host_build_time(RefreshExecutor(n_threads=2), walks, 2)   # jit warmup
+    for nt in (1, 2, 4, 8):
+        t_fresh = _host_build_time(RefreshExecutor(n_threads=nt), walks, nt)
+        t_block = _host_build_time(BlockingExecutor(n_threads=nt), walks, nt)
+        out.append(row(f"fig3/build/fresh/t{nt}", t_fresh,
+                       f"speedup_vs_block={t_block/t_fresh:.2f}"))
+        out.append(row(f"fig3/build/messi_like/t{nt}", t_block))
+    # query answering (device plane, jitted)
+    idx = build_index(jnp.asarray(walks), leaf_capacity=64)
+    qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
+    t_q = timeit(lambda: jax.block_until_ready(search(idx, qs)))
+    out.append(row("fig3/query/fresh_device", t_q,
+                   f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
+    return out
+
+
+def fig5_dataset_scaling() -> List[str]:
+    out = []
+    for gen, tag in ((random_walk, "random"), (seismic_like, "seismic")):
+        for n in (5_000, 20_000, 80_000):
+            walks = gen(n, 256, seed=1)
+            raw = jnp.asarray(walks)
+            t_b = timeit(lambda: jax.block_until_ready(
+                build_index(raw, leaf_capacity=64)), repeat=2)
+            idx = build_index(raw, leaf_capacity=64)
+            qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
+            t_q = timeit(lambda: jax.block_until_ready(search(idx, qs)))
+            out.append(row(f"fig5/{tag}/n{n}/build", t_b))
+            out.append(row(f"fig5/{tag}/n{n}/query", t_q,
+                           f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
+    return out
+
+
+def fig6a_query_difficulty() -> List[str]:
+    out = []
+    walks = random_walk(N_SERIES, 256, seed=2)
+    idx = build_index(jnp.asarray(walks), leaf_capacity=64)
+    for sigma in (0.01, 0.02, 0.05, 0.1):
+        qs = jnp.asarray(query_workload(walks, N_QUERIES, sigma))
+        t_q = timeit(lambda: jax.block_until_ready(search(idx, qs)))
+        out.append(row(f"fig6a/sigma{sigma}", t_q,
+                       f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
+    return out
+
+
+def _tree_populate(variant: str, words: np.ndarray, n_threads: int) -> float:
+    """Fig 6b-c index-creation variants over one shared subtree."""
+    n = len(words)
+    t0 = time.perf_counter()
+    if variant == "treecopy":
+        # thread-private trees, then a single CAS-like merge (install)
+        result = {}
+        lock = threading.Lock()
+
+        def worker(tid, lo, hi):
+            t = FatLeafTree(leaf_capacity=32, n_threads=1)
+            for i in range(lo, hi):
+                t.insert(0, words[i], i)
+            with lock:       # the CAS install point
+                result[tid] = t
+
+        spans = np.linspace(0, n, n_threads + 1).astype(int)
+        ths = [threading.Thread(target=worker, args=(t, spans[t], spans[t+1]))
+               for t in range(n_threads)]
+        for th in ths:
+            th.start()
+        for th in ths:
+            th.join()
+    else:
+        mode = {"fresh": "expeditive", "subtree": "expeditive",
+                "standard": "standard"}[variant]
+        tree = FatLeafTree(leaf_capacity=32, n_threads=n_threads)
+
+        def worker(tid, lo, hi):
+            for i in range(lo, hi):
+                tree.insert(tid, words[i], i, mode=mode)
+
+        spans = np.linspace(0, n, n_threads + 1).astype(int)
+        ths = [threading.Thread(target=worker, args=(t, spans[t], spans[t+1]))
+               for t in range(n_threads)]
+        for th in ths:
+            th.start()
+        for th in ths:
+            th.join()
+    return time.perf_counter() - t0
+
+
+def fig6bc_tree_variants() -> List[str]:
+    from repro.core import isax
+    walks = random_walk(N_SERIES, 256, seed=3)
+    x = jnp.asarray(walks)
+    _, w = isax.summarize(isax.znormalize(x))
+    words = np.asarray(w).astype(np.uint8)
+    out = []
+    for variant in ("fresh", "subtree", "standard", "treecopy"):
+        t = _tree_populate(variant, words, n_threads=4)
+        out.append(row(f"fig6bc/{variant}/t4", t))
+    return out
+
+
+def fig6d_buffer_baselines() -> List[str]:
+    out = []
+    walks = random_walk(N_SERIES, 256, seed=4)
+    execs = [("fresh", RefreshExecutor(n_threads=4)),
+             ("doall_split", DoAllSplit(n_threads=4)),
+             ("fai_based", FaiBased(n_threads=4)),
+             ("cas_based", CasBased(n_threads=4))]
+    for name, ex in execs:
+        t = _host_build_time(ex, walks, 4)
+        out.append(row(f"fig6d/{name}/t4", t))
+    return out
+
+
+def fig7_delays() -> List[str]:
+    """Delay thread 0 by `d` per element: blocking pays n/nt * d extra;
+    FreSh helpers absorb it."""
+    out = []
+    walks = random_walk(4_000, 256, seed=5)
+    _host_build_time(RefreshExecutor(n_threads=4), walks, 4)   # jit warmup
+    for dms in (0.0, 0.1, 0.5):
+        inj = Injectors(delay=lambda tid, lvl, i:
+                        (dms / 1e3) if tid == 0 else 0.0)
+        t_f = _host_build_time(
+            RefreshExecutor(n_threads=4, injectors=inj), walks, 4)
+        t_b = _host_build_time(
+            BlockingExecutor(n_threads=4, injectors=inj), walks, 4)
+        out.append(row(f"fig7/fresh/delay{dms}ms", t_f,
+                       f"blocking={t_b:.3f}s ratio={t_b/t_f:.2f}"))
+        out.append(row(f"fig7/messi_like/delay{dms}ms", t_b))
+    return out
+
+
+def fig8_crashes() -> List[str]:
+    """k of 4 workers crash permanently: FreSh terminates, tracks the
+    (4-k)-thread no-failure time; blocking would hang (assert only)."""
+    out = []
+    walks = random_walk(4_000, 256, seed=6)
+    base = {nt: _host_build_time(RefreshExecutor(n_threads=nt), walks, nt)
+            for nt in (1, 2, 3, 4)}
+    for k in (0, 1, 2, 3):
+        crashed = set()
+
+        def crash(tid, lvl, i, k=k):
+            if tid < k and tid not in crashed:
+                crashed.add(tid)
+                return True
+            return False
+
+        t = _host_build_time(
+            RefreshExecutor(n_threads=4, injectors=Injectors(crash=crash)),
+            walks, 4)
+        ref = base[4 - k]
+        out.append(row(f"fig8/fresh/crash{k}", t,
+                       f"no_failure_t{4-k}={ref:.3f}s ratio={t/ref:.2f}"))
+    # blocking with a crash: must raise (never terminates with a barrier)
+    try:
+        _host_build_time(BlockingExecutor(
+            n_threads=4,
+            injectors=Injectors(crash=lambda t_, l, i: t_ == 0 and i == 0)),
+            walks, 4)
+        out.append(row("fig8/messi_like/crash1", float("nan"),
+                       "ERROR: should not terminate"))
+    except RuntimeError:
+        out.append(row("fig8/messi_like/crash1", float("inf"),
+                       "never-terminates (asserted)"))
+    return out
+
+
+def kernel_microbench() -> List[str]:
+    """Per-kernel interpret-mode timing vs oracle (correctness-weighted;
+    wall times on CPU interpret are NOT TPU perf — see EXPERIMENTS.md)."""
+    from repro.kernels import ops, ref
+    out = []
+    x = jnp.asarray(random_walk(4096, 256, seed=7))
+    t_k = timeit(lambda: jax.block_until_ready(
+        ops.summarize(x, interpret=True)))
+    t_r = timeit(lambda: jax.block_until_ready(ref.summarize_ref(x)))
+    out.append(row("kernel/summarize/4096x256", t_k, f"ref={t_r*1e6:.0f}us"))
+    q = x[:64]
+    t_k = timeit(lambda: jax.block_until_ready(
+        ops.ed_argmin(q, x, interpret=True)))
+    t_r = timeit(lambda: jax.block_until_ready(ref.ed_argmin_ref(q, x)))
+    out.append(row("kernel/ed_argmin/64x4096", t_k, f"ref={t_r*1e6:.0f}us"))
+    return out
+
+
+def dtw_generality() -> List[str]:
+    """Section II generality: exact DTW 1-NN — LB_Keogh-pruned search vs
+    banded-DTW brute force (speedup = the pruning win)."""
+    import jax.numpy as jnp
+    from repro.core.dtw import search_dtw, search_dtw_bruteforce
+    out = []
+    walks = random_walk(2000, 64, seed=9)
+    qs = query_workload(walks, 8, noise_sigma=0.05, seed=10)
+    raw, q = jnp.asarray(walks), jnp.asarray(qs)
+    t_idx = timeit(lambda: jax.block_until_ready(
+        search_dtw(raw, q, r=6, round_k=32)), repeat=2)
+    t_bf = timeit(lambda: jax.block_until_ready(
+        search_dtw_bruteforce(raw, q, r=6)), repeat=2)
+    out.append(row("dtw/search_pruned/2000x64", t_idx,
+                   f"bruteforce={t_bf*1e3:.0f}ms speedup={t_bf/t_idx:.1f}x"))
+    return out
+
+
+ALL = [fig3_thread_scaling, fig5_dataset_scaling, fig6a_query_difficulty,
+       fig6bc_tree_variants, fig6d_buffer_baselines, fig7_delays,
+       fig8_crashes, kernel_microbench, dtw_generality]

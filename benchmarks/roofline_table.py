@@ -1,0 +1,78 @@
+"""Render the §Roofline / §Dry-run tables from results/dryrun_*.json."""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def load(multi: bool = False) -> Dict[str, dict]:
+    f = os.path.join(RESULTS,
+                     "dryrun_multi.json" if multi else "dryrun_single.json")
+    if not os.path.exists(f):
+        return {}
+    with open(f) as fh:
+        return json.load(fh)
+
+
+def _fmt_t(sec: float) -> str:
+    if sec >= 1.0:
+        return f"{sec:.2f}s"
+    return f"{sec*1e3:.1f}ms"
+
+
+def table(multi: bool = False, csv: bool = False) -> List[str]:
+    data = load(multi)
+    hdr = ("cell", "dom", "t_comp", "t_mem", "t_coll", "useful",
+           "arg_GB", "temp_GB", "note")
+    rows = [hdr]
+    for key in sorted(data):
+        v = data[key]
+        cell = key.rsplit("|", 1)[0]
+        if v.get("status") == "skipped":
+            rows.append((cell, "—", "—", "—", "—", "—", "—", "—",
+                         "skipped: full-attention @500k"))
+            continue
+        if v.get("status") != "ok":
+            rows.append((cell, "ERROR", "—", "—", "—", "—", "—", "—",
+                         v.get("error", "")[:40]))
+            continue
+        r = v["roofline"]
+        m = v["mem"]
+        rows.append((
+            cell, r["dominant"][:4],
+            _fmt_t(r["t_compute"]), _fmt_t(r["t_memory"]),
+            _fmt_t(r["t_collective"]),
+            f"{r['useful_ratio']:.2f}" if r.get("useful_ratio") else "—",
+            f"{m['argument_bytes']/1e9:.1f}",
+            f"{m['temp_bytes']/1e9:.1f}",
+            f"{v['attn_mode']}/{v['ep_mode']}",
+        ))
+    if csv:
+        return [",".join(map(str, r)) for r in rows]
+    w = [max(len(str(r[i])) for r in rows) for i in range(len(hdr))]
+    return ["  ".join(str(c).ljust(w[i]) for i, c in enumerate(r))
+            for r in rows]
+
+
+def summary() -> List[str]:
+    out = []
+    for multi in (False, True):
+        data = load(multi)
+        n_ok = sum(1 for v in data.values() if v.get("status") == "ok")
+        n_skip = sum(1 for v in data.values() if v.get("status") == "skipped")
+        n_err = len(data) - n_ok - n_skip
+        mesh = "2x16x16 (512 chips)" if multi else "16x16 (256 chips)"
+        out.append(f"dryrun/{mesh}: ok={n_ok} skipped={n_skip} "
+                   f"errors={n_err}")
+        doms = {}
+        for v in data.values():
+            if v.get("status") == "ok":
+                d = v["roofline"]["dominant"]
+                doms[d] = doms.get(d, 0) + 1
+        out.append(f"  dominant terms: {doms}")
+    return out

@@ -1,0 +1,56 @@
+"""Benchmark harness entry point: one bench per paper table/figure, plus
+the roofline tables derived from the multi-pod dry-run.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig3,fig7]
+
+Prints ``name,us_per_call,derived`` CSV rows, then the roofline summary.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list of bench prefixes (fig3,fig5,...)")
+    args = ap.parse_args()
+
+    from . import fresh_bench
+    from . import roofline_table
+
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for fn in fresh_bench.ALL:
+        tag = fn.__name__.split("_")[0]
+        if only and tag not in only:
+            continue
+        try:
+            for line in fn():
+                print(line, flush=True)
+        except Exception as e:       # pragma: no cover
+            failures += 1
+            print(f"{fn.__name__},nan,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+
+    print(f"# benches done in {time.time()-t0:.1f}s", flush=True)
+    print("#")
+    print("# ---- multi-pod dry-run / roofline summary ----")
+    for line in roofline_table.summary():
+        print(f"# {line}")
+    print("#")
+    print("# ---- roofline table (single pod, 16x16) ----")
+    for line in roofline_table.table(multi=False):
+        print(f"# {line}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""The paper's technique as a first-class retrieval subsystem: embed
+documents with ANY assigned architecture (--arch), index the embeddings
+with FreSh, and serve exact nearest-neighbor queries.
+
+    PYTHONPATH=src python examples/embed_and_search.py --arch mamba2-130m
+
+This is how an attention-free SSM, a 60-expert MoE, and a VLM backbone
+all plug into the same similarity-search engine (DESIGN.md
+§Arch-applicability): the index is orthogonal to the layer stack.
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, smoke_config
+from repro.core import build_index, search, search_bruteforce
+from repro.models import LM, param_values
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="mamba2-130m", choices=ARCH_IDS)
+ap.add_argument("--docs", type=int, default=512)
+args = ap.parse_args()
+
+cfg = smoke_config(args.arch)
+model = LM(cfg)
+params = param_values(model.init(jax.random.PRNGKey(0)))
+print(f"embedding {args.docs} synthetic documents with {cfg.name} ...")
+
+key = jax.random.PRNGKey(1)
+docs = jax.random.randint(key, (args.docs, 64), 0, cfg.vocab)
+
+
+@jax.jit
+def embed(tokens):
+    """Mean-pooled final hidden state = the document embedding."""
+    x = model.embed(params, tokens)
+    B, T = tokens.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    h, _ = model.backbone(params, x, pos)
+    return jnp.mean(h, axis=1)                       # (B, D)
+
+
+emb = np.asarray(embed(docs), np.float32)
+# FreSh indexes fixed-length series; embeddings are exactly that.  Pad the
+# feature dim up to a segment multiple.
+D = emb.shape[1]
+segs = 16
+pad = (-D) % segs
+if pad:
+    emb = np.pad(emb, ((0, 0), (0, pad)))
+
+idx = build_index(jnp.asarray(emb), leaf_capacity=16)
+queries = emb[:8] + 0.01 * np.random.default_rng(2).standard_normal(
+    (8, emb.shape[1])).astype(np.float32)
+d, i = search(idx, jnp.asarray(queries))
+db, ib = search_bruteforce(jnp.asarray(emb), jnp.asarray(queries))
+print("query ->  nearest doc (FreSh) | (brute force)")
+for k in range(8):
+    print(f"  q{k}: doc {int(i[k]):4d} d={float(d[k]):.4f} | "
+          f"doc {int(ib[k]):4d} d={float(db[k]):.4f}")
+assert np.allclose(np.asarray(d), np.asarray(db), atol=1e-3)
+print(f"OK — exact retrieval over {cfg.name} embeddings.")

@@ -1,0 +1,42 @@
+"""Fault tolerance end-to-end: a training run is hard-killed mid-flight
+(os._exit — no cleanup, no final checkpoint), then restarted.  The restart
+resumes from the last checkpoint and the Refresh journal re-serves only
+the data chunks whose done-flag never got set — the cluster-level
+lock-freedom property of DESIGN.md §2.
+
+    PYTHONPATH=src python examples/failure_recovery.py
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+
+work = tempfile.mkdtemp(prefix="repro_ft_")
+ck = os.path.join(work, "ckpt")
+jr = os.path.join(work, "journal.json")
+
+common = [sys.executable, "-m", "repro.launch.train",
+          "--arch", "mamba2-130m", "--smoke", "--steps", "24",
+          "--batch", "2", "--seq", "32", "--ckpt-dir", ck,
+          "--ckpt-every", "6", "--journal", jr, "--log-every", "6"]
+
+print("=== run 1: will be hard-killed at step 14 ===")
+r1 = subprocess.run(common + ["--simulate-crash-at", "14"],
+                    env=ENV, capture_output=True, text=True)
+print(r1.stdout)
+assert r1.returncode == 42, f"expected crash exit 42, got {r1.returncode}"
+assert "SIMULATED CRASH" in r1.stdout
+
+print("=== run 2: restart with --resume ===")
+r2 = subprocess.run(common + ["--resume"], env=ENV,
+                    capture_output=True, text=True)
+print(r2.stdout)
+assert r2.returncode == 0, r2.stderr
+assert "resumed from step 12" in r2.stdout, "should resume from ckpt 12"
+assert "done" in r2.stdout
+print("OK — crash at step 14, resumed from checkpoint 12, journal "
+      "re-served only unfinished chunks.")

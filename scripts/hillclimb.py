@@ -1,0 +1,54 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Hillclimb runner: lower one cell with variant knobs, record terms."""
+import argparse, json, sys
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--bf16-reduce", action="store_true")
+    ap.add_argument("--fsdp", default=None)
+    ap.add_argument("--moe-a2a", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--scan-group", type=int, default=None)
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--out", default="results/hillclimb.json")
+    ap.add_argument("--save-hlo", default=None)
+    args = ap.parse_args()
+
+    from repro.launch.dryrun import lower_cell
+    overrides = {}
+    if args.bf16_reduce:
+        overrides["bf16_reduce"] = True
+    if args.fsdp is not None:
+        overrides["fsdp"] = args.fsdp == "1"
+    if args.moe_a2a:
+        overrides["moe_a2a"] = True
+    cfg_over = {}
+    if args.remat:
+        cfg_over["remat"] = args.remat
+    if args.scan_group:
+        cfg_over["scan_group"] = args.scan_group
+    c, meta = lower_cell(args.arch, args.shape, q_chunk=args.q_chunk,
+                         accum=args.accum, plan_overrides=overrides or None,
+                         cfg_overrides=cfg_over or None, flash=args.flash)
+    if args.save_hlo:
+        open(args.save_hlo, "w").write(c.as_text())
+    res = {}
+    if os.path.exists(args.out):
+        res = json.load(open(args.out))
+    key = f"{args.arch}|{args.shape}|{args.tag}"
+    res[key] = meta
+    json.dump(res, open(args.out, "w"), indent=1)
+    r = meta.get("roofline", {})
+    m = meta.get("mem", {})
+    print(f"{key}: t_c={r.get('t_compute',0):.3f} t_m={r.get('t_memory',0):.3f} "
+          f"t_x={r.get('t_collective',0):.3f} dom={r.get('dominant')} "
+          f"useful={r.get('useful_ratio')} temp={m.get('temp_bytes',0)/1e9:.1f}GB")
+
+if __name__ == "__main__":
+    main()

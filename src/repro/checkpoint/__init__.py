@@ -1,0 +1,4 @@
+"""Sharded checkpointing: save/restore, async writes, elastic re-shard."""
+
+from .store import (CheckpointManager, load_checkpoint,  # noqa: F401
+                    save_checkpoint)

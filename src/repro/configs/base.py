@@ -1,0 +1,164 @@
+"""Model / shape configuration schema.
+
+One ModelConfig instance per assigned architecture lives in configs/<id>.py;
+the shape suite (train_4k / prefill_32k / decode_32k / long_500k) is shared.
+
+Heterogeneous layer stacks (Jamba's 1:7 attn:mamba interleave, Llama-4's
+alternating dense/MoE) are expressed with `block_pattern` / `moe_pattern`:
+layer i has mixer type block_pattern[i % P] and, when it has an MLP at all
+(mlp_per_block), that MLP is MoE iff moe_pattern[i % P].  The model stacks
+parameters per pattern position and lax.scans over periods, so the HLO stays
+O(P) regardless of n_layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int                 # routed experts
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0              # shared experts (fused: one MLP of n_shared*d_ff_expert)
+    capacity_factor: float = 1.25
+    lb_coef: float = 1e-2          # Switch-style load-balance aux loss
+    router_z_coef: float = 1e-3
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256               # SSD chunk length (matmul-friendly)
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|ssm|hybrid|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int                   # 0 for attention-free archs
+    n_kv_heads: int
+    d_head: int
+    d_ff: int                      # dense MLP width (0 = no dense MLP)
+    vocab: int
+    act: str = "swiglu"            # swiglu|geglu|gelu|relu2|silu
+    rope_theta: float = 1e4
+    sliding_window: Optional[int] = None
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    block_pattern: Tuple[str, ...] = ("attn",)
+    moe_pattern: Tuple[bool, ...] = (False,)
+    mlp_per_block: bool = True     # False: mixer-only blocks (mamba2)
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+    qk_norm: bool = False
+    prefix_embed: bool = False     # [vlm]/[audio]: accept precomputed prefix embeddings
+    n_prefix: int = 0              # prefix length supplied by the modality stub
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    moments_dtype: str = "float32" # AdamW moment storage (bf16 for the 400B)
+    remat: str = "none"            # none|dots|full — activation checkpoint policy
+    scan_group: int = 1            # periods per scan step: the remat residual
+                                   # stack is [n_periods/scan_group, B, T, D]
+    accum_steps: int = 4           # train microbatch accumulation (memory vs
+                                   # FSDP-regather trade; 1 for ZeRO-3 giants)
+    notes: str = ""
+
+    def __post_init__(self):
+        assert self.n_layers % len(self.block_pattern) == 0, \
+            f"{self.name}: n_layers {self.n_layers} % pattern {len(self.block_pattern)}"
+        assert len(self.moe_pattern) == len(self.block_pattern)
+        if self.n_heads:
+            assert self.n_heads % self.n_kv_heads == 0
+
+    @property
+    def n_periods(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    def layer_type(self, i: int) -> str:
+        return self.block_pattern[i % len(self.block_pattern)]
+
+    def scaled(self, **kw) -> "ModelConfig":
+        """A reduced copy (smoke tests)."""
+        return dataclasses.replace(self, **kw)
+
+    # ---------------- parameter counting (roofline MODEL_FLOPS) ----------
+    def param_counts(self) -> dict:
+        """Analytic parameter counts: total and active-per-token."""
+        D, V = self.d_model, self.vocab
+        P = len(self.block_pattern)
+        per_pos_total = []
+        per_pos_active = []
+        for j, ptype in enumerate(self.block_pattern):
+            tot = act = 0
+            if ptype == "attn":
+                qkv = D * self.n_heads * self.d_head \
+                    + 2 * D * self.n_kv_heads * self.d_head \
+                    + self.n_heads * self.d_head * D
+                tot += qkv
+                act += qkv
+            elif ptype == "mamba":
+                s = self.ssm
+                d_inner = s.expand * D
+                nheads = d_inner // s.head_dim
+                d_xbc = d_inner + 2 * s.n_groups * s.d_state
+                in_p = D * (2 * d_inner + 2 * s.n_groups * s.d_state + nheads)
+                conv = d_xbc * s.d_conv
+                out_p = d_inner * D
+                extra = 3 * nheads + d_inner  # A_log, D, dt_bias, norm
+                tot += in_p + conv + out_p + extra
+                act += in_p + conv + out_p + extra
+            if self.mlp_per_block:
+                gate_mult = 3 if self.act in ("swiglu", "geglu") else 2
+                if self.moe is not None and self.moe_pattern[j]:
+                    m = self.moe
+                    routed = m.n_experts * gate_mult * D * m.d_ff_expert
+                    shared = m.n_shared * gate_mult * D * m.d_ff_expert
+                    router = D * m.n_experts
+                    tot += routed + shared + router
+                    act += (m.top_k + m.n_shared) * gate_mult * D * m.d_ff_expert \
+                        + router
+                elif self.d_ff:
+                    mlp = gate_mult * D * self.d_ff
+                    tot += mlp
+                    act += mlp
+            tot += 2 * D  # norms
+            act += 2 * D
+            per_pos_total.append(tot)
+            per_pos_active.append(act)
+        n_per = self.n_periods
+        body_total = n_per * sum(per_pos_total)
+        body_active = n_per * sum(per_pos_active)
+        embed = V * D * (1 if self.tie_embeddings else 2)
+        return {
+            "total": body_total + embed,
+            "active": body_active + embed // (1 if self.tie_embeddings else 2) * 2,
+            "body_total": body_total,
+            "embed": embed,
+        }
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # train|prefill|decode
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}

@@ -1,0 +1,23 @@
+"""granite-8b [dense] — llama-arch code model.
+
+36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152
+[arXiv:2405.04324; hf:ibm-granite/granite-8b-code-base]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab=49152,
+    act="swiglu",
+    rope_theta=1e4,
+    remat="full",
+    scan_group=6,
+)

@@ -1,0 +1,25 @@
+"""h2o-danube-3-4b [dense] — llama+mistral mix with sliding-window attention.
+
+24L d_model=3840 32H (GQA kv=8) d_ff=10240 vocab=32000, SWA window 4096
+[arXiv:2401.16818]
+
+SWA makes long_500k decoding tenable: the KV cache is a 4096-slot ring.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=120,
+    d_ff=10240,
+    vocab=32000,
+    act="swiglu",
+    sliding_window=4096,
+    remat="full",
+    scan_group=4,
+)

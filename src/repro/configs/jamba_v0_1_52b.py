@@ -1,0 +1,39 @@
+"""jamba-v0.1-52b [hybrid] — Mamba+attention 1:7 interleave with 16e top-2
+MoE every second layer.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=65536, MoE 16e top-2
+[arXiv:2403.19887; hf:ai21labs/Jamba-v0.1]
+
+Period of 8 layers: attention at offset 4 (attn_layer_period=8, offset=4),
+Mamba elsewhere; MoE at odd offsets (expert_layer_period=2, offset=1).
+Jamba's Mamba layers are Mamba-1 selective scan; implemented here with the
+SSD kernel at d_state=16 (same diagonal-A recurrence family; DESIGN.md).
+long_500k decodes: Mamba layers are O(1) state, the 4 attention layers
+hold the full 512k KV cache (sharded along sequence when heads can't TP —
+here 32 heads TP fine, cache replicated-in-seq, 2 kv-heads... kv=8 -> per
+chip after batch sharding; see EXPERIMENTS.md memory analysis).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+
+_PATTERN = tuple("attn" if i == 4 else "mamba" for i in range(8))
+_MOE = tuple(i % 2 == 1 for i in range(8))
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=14336,
+    vocab=65536,
+    act="swiglu",
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff_expert=14336),
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk=256),
+    block_pattern=_PATTERN,
+    moe_pattern=_MOE,
+    remat="full",
+)

@@ -1,0 +1,38 @@
+"""llama4-maverick-400b-a17b [moe] — 128-expert top-1 MoE, alternating
+dense/MoE layers, 17B active / ~400B total.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128e top-1
+[hf:meta-llama/Llama-4-Maverick-17B-128E; dims per assignment brief]
+
+Pattern: [dense, moe] interleave (interleave_moe_layer_step=2), one shared
+expert per MoE layer.  40 heads do not divide the 16-way model axis ->
+sequence-sharded attention.  bf16 params + bf16 Adam moments keep the
+per-chip HBM budget inside 16 GB at 256 chips (see EXPERIMENTS.md).
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,                  # dense layers
+    vocab=202048,
+    act="swiglu",
+    moe=MoEConfig(n_experts=128, top_k=1, d_ff_expert=8192, n_shared=1),
+    block_pattern=("attn", "attn"),
+    moe_pattern=(False, True),
+    param_dtype="bfloat16",
+    moments_dtype="bfloat16",
+    remat="full",
+    scan_group=4,
+    accum_steps=8,   # tokens/µstep/device = 8k: activations fit beside the
+                     # 12.5GB/chip of bf16 params+moments+grads; the ZeRO-3
+                     # regather per µstep is the price (see EXPERIMENTS.md §Perf;
+                     # hillclimb target: most collective-bound cell)
+    notes="400B-class: FSDP + EP(8 experts/chip) + bf16 moments",
+)

@@ -1,0 +1,34 @@
+"""mamba2-130m [ssm] — pure SSD (state-space duality), attention-free.
+
+24L d_model=768 d_ff=0 vocab=50280, ssm_state=128
+[arXiv:2405.21060; hf:state-spaces/mamba2-130m]
+
+Mixer-only blocks (no MLP): d_inner = 2*768 = 1536, 24 SSD heads of P=64,
+N=128.  TP runs over the P axis (64 = 16 x 4): every SSD einsum keeps P as
+a pass-through output axis, so the mixer is collective-free and the only
+psum per block is the out-projection.  long_500k decode is O(1) state.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    n_heads=0,
+    n_kv_heads=0,
+    d_head=0,
+    d_ff=0,
+    vocab=50280,
+    ssm=SSMConfig(d_state=128, d_conv=4, expand=2, head_dim=64, n_groups=1,
+                  chunk=256),
+    block_pattern=("mamba",),
+    moe_pattern=(False,),
+    mlp_per_block=False,
+    tie_embeddings=True,
+    remat="full",
+    accum_steps=1,   # pure-DP: batch shards over ALL 256 chips; microbatch
+                     # reshape would make B_u=64 indivisible by the mesh and
+                     # silently replicate compute 16x (measured)
+)

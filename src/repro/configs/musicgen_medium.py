@@ -1,0 +1,31 @@
+"""musicgen-medium [audio] — decoder-only transformer over EnCodec tokens.
+
+48L d_model=1536 24H (MHA: kv=24) d_ff=6144 vocab=2048
+[arXiv:2306.05284; hf:facebook/musicgen-medium]
+
+Backbone only: the EnCodec/conditioning frontend is a stub — input_specs()
+supplies precomputed frame embeddings as a prefix (prefix_embed).
+MusicGen's MLP is non-gated GELU; its learned positional embedding is
+approximated by RoPE (noted in DESIGN.md §Arch-applicability).
+24 heads do not divide the 16-way model axis -> sequence-sharded attention.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="musicgen-medium",
+    family="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    d_head=64,
+    d_ff=6144,
+    vocab=2048,
+    act="gelu",
+    prefix_embed=True,
+    n_prefix=64,
+    remat="full",
+    scan_group=6,
+    notes="audio-token LM; MHA; seq-sharded attention on 16-way TP",
+)

@@ -1,0 +1,24 @@
+"""nemotron-4-15b [dense] — GQA + squared-ReLU MLP, 256k vocab.
+
+32L d_model=6144 48H (GQA kv=8) d_ff=24576 vocab=256000
+[arXiv:2402.16819]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-15b",
+    family="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=24576,
+    vocab=256000,
+    act="relu2",               # squared-ReLU (Primer), non-gated
+    rope_theta=1e4,
+    remat="full",
+    scan_group=4,
+    notes="256k vocab stresses vocab-sharded embed/loss paths",
+)

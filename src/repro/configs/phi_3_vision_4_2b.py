@@ -1,0 +1,27 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (stubbed).
+
+32L d_model=3072 32H (kv=32, MHA) d_ff=8192 vocab=32064
+[hf:microsoft/Phi-3-vision-128k-instruct]
+
+The CLIP-ViT image tower is a STUB: input_specs() supplies 576 precomputed
+patch embeddings as a prefix merged into the token stream.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=96,
+    d_ff=8192,
+    vocab=32064,
+    act="swiglu",
+    prefix_embed=True,
+    n_prefix=576,
+    remat="full",
+    scan_group=4,
+)

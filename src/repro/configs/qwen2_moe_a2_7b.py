@@ -1,0 +1,29 @@
+"""qwen2-moe-a2.7b [moe] — 4 shared + 60 routed experts, top-4, every layer.
+
+24L d_model=2048 16H (kv=16, MHA) d_ff_expert=1408 vocab=151936
+[hf:Qwen/Qwen1.5-MoE-A2.7B]
+
+60 experts do not divide the 16-way model axis -> per-expert FF dim is
+partitioned instead (1408 = 16 x 88); the shared 4-expert block is a fused
+dense MLP of width 5632 with a sigmoid gate.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_head=128,
+    d_ff=0,                     # every MLP is MoE
+    vocab=151936,
+    act="swiglu",
+    moe=MoEConfig(n_experts=60, top_k=4, d_ff_expert=1408, n_shared=4),
+    moe_pattern=(True,),
+    block_pattern=("attn",),
+    remat="full",
+    scan_group=4,
+)

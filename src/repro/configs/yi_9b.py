@@ -1,0 +1,22 @@
+"""yi-9b [dense] — llama-arch deep-and-narrow GQA.
+
+48L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000
+[arXiv:2403.04652; hf:01-ai/Yi-9B]
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b",
+    family="dense",
+    n_layers=48,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=4,
+    d_head=128,
+    d_ff=11008,
+    vocab=64000,
+    act="swiglu",
+    remat="full",
+    scan_group=6,
+)

@@ -1,0 +1,26 @@
+"""FreSh core: the paper's contribution (lock-free data series index).
+
+Host control plane (faithful to the paper's shared-memory algorithms):
+    traverse   — traverse-object ADT (Section III)
+    refresh    — Refresh lock-free transformation (Section IV, Alg. 2-3)
+    tree       — fat-leaf lock-free iSAX tree (Section V-B1)
+    baselines  — conventional lock-free baselines (Section VI)
+
+Device data plane (TPU-native adaptation — see DESIGN.md §2):
+    isax       — PAA / iSAX / distance math
+    index      — flat bucketed index build (BC + TP stages)
+    search     — exact 1-NN pruning + refinement (PS + RS stages)
+    dtw        — DTW similarity (Section II generality claim): banded DTW
+                 + LB_Keogh envelope bound + exact DTW 1-NN search
+"""
+
+from . import isax  # noqa: F401
+from .dtw import lb_keogh, dtw_band, search_dtw  # noqa: F401
+from .index import FlatIndex, build_index, build_index_host, index_stats  # noqa: F401
+from .refresh import (CounterObject, Injectors, RefreshExecutor,  # noqa: F401
+                      RefreshRun, WorkerCrash)
+from .search import (make_sharded_search, search, search_bruteforce,  # noqa: F401
+                     shard_index)
+from .traverse import (ArrayTraverse, Executor, SequentialExecutor,  # noqa: F401
+                       StageStats, TraverseObject,
+                       check_traversing_property)

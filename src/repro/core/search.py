@@ -1,0 +1,301 @@
+"""Exact 1-NN query answering over the flat FreSh index (paper Section III/V).
+
+The four traverse-object stages map to:
+
+  pruning    — ONE vectorized lower-bound computation over all leaf
+               summaries (Pallas kernel on TPU), instead of a tree walk;
+  RS / the priority queues
+             — per-query argsort of leaf lower bounds (ascending): the
+               sorted order IS the DeleteMin order of the paper's queues;
+  refinement — a while_loop over ROUNDS: each round takes the next K best
+               leaves per query, computes real distances in matmul form
+               (dist^2 = ||q||^2 + ||x||^2 - 2 q.x  -> MXU), and folds the
+               min into BSF.  The loop exits as soon as the next unrefined
+               lower bound >= BSF — exactly the PQ termination condition, so
+               the answer is EXACT.
+
+Expeditive vs standard (Section IV) on the mesh: in the sharded search each
+device refines against its LOCAL BSF (no communication = expeditive mode)
+and only every `sync_every` rounds performs the all-reduce-min that
+publishes the global BSF (= standard mode).  sync_every trades
+synchronization cost against wasted refinement work — the exact trade-off
+Refresh manages between its two modes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import isax
+from .index import FlatIndex
+
+BIG = jnp.float32(1e30)
+
+
+def prepare_queries(queries: jnp.ndarray, znorm: bool = True):
+    q = isax.znormalize(queries) if znorm else queries
+    q = q.astype(jnp.float32)
+    q_paa = isax.paa(q, segments=isax.SEGMENTS if q.shape[-1] % isax.SEGMENTS == 0
+                     else q.shape[-1])
+    return q, q_paa
+
+
+def leaf_lower_bounds(idx: FlatIndex, q_paa: jnp.ndarray,
+                      series_len: int) -> jnp.ndarray:
+    """(Q, n_leaves) squared lower bounds — the pruning stage."""
+    return isax.mindist_region_sq(q_paa[:, None, :],
+                                  idx.leaf_lo[None],
+                                  idx.leaf_hi[None],
+                                  series_len)
+
+
+def _refine_block(q: jnp.ndarray, q_sq: jnp.ndarray, idx: FlatIndex,
+                  leaf_ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Real distances of all entries in the given leaves.
+
+    q: (Q, L); leaf_ids: (Q, K) -> dists (Q, K*M) and flat entry ids (Q, K*M).
+    Matmul form feeds the MXU; gathers are per-leaf blocks (contiguous —
+    the locality the sort bought us).
+    """
+    Q, L = q.shape
+    M = idx.leaf_capacity
+    entry = leaf_ids[..., None] * M + jnp.arange(M)[None, None, :]  # (Q,K,M)
+    entry = entry.reshape(Q, -1)                                    # (Q, K*M)
+    xs = jnp.take(idx.series, entry, axis=0)                        # (Q,K*M,L)
+    xn = jnp.take(idx.sq_norms, entry, axis=0)                      # (Q,K*M)
+    dots = jnp.einsum("qnl,ql->qn", xs, q,
+                      preferred_element_type=jnp.float32)
+    d2 = q_sq[:, None] + xn - 2.0 * dots
+    return jnp.maximum(d2, 0.0), entry
+
+
+@functools.partial(jax.jit, static_argnames=("round_leaves", "znorm",
+                                             "max_rounds"))
+def search(idx: FlatIndex, queries: jnp.ndarray, *,
+           round_leaves: int = 8, znorm: bool = True,
+           max_rounds: Optional[int] = None
+           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Exact 1-NN for a batch of queries.  Returns (dist, original_id)."""
+    L = idx.series.shape[1]
+    Q = queries.shape[0]
+    K = round_leaves
+    n_leaves = idx.n_leaves
+
+    q = isax.znormalize(queries).astype(jnp.float32) if znorm \
+        else queries.astype(jnp.float32)
+    q_paa = isax.paa(q, idx.paa.shape[1])
+    q_sq = jnp.sum(q * q, axis=-1)
+
+    lb = leaf_lower_bounds(idx, q_paa, L)              # (Q, n_leaves)
+    order = jnp.argsort(lb, axis=1)                    # PQ order
+    sorted_lb = jnp.take_along_axis(lb, order, axis=1)
+
+    n_rounds_cap = -(-n_leaves // K)
+    if max_rounds is not None:
+        n_rounds_cap = min(n_rounds_cap, max_rounds)
+
+    # pad order/sorted_lb so every dynamic_slice of width K is in range
+    padw = n_rounds_cap * K - n_leaves
+    if padw > 0:
+        order = jnp.pad(order, ((0, 0), (0, padw)))
+        sorted_lb = jnp.pad(sorted_lb, ((0, 0), (0, padw)),
+                            constant_values=BIG)
+
+    def cond(state):
+        cursor, bsf, _ = state
+        # PQ termination: stop when the best unrefined lb >= BSF everywhere
+        nxt = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
+        live = jnp.any(nxt[:, 0] < bsf)
+        return jnp.logical_and(cursor < n_rounds_cap * K, live)
+
+    def body(state):
+        cursor, bsf, best = state
+        ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
+        lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
+        d2, entry = _refine_block(q, q_sq, idx, ids)
+        # prune: leaves whose lb >= current BSF contribute nothing
+        alive = (lbs < bsf[:, None])                     # (Q, K)
+        M = idx.leaf_capacity
+        d2 = jnp.where(jnp.repeat(alive, M, axis=1), d2, BIG)
+        k = jnp.argmin(d2, axis=1)
+        dmin = jnp.take_along_axis(d2, k[:, None], axis=1)[:, 0]
+        emin = jnp.take_along_axis(entry, k[:, None], axis=1)[:, 0]
+        upd = dmin < bsf
+        bsf = jnp.where(upd, dmin, bsf)                  # CAS-min analogue
+        best = jnp.where(upd, idx.perm[emin], best)
+        return cursor + K, bsf, best
+
+    state = (jnp.int32(0), jnp.full((Q,), BIG), jnp.full((Q,), -1, jnp.int32))
+    _, bsf, best = jax.lax.while_loop(cond, body, state)
+    # the argmin is exact; the matmul-form distance loses ~1e-3 absolute to
+    # f32 cancellation (||q||^2+||x||^2-2qx with ||.||^2 ~ L).  Recompute
+    # the winner's distance in direct form — one gather per query.
+    # Inverse permutation built by scatter: padding rows (perm == -1) are
+    # routed out-of-bounds and dropped (argsort would misalign them).
+    n_pad = idx.perm.shape[0]
+    scatter_idx = jnp.where(idx.perm >= 0, idx.perm, n_pad)
+    inv = jnp.zeros((n_pad,), jnp.int32).at[scatter_idx].set(
+        jnp.arange(n_pad, dtype=jnp.int32), mode="drop")
+    row = inv[jnp.maximum(best, 0)]
+    d_exact = jnp.sum(jnp.square(q - idx.series[row]), axis=-1)
+    return jnp.sqrt(jnp.where(best >= 0, d_exact, bsf)), best
+
+
+@functools.partial(jax.jit, static_argnames=("znorm",))
+def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
+                      znorm: bool = True
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle: exact scan over all series (matmul form)."""
+    x = isax.znormalize(raw).astype(jnp.float32) if znorm \
+        else raw.astype(jnp.float32)
+    q = isax.znormalize(queries).astype(jnp.float32) if znorm \
+        else queries.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(x * x, -1)[None, :]
+          - 2.0 * q @ x.T)
+    d2 = jnp.maximum(d2, 0.0)
+    i = jnp.argmin(d2, axis=1)
+    d_exact = jnp.sum(jnp.square(q - x[i]), axis=-1)   # see search(): exact
+    return jnp.sqrt(d_exact), i.astype(jnp.int32)
+
+
+# ===========================================================================
+# Sharded search: leaves block-sharded over the 'data' mesh axis.
+# ===========================================================================
+def shard_index(idx: FlatIndex, mesh: Mesh, axis: str = "data") -> FlatIndex:
+    """Place the index with leaves (and their entries) sharded over `axis`."""
+    leaf_spec = NamedSharding(mesh, P(axis))
+    entry_spec = NamedSharding(mesh, P(axis))
+    mat_spec = NamedSharding(mesh, P(axis, None))
+    return FlatIndex(
+        series=jax.device_put(idx.series, mat_spec),
+        paa=jax.device_put(idx.paa, mat_spec),
+        words=jax.device_put(idx.words, mat_spec),
+        sq_norms=jax.device_put(idx.sq_norms, entry_spec),
+        perm=jax.device_put(idx.perm, entry_spec),
+        valid=jax.device_put(idx.valid, entry_spec),
+        leaf_lo=jax.device_put(idx.leaf_lo, mat_spec),
+        leaf_hi=jax.device_put(idx.leaf_hi, mat_spec),
+        leaf_valid=jax.device_put(idx.leaf_valid, leaf_spec),
+    )
+
+
+def make_sharded_search(mesh: Mesh, *, axis: str = "data",
+                        round_leaves: int = 8, sync_every: int = 1,
+                        max_rounds: Optional[int] = None):
+    """Builds a jitted sharded search(idx, queries) for the given mesh.
+
+    Each device: local lower bounds + local PQ order + local refinement
+    rounds against a LOCAL BSF (expeditive); every `sync_every` rounds the
+    global BSF is published with an all-reduce-min (standard mode).  The
+    final (dist, id) winner is resolved with a tiny all-gather.
+    """
+    K = round_leaves
+
+    def _local_search(series, sq_norms, perm, leaf_lo, leaf_hi, q, q_paa, q_sq):
+        L = series.shape[1]
+        Q = q.shape[0]
+        n_leaves_local = leaf_lo.shape[0]
+        M = series.shape[0] // n_leaves_local
+
+        lb = isax.mindist_region_sq(q_paa[:, None, :], leaf_lo[None],
+                                    leaf_hi[None], L)
+        order = jnp.argsort(lb, axis=1)
+        sorted_lb = jnp.take_along_axis(lb, order, axis=1)
+
+        cap = -(-n_leaves_local // K)
+        if max_rounds is not None:
+            cap = min(cap, max_rounds)
+        padw = cap * K - n_leaves_local
+        if padw > 0:
+            order = jnp.pad(order, ((0, 0), (0, padw)))
+            sorted_lb = jnp.pad(sorted_lb, ((0, 0), (0, padw)),
+                                constant_values=BIG)
+
+        # Two accumulators per query:
+        #   lbsf — distance of the best LOCALLY-held candidate (never
+        #          overwritten by syncs: it is the winner-resolution key);
+        #   pb   — the pruning bound: last PUBLISHED global min (standard-
+        #          mode sync).  Pruning/termination use min(pb, lbsf).
+        def refine(cursor, lbsf, best, pb):
+            ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
+            lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
+            entry = ids[..., None] * M + jnp.arange(M)[None, None, :]
+            entry = entry.reshape(Q, -1)
+            xs = jnp.take(series, entry, axis=0)
+            xn = jnp.take(sq_norms, entry, axis=0)
+            dots = jnp.einsum("qnl,ql->qn", xs, q,
+                              preferred_element_type=jnp.float32)
+            d2 = jnp.maximum(q_sq[:, None] + xn - 2.0 * dots, 0.0)
+            bound = jnp.minimum(pb, lbsf)
+            alive = lbs < bound[:, None]
+            d2 = jnp.where(jnp.repeat(alive, M, axis=1), d2, BIG)
+            kk = jnp.argmin(d2, axis=1)
+            dmin = jnp.take_along_axis(d2, kk[:, None], 1)[:, 0]
+            emin = jnp.take_along_axis(entry, kk[:, None], 1)[:, 0]
+            upd = dmin < lbsf
+            return (jnp.where(upd, dmin, lbsf),
+                    jnp.where(upd, perm[emin], best),
+                    jnp.where(upd, emin, jnp.zeros_like(emin)))
+
+        def cond(state):
+            cursor, lbsf, _, _, pb, rounds = state
+            nxt = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
+            bound = jnp.minimum(pb, lbsf)
+            live_local = jnp.any(nxt[:, 0] < bound)
+            live = jax.lax.pmax(live_local.astype(jnp.int32), axis)
+            return jnp.logical_and(cursor < cap * K, live > 0)
+
+        def body(state):
+            cursor, lbsf, best, brow, pb, rounds = state
+            nl, nb, nr = refine(cursor, lbsf, best, pb)
+            brow = jnp.where(nl < lbsf, nr, brow)
+            lbsf, best = nl, nb
+            # standard mode: publish global BSF every sync_every rounds
+            do_sync = (rounds % sync_every) == (sync_every - 1)
+            gbsf = jax.lax.pmin(lbsf, axis)
+            pb = jnp.where(do_sync, jnp.minimum(pb, gbsf), pb)
+            return cursor + K, lbsf, best, brow, pb, rounds + 1
+
+        Qn = q.shape[0]
+        state = (jnp.int32(0), jnp.full((Qn,), BIG),
+                 jnp.full((Qn,), -1, jnp.int32),
+                 jnp.zeros((Qn,), jnp.int32), jnp.full((Qn,), BIG),
+                 jnp.int32(0))
+        _, lbsf, best, brow, _, _ = jax.lax.while_loop(cond, body, state)
+
+        # recompute the local winner's distance in DIRECT form (matmul form
+        # loses ~1e-3 absolute to f32 cancellation — see search())
+        d_exact = jnp.sum(jnp.square(q - series[brow]), axis=-1)
+        lbsf = jnp.where(best >= 0, d_exact, lbsf)
+
+        # final resolution: gather per-device (lbsf, best), global argmin
+        all_bsf = jax.lax.all_gather(lbsf, axis)         # (n_dev, Q)
+        all_best = jax.lax.all_gather(best, axis)        # (n_dev, Q)
+        widx = jnp.argmin(all_bsf, axis=0)               # (Q,)
+        dist = jnp.take_along_axis(all_bsf, widx[None], 0)[0]
+        bid = jnp.take_along_axis(all_best, widx[None], 0)[0]
+        return jnp.sqrt(dist), bid
+
+    pleaf = P(axis, None)
+
+    @functools.partial(jax.jit)
+    def sharded_search(idx: FlatIndex, queries: jnp.ndarray):
+        q = isax.znormalize(queries).astype(jnp.float32)
+        q_paa = isax.paa(q, idx.paa.shape[1])
+        q_sq = jnp.sum(q * q, axis=-1)
+        fn = shard_map(
+            _local_search, mesh=mesh,
+            in_specs=(pleaf, P(axis), P(axis), pleaf, pleaf,
+                      P(None, None), P(None, None), P(None)),
+            out_specs=(P(None), P(None)),
+            check_rep=False)
+        return fn(idx.series, idx.sq_norms, idx.perm, idx.leaf_lo,
+                  idx.leaf_hi, q, q_paa, q_sq)
+
+    return sharded_search

@@ -1,0 +1,4 @@
+"""Data substrate: series generators (FreSh) + token pipeline (LM)."""
+
+from .synthetic import random_walk, query_workload  # noqa: F401
+from .tokens import TokenPipeline  # noqa: F401

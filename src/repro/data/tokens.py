@@ -1,0 +1,67 @@
+"""Fault-tolerant token pipeline for LM training.
+
+The epoch is split into chunks tracked by a WorkJournal (the cluster-level
+Refresh — runtime/journal.py): a restarted or helping worker re-serves
+only unfinished chunks, so a node failure never stalls the batch stream
+(lock-freedom at the pipeline level) and never silently drops data
+(traversing property: every chunk served at least once).
+
+Data here is synthetic-deterministic (seeded per chunk), standing in for a
+tokenized corpus: chunk i always yields the same tokens, which is what
+makes helping idempotent — exactly the property the paper requires of f.
+"""
+
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+from repro.runtime.journal import WorkJournal
+
+
+class TokenPipeline:
+    def __init__(self, *, vocab: int, batch: int, seq_len: int,
+                 n_chunks: int = 128, batches_per_chunk: int = 4,
+                 seed: int = 0, journal_path: Optional[str] = None,
+                 worker: int = 0):
+        self.vocab = vocab
+        self.batch = batch
+        self.seq_len = seq_len
+        self.batches_per_chunk = batches_per_chunk
+        self.seed = seed
+        self.worker = worker
+        self.journal = WorkJournal(journal_path, n_chunks)
+
+    # ------------------------------------------------------------------
+    def _chunk_batches(self, chunk: int) -> Iterator[dict]:
+        rng = np.random.default_rng((self.seed, chunk))
+        for _ in range(self.batches_per_chunk):
+            toks = rng.integers(0, self.vocab,
+                                size=(self.batch, self.seq_len),
+                                dtype=np.int32)
+            labels = np.roll(toks, -1, axis=1)
+            labels[:, -1] = -1                     # no target for last pos
+            yield {"tokens": toks, "labels": labels}
+
+    def __iter__(self) -> Iterator[Tuple[int, dict]]:
+        """Yields (chunk_id, batch).  Owner phase, then helping phase."""
+        while True:
+            c = self.journal.acquire(self.worker)
+            if c is None:
+                break
+            for b in self._chunk_batches(c):       # expeditive
+                yield c, b
+            self.journal.mark_done(c)
+        # helping phase: steal unfinished parts past the backoff deadline
+        while not self.journal.all_done():
+            cands = self.journal.help_candidates()
+            if not cands:
+                import time
+                time.sleep(self.journal.backoff_deadline())
+                continue
+            c = cands[0]
+            self.journal.steal(c, self.worker)
+            for b in self._chunk_batches(c):       # standard (idempotent)
+                yield c, b
+            self.journal.mark_done(c)

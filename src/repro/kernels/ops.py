@@ -1,0 +1,45 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode (kernel body
+run in Python — bit-identical semantics, no Mosaic); on TPU they compile to
+Mosaic.  `INTERPRET` resolves the default once per process; every op also
+takes an explicit override for tests.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .ed_argmin import ed_argmin as _ed_argmin
+from .isax_summarize import summarize as _summarize
+from .lb_distance import lb_distance as _lb_distance
+
+INTERPRET: bool = jax.default_backend() != "tpu"
+
+
+def summarize(x, *, segments=None, bits=None, znorm=True, interpret=None):
+    from repro.core import isax
+    return _summarize(
+        x, segments=segments or isax.SEGMENTS, bits=bits or isax.SAX_BITS,
+        znorm=znorm,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def lb_distance(q_paa, leaf_lo, leaf_hi, *, series_len=None, interpret=None):
+    from repro.core import isax
+    return _lb_distance(
+        q_paa, leaf_lo, leaf_hi,
+        series_len=series_len or isax.SERIES_LEN,
+        interpret=INTERPRET if interpret is None else interpret)
+
+
+def ed_argmin(q, xs, *, interpret=None):
+    return _ed_argmin(q, xs,
+                      interpret=INTERPRET if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,
+                    interpret=None):
+    from .flash_attention import flash_attention as _fa
+    return _fa(q, k, v, causal=causal, window=window, block_q=block_q,
+               interpret=INTERPRET if interpret is None else interpret)

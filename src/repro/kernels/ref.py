@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors the semantics of one kernel in this package exactly;
+tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import isax
+
+
+def summarize_ref(x: jnp.ndarray, segments: int = isax.SEGMENTS,
+                  bits: int = isax.SAX_BITS,
+                  znorm: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(z-norm) -> PAA -> iSAX words.  x: (n, L) -> (n, w) f32, (n, w) i32."""
+    if znorm:
+        x = isax.znormalize(x)
+    p = isax.paa(x.astype(jnp.float32), segments)
+    w = isax.sax_word(p, bits).astype(jnp.int32)
+    return p, w
+
+
+def lb_distance_ref(q_paa: jnp.ndarray, leaf_lo: jnp.ndarray,
+                    leaf_hi: jnp.ndarray,
+                    series_len: int = isax.SERIES_LEN) -> jnp.ndarray:
+    """Squared MINDIST of every query PAA against every leaf region.
+
+    q_paa: (Q, w); leaf_lo/hi: (NL, w) -> (Q, NL) f32.
+    """
+    return isax.mindist_region_sq(q_paa[:, None, :], leaf_lo[None],
+                                  leaf_hi[None], series_len)
+
+
+def ed_argmin_ref(q: jnp.ndarray, xs: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-query min squared Euclidean distance + argmin over candidates.
+
+    q: (Q, L); xs: (N, L) -> (Q,) f32 min-dist^2, (Q,) i32 argmin.
+    """
+    q = q.astype(jnp.float32)
+    xs = xs.astype(jnp.float32)
+    d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(xs * xs, -1)[None, :]
+          - 2.0 * q @ xs.T)
+    d2 = jnp.maximum(d2, 0.0)
+    i = jnp.argmin(d2, axis=1).astype(jnp.int32)
+    return jnp.take_along_axis(d2, i[:, None].astype(jnp.int32), 1)[:, 0], i
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True, window: int = 0) -> jnp.ndarray:
+    """Plain softmax attention oracle.  q: (B,Hq,T,dh); k/v: (B,Hkv,S,dh)."""
+    B, Hq, T, dh = q.shape
+    Hkv, S = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.reshape(B, Hkv, G, T, dh).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bkgtd,bksd->bkgts", qf, kf) * (dh ** -0.5)
+    qpos = jnp.arange(T)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgts,bksd->bkgtd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, T, dh).astype(q.dtype)

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = os.environ.get("DRYRUN_XLA_FLAGS",
+                                         "--xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the full-size model ABSTRACTLY (eval_shape — no
+allocation), jits the appropriate step (train_step / prefill / serve_step)
+with explicit in_shardings from the planner, lowers and compiles it for the
+production mesh, and records:
+
+  * memory_analysis()  — proves the cell fits per-device HBM;
+  * cost_analysis()    — per-device FLOPs / bytes for the roofline;
+  * collective bytes   — parsed from the compiled HLO (see roofline.py).
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out out.json]
+
+Cells where the shape is inapplicable (long_500k on a pure full-attention
+arch) are reported as "skipped" with the reason — see DESIGN.md.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, get_config,
+                           supports_shape)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import analyze, model_flops_for
+from repro.launch.specs import (abstract_params, batch_shardings,
+                                input_specs, opt_shardings, param_shardings)
+from repro.models import LM
+from repro.models.transformer import (make_prefill_step, make_serve_step,
+                                      make_train_step)
+from repro.optim import AdamW
+from repro.runtime.sharding import make_plan
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               mesh=None, plan_overrides: dict | None = None,
+               cfg_overrides: dict | None = None,
+               q_chunk: int | None = None, accum: int = 1,
+               flash: bool = False):
+    """Lower+compile one cell.  Returns (compiled, meta dict)."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.scaled(**cfg_overrides)
+    shape = SHAPES_BY_NAME[shape_name]
+    if not supports_shape(cfg, shape):
+        return None, {"status": "skipped",
+                      "reason": "long_500k needs sub-quadratic attention; "
+                                "this arch is pure full-attention "
+                                "(see DESIGN.md §Arch-applicability)"}
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    decode = shape.kind == "decode"
+    plan = make_plan(cfg, mesh, decode=decode,
+                     prefill=shape.kind == "prefill",
+                     **(plan_overrides or {}))
+
+    model = LM(cfg)
+    p_abs, p_axes = abstract_params(model)
+    p_sh = param_shardings(plan, p_axes)
+    specs = input_specs(cfg, shape)
+    b_sh = batch_shardings(plan, specs)
+
+    if q_chunk is None and shape.seq_len >= 4096 and shape.kind != "decode":
+        q_chunk = 2048 if shape.seq_len >= 8192 else 1024
+
+    if shape.kind == "train" and accum == 1:
+        # production microbatching: accumulation caps per-microbatch
+        # activation memory (tokens/device/microstep = B*T/chips/accum)
+        accum = cfg.accum_steps
+
+    if shape.kind == "train":
+        opt = AdamW(lr=1e-4, moments_dtype=cfg.moments_dtype)
+        o_abs = jax.eval_shape(opt.init, p_abs)
+        o_sh = opt_shardings(plan, p_sh, o_abs)
+        step_fn = make_train_step(model, opt, plan, q_chunk=q_chunk,
+                                  accum=accum)
+        batch_abs = {k: specs[k] for k in specs}
+        batch_sh = {k: b_sh[k] for k in b_sh}
+        jitted = jax.jit(step_fn,
+                         in_shardings=(p_sh, o_sh, batch_sh, None),
+                         out_shardings=(p_sh, o_sh, None))
+        args = (p_abs, o_abs, batch_abs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    elif shape.kind == "prefill":
+        step_fn = make_prefill_step(model, plan, q_chunk=q_chunk,
+                                    use_flash=flash)
+        if cfg.prefix_embed:
+            jitted = jax.jit(step_fn, in_shardings=(
+                p_sh, b_sh["tokens"], b_sh["prefix"]))
+            args = (p_abs, specs["tokens"], specs["prefix"])
+        else:
+            jitted = jax.jit(step_fn, in_shardings=(p_sh, b_sh["tokens"]))
+            args = (p_abs, specs["tokens"])
+    else:  # decode
+        step_fn = make_serve_step(model, plan)
+        jitted = jax.jit(step_fn, in_shardings=(
+            p_sh, b_sh["state"], b_sh["token"]))
+        args = (p_abs, specs["state"], specs["token"])
+
+    t0 = time.time()
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    meta = {
+        "status": "ok",
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh.devices.shape)),
+        "n_chips": int(n_chips),
+        "attn_mode": plan.attn_mode, "ep_mode": plan.ep_mode,
+        "fsdp": plan.fsdp,
+        "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1),
+        "mem": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+        },
+    }
+    mf = model_flops_for(cfg, shape)
+    rf = analyze(compiled, n_chips, model_flops_global=mf)
+    meta["roofline"] = rf.as_dict()
+    return compiled, meta
+
+
+def run_cells(cells, multi_pod: bool, out_path: str | None,
+              q_chunk=None, accum=1):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    results = {}
+    if out_path and os.path.exists(out_path):
+        with open(out_path) as f:
+            results = json.load(f)
+    for arch, shape_name in cells:
+        key = f"{arch}|{shape_name}|{'2x16x16' if multi_pod else '16x16'}"
+        if key in results and results[key].get("status") == "ok":
+            print(f"[skip cached] {key}")
+            continue
+        print(f"[dryrun] {key} ...", flush=True)
+        try:
+            compiled, meta = lower_cell(arch, shape_name, mesh=mesh,
+                                        q_chunk=q_chunk, accum=accum)
+            if meta["status"] == "ok":
+                m = meta["mem"]
+                r = meta["roofline"]
+                print(f"  ok: mem arg={m['argument_bytes']/1e9:.2f}GB "
+                      f"temp={m['temp_bytes']/1e9:.2f}GB | "
+                      f"t_c={r['t_compute']*1e3:.2f}ms "
+                      f"t_m={r['t_memory']*1e3:.2f}ms "
+                      f"t_x={r['t_collective']*1e3:.2f}ms "
+                      f"dom={r['dominant']} "
+                      f"useful={r['useful_ratio'] and round(r['useful_ratio'],3)}",
+                      flush=True)
+            else:
+                print(f"  {meta['status']}: {meta.get('reason','')}")
+            del compiled
+        except Exception as e:
+            meta = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-2000:]}
+            print(f"  ERROR {type(e).__name__}: {e}", flush=True)
+        results[key] = meta
+        if out_path:
+            with open(out_path, "w") as f:
+                json.dump(results, f, indent=1)
+        jax.clear_caches()
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--q-chunk", type=int, default=None)
+    ap.add_argument("--accum", type=int, default=1)
+    args = ap.parse_args()
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES_BY_NAME]
+    else:
+        archs = [args.arch] if args.arch else ARCH_IDS
+        shapes = [args.shape] if args.shape else list(SHAPES_BY_NAME)
+        cells = [(a, s) for a in archs for s in shapes]
+    res = run_cells(cells, args.multi_pod, args.out,
+                    q_chunk=args.q_chunk, accum=args.accum)
+    n_ok = sum(1 for v in res.values() if v.get("status") == "ok")
+    n_err = sum(1 for v in res.values() if v.get("status") == "error")
+    n_skip = sum(1 for v in res.values() if v.get("status") == "skipped")
+    print(f"[dryrun] ok={n_ok} skipped={n_skip} error={n_err}")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before the first
+jax device query, and smoke tests must keep seeing 1 CPU device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two pods (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh for multi-device CPU tests (XLA_FLAGS host devices)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+# TPU v5e constants used by the roofline analysis (per chip).
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link (conservative: 1 link counted)

@@ -1,0 +1,104 @@
+"""Abstract input/param/state specs for the dry-run (ShapeDtypeStruct only —
+no device allocation), plus the sharding trees that go with them."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import LM, param_axes, param_values
+from repro.models.attention import KVCache
+from repro.models.ssm import SSMCache
+from repro.models.transformer import DecodeState, init_decode_state
+from repro.optim import AdamW
+from repro.runtime.sharding import ShardingPlan, batch_axes_for
+
+
+def abstract_params(model: LM):
+    """(value ShapeDtypeStruct tree, logical-axes tree) without allocating."""
+    boxed = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return param_values(boxed), param_axes(boxed)
+
+
+def param_shardings(plan: ShardingPlan, axes_tree):
+    return jax.tree.map(
+        lambda axes: plan.param_sharding(axes), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x))
+
+
+def opt_shardings(plan: ShardingPlan, param_sh, opt_state_abs):
+    """AdamW moments mirror the param shardings; count is replicated."""
+    from repro.optim.adamw import AdamWState
+    rep = NamedSharding(plan.mesh, P())
+    return AdamWState(m=param_sh, v=param_sh, count=rep)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract model inputs for this (arch, shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        out["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if cfg.prefix_embed:
+            out["prefix"] = jax.ShapeDtypeStruct(
+                (B, cfg.n_prefix, cfg.d_model), jnp.dtype(cfg.compute_dtype))
+    else:  # decode: one new token against a seq_len KV cache
+        out["token"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+        out["state"] = jax.eval_shape(
+            lambda: init_decode_state(cfg, B, S))
+    return out
+
+
+def batch_shardings(plan: ShardingPlan, specs: Dict[str, Any]):
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            b = batch_axes_for(plan, v.shape[0])
+            out[k] = NamedSharding(plan.mesh, P(b, None))
+        elif k == "prefix":
+            b = batch_axes_for(plan, v.shape[0])
+            out[k] = NamedSharding(plan.mesh, P(b, None, None))
+        elif k == "token":
+            b = batch_axes_for(plan, v.shape[0])
+            out[k] = NamedSharding(plan.mesh, P(b))
+        elif k == "state":
+            out[k] = state_shardings(plan, v)
+    return out
+
+
+def state_shardings(plan: ShardingPlan, state_abs: DecodeState):
+    """DecodeState sharding: leading dim of every leaf is n_periods."""
+    mesh = plan.mesh
+    lm = plan.logical_map
+
+    def kv_cache_sh(c: KVCache):
+        b = batch_axes_for(plan, c.k.shape[1])
+        kv_h = lm.get("kv_heads_act")
+        kv_s = lm.get("kv_seq")
+        kspec = P(None, b, kv_s, kv_h, None)
+        return KVCache(k=NamedSharding(mesh, kspec),
+                       v=NamedSharding(mesh, kspec),
+                       pos=NamedSharding(mesh, P(None, None)))
+
+    def ssm_cache_sh(c: SSMCache):
+        b = batch_axes_for(plan, c.state.shape[1])
+        hh, pp = lm.get("ssm_h"), lm.get("ssm_p")
+        return SSMCache(
+            conv_x=NamedSharding(mesh, P(None, b, None, hh, pp)),
+            conv_b=NamedSharding(mesh, P(None, b, None, None, None)),
+            conv_c=NamedSharding(mesh, P(None, b, None, None, None)),
+            state=NamedSharding(mesh, P(None, b, hh, None, pp)))
+
+    caches = {}
+    for name, c in state_abs.caches.items():
+        caches[name] = kv_cache_sh(c) if isinstance(c, KVCache) \
+            else ssm_cache_sh(c)
+    return DecodeState(caches=caches,
+                       pos=NamedSharding(mesh, P()))

@@ -1,0 +1,13 @@
+"""LM substrate for the assigned architectures.
+
+Pure-functional JAX models: params are pytrees of arrays whose leaves are
+created `Boxed` with LOGICAL axis names (see runtime/sharding.py for the
+logical->physical mapping).  The transformer composes mixers (attention /
+Mamba-2 SSD) and MLPs (dense / MoE) according to ModelConfig.block_pattern,
+lax.scan-ing over pattern periods so the HLO size is O(pattern), not
+O(n_layers).
+"""
+
+from .layers import Boxed, unbox, param_values, param_axes  # noqa: F401
+from .transformer import (LM, make_train_step, make_prefill_step,  # noqa: F401
+                          make_serve_step)

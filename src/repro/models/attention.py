@@ -1,0 +1,269 @@
+"""GQA attention: train/prefill (causal, optional sliding window, optional
+query chunking for O(chunk*S) score memory) and single-token decode against
+a (possibly ring-buffered) KV cache.
+
+Tensor-parallel modes (decided by the ShardingPlan, not here):
+  * heads mode — q/kv heads sharded over 'model' (n_heads % model == 0);
+  * seq mode   — q sharded over sequence, KV replicated (musicgen's 24 and
+    llama4's 40 heads don't divide 16); decode instead shards the KV cache
+    along its sequence axis (flash-decoding-style: softmax over a sharded
+    axis resolves to a cheap psum of partial (max, sum) statistics by SPMD).
+
+All score math in f32 (softmax stability at 32k+ context).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (apply_rotary, boxed_param, constrain, dense, rms_norm,
+                     rotary_cos_sin)
+
+NEG_INF = jnp.float32(-1e30)
+
+
+class KVCache(NamedTuple):
+    """Decode-time cache.  k/v: (B, C, n_kv, d_head); pos: (C,) absolute
+    position held in each slot (-1 = empty).  C = min(seq_len, window)."""
+    k: jnp.ndarray
+    v: jnp.ndarray
+    pos: jnp.ndarray
+
+
+def attn_init(key, cfg, dtype) -> dict:
+    D, H, K, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": boxed_param(ks[0], (D, H, dh), ("embed", "heads", "head_dim"),
+                          dtype=dtype),
+        "wk": boxed_param(ks[1], (D, K, dh), ("embed", "kv_heads", "head_dim"),
+                          dtype=dtype),
+        "wv": boxed_param(ks[2], (D, K, dh), ("embed", "kv_heads", "head_dim"),
+                          dtype=dtype),
+        "wo": boxed_param(ks[3], (H, dh, D), ("heads", "head_dim", "embed"),
+                          dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = boxed_param(key, (dh,), (None,), ones=True)
+        p["knorm"] = boxed_param(key, (dh,), (None,), ones=True)
+    return p
+
+
+def _qkv(p: dict, x: jnp.ndarray, cfg, positions: jnp.ndarray):
+    """x: (B,T,D); positions: (B,T) -> q (B,T,H,dh), k/v (B,T,K,dh), roped."""
+    q = dense(x, p["wq"])                   # (B,T,H,dh)
+    k = dense(x, p["wk"])
+    v = dense(x, p["wv"])
+    if "qnorm" in p:
+        q = rms_norm(q, p["qnorm"], cfg.norm_eps)
+        k = rms_norm(k, p["knorm"], cfg.norm_eps)
+    cos, sin = rotary_cos_sin(positions, cfg.d_head, cfg.rope_theta)
+    q = apply_rotary(q, cos, sin)
+    k = apply_rotary(k, cos, sin)
+    return q, k, v
+
+
+def _scores_softmax_v(q, k, v, mask, n_kv: int):
+    """q: (B,Tq,H,dh), k/v: (B,S,K,dh), mask: (B,Tq,S) bool -> (B,Tq,H,dh).
+
+    GQA via grouping q heads: H = K * G.
+    """
+    B, Tq, H, dh = q.shape
+    S = k.shape[1]
+    G = H // n_kv
+    qg = q.reshape(B, Tq, n_kv, G, dh)
+    scale = dh ** -0.5
+    s = jnp.einsum("btkgd,bskd->bktgs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[:, None, :, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bktgs,bskd->btkgd", w.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Tq, H, dh).astype(q.dtype)
+
+
+def _chunked_causal(q, k, v, qpos, kpos, cfg, q_chunk: Optional[int]):
+    """Causal (+optional SWA) attention, queries chunked via lax.map with a
+    remat'd body so only one chunk's scores are ever live (fwd AND bwd)."""
+    B, T = q.shape[:2]
+
+    def block(qc, qp):
+        mask = qp[:, :, None] >= kpos[:, None, :]            # causal
+        if cfg.sliding_window:
+            mask &= kpos[:, None, :] > qp[:, :, None] - cfg.sliding_window
+        return _scores_softmax_v(qc, k, v, mask, cfg.n_kv_heads)
+
+    if q_chunk is None or q_chunk >= T:
+        return block(q, qpos)
+    assert T % q_chunk == 0, (T, q_chunk)
+    nc = T // q_chunk
+    qs = q.reshape(B, nc, q_chunk, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+    ps = qpos.reshape(B, nc, q_chunk).transpose(1, 0, 2)
+    o = jax.lax.map(lambda a: jax.checkpoint(block)(*a), (qs, ps))
+    return o.transpose(1, 0, 2, 3, 4).reshape(B, T, *q.shape[2:])
+
+
+def attn_apply(p: dict, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+               q_chunk: Optional[int] = None) -> jnp.ndarray:
+    """Full-sequence causal attention (train / prefill).
+
+    q_chunk: process queries in chunks of this size (memory: chunk*S scores
+    instead of T*S).  None = single shot.
+
+    TP mode comes from the active ShardingPlan: 'heads' constrains q/kv head
+    axes over 'model'; 'seq' runs the score/softmax/V core inside shard_map
+    with queries sharded along the sequence (KV replicated over 'model'),
+    so each device computes a contiguous query stripe — head counts that
+    don't divide the mesh cost nothing.
+    """
+    from repro.runtime.sharding import active_plan, seq_attn_specs
+
+    B, T, D = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    plan = active_plan()
+    seq_mode = (plan is not None and plan.attn_mode == "seq"
+                and plan.model_axis is not None and T > 1
+                and T % plan.mesh.shape[plan.model_axis] == 0)
+    if seq_mode:
+        in_specs, out_spec = seq_attn_specs(plan, B)
+
+        def local_core(qq, kk, vv, qp, kp):
+            return _chunked_causal(qq, kk, vv, qp, kp, cfg, q_chunk)
+
+        from jax.experimental.shard_map import shard_map
+        o = shard_map(local_core, mesh=plan.mesh, in_specs=in_specs,
+                      out_specs=out_spec, check_rep=False)(
+                          q, k, v, positions, positions)
+    else:
+        q = constrain(q, "q_heads")
+        k = constrain(k, "kv")
+        v = constrain(v, "kv")
+        o = _chunked_causal(q, k, v, positions, positions, cfg, q_chunk)
+        o = constrain(o, "q_heads")
+    return dense(o, p["wo"], dims=2)
+
+
+def attn_prefill(p: dict, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+                 q_chunk: Optional[int] = None, cache_pad: int = 0,
+                 use_flash: bool = False):
+    """Like attn_apply but also returns the KVCache primed with the roped
+    k/v of the prefilled sequence (+ `cache_pad` empty slots for decode).
+
+    use_flash: route the score/softmax/V core through the fused Pallas
+    kernel (kernels/flash_attention.py) — forward-only, so prefill can use
+    it without a custom VJP.  Requires contiguous positions (standard
+    prefill) and heads TP mode."""
+    from repro.runtime.sharding import active_plan, seq_attn_specs
+
+    B, T, D = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+
+    plan = active_plan()
+    seq_mode = (plan is not None and plan.attn_mode == "seq"
+                and plan.model_axis is not None and T > 1
+                and T % plan.mesh.shape[plan.model_axis] == 0)
+    if use_flash and not seq_mode:
+        from repro.kernels import ops as kops
+        q = constrain(q, "q_heads")
+        k = constrain(k, "kv")
+        v = constrain(v, "kv")
+        o = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+            window=cfg.sliding_window or 0,
+            block_q=min(512, T))
+        o = constrain(o.transpose(0, 2, 1, 3), "q_heads")
+        out = dense(o, p["wo"], dims=2)
+        cache = cache_from_prefill(cfg, k, v, positions, cache_pad=cache_pad)
+        cache = KVCache(k=constrain(cache.k, "kv_cache"),
+                        v=constrain(cache.v, "kv_cache"), pos=cache.pos)
+        return out, cache
+    if seq_mode:
+        in_specs, out_spec = seq_attn_specs(plan, B)
+
+        def local_core(qq, kk, vv, qp, kp):
+            return _chunked_causal(qq, kk, vv, qp, kp, cfg, q_chunk)
+
+        from jax.experimental.shard_map import shard_map
+        o = shard_map(local_core, mesh=plan.mesh, in_specs=in_specs,
+                      out_specs=out_spec, check_rep=False)(
+                          q, k, v, positions, positions)
+    else:
+        q = constrain(q, "q_heads")
+        k = constrain(k, "kv")
+        v = constrain(v, "kv")
+        o = _chunked_causal(q, k, v, positions, positions, cfg, q_chunk)
+        o = constrain(o, "q_heads")
+    out = dense(o, p["wo"], dims=2)
+
+    cache = cache_from_prefill(cfg, k, v, positions, cache_pad=cache_pad)
+    cache = KVCache(k=constrain(cache.k, "kv_cache"),
+                    v=constrain(cache.v, "kv_cache"), pos=cache.pos)
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+def cache_init(cfg, batch: int, seq_len: int, dtype) -> KVCache:
+    C = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    return KVCache(
+        k=jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), dtype),
+        v=jnp.zeros((batch, C, cfg.n_kv_heads, cfg.d_head), dtype),
+        pos=jnp.full((C,), -1, jnp.int32),
+    )
+
+
+def cache_from_prefill(cfg, k: jnp.ndarray, v: jnp.ndarray,
+                       positions: jnp.ndarray,
+                       cache_pad: int = 0) -> KVCache:
+    """Build a cache from prefill-produced roped k/v (B,S,K,dh).
+
+    Ring invariant: position p always lives at slot p % C, matching
+    attn_decode's write rule, so prefill->decode hand-off is seamless for
+    both full attention (C = S + pad) and SWA (C = window + pad)."""
+    B, S = k.shape[:2]
+    C = (min(cfg.sliding_window, S) if cfg.sliding_window else S) + cache_pad
+    if S <= C:
+        pad = C - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        pos = jnp.pad(positions[0], (0, pad), constant_values=-1)
+        return KVCache(k=k, v=v, pos=pos)
+    # keep the last C positions, scattered to their ring slots p % C
+    kk, vv = k[:, S - C:], v[:, S - C:]
+    pp = positions[0, S - C:]                            # (C,) absolute
+    slots = pp % C
+    ck = jnp.zeros((B, C) + k.shape[2:], k.dtype).at[:, slots].set(kk)
+    cv = jnp.zeros((B, C) + v.shape[2:], v.dtype).at[:, slots].set(vv)
+    cpos = jnp.full((C,), -1, jnp.int32).at[slots].set(pp)
+    return KVCache(k=ck, v=cv, pos=cpos)
+
+
+def attn_decode(p: dict, x: jnp.ndarray, cfg, cache: KVCache,
+                pos: jnp.ndarray):
+    """One-token decode.  x: (B,1,D); pos: () int32 absolute position.
+    Returns (out (B,1,D), new cache).  Ring-buffer write for SWA."""
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, cfg, jnp.full((B, 1), pos, jnp.int32))
+    C = cache.k.shape[1]
+    slot = pos % C                                            # ring index
+    k = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, axis=1)
+    cpos = jax.lax.dynamic_update_slice_in_dim(
+        cache.pos, jnp.full((1,), pos, jnp.int32), slot, axis=0)
+    k = constrain(k, "kv_cache")
+    v = constrain(v, "kv_cache")
+
+    mask = (cpos >= 0) & (cpos <= pos)                        # (C,)
+    if cfg.sliding_window:
+        mask &= cpos > pos - cfg.sliding_window
+    mask = jnp.broadcast_to(mask[None, None, :], (B, 1, C))
+    o = _scores_softmax_v(q, k, v, mask, cfg.n_kv_heads)
+    out = dense(o, p["wo"], dims=2)
+    return out, KVCache(k=k, v=v, pos=cpos)

@@ -1,0 +1,195 @@
+"""Param system + common layers.
+
+Every parameter is created with `boxed_param(key, shape, axes, ...)` where
+`axes` is a tuple of LOGICAL axis names (or None), one per dim.  Logical
+axes are resolved to mesh axes by runtime.sharding.ShardingPlan.  Boxed is
+a pytree node whose aux_data is the axes tuple, so
+
+    jax.eval_shape(init_fn, key)        # abstract init: no allocation
+
+yields a tree of Boxed(ShapeDtypeStruct) from which both the value tree and
+the axes tree can be split (`param_values` / `param_axes`) — exactly what
+the multi-pod dry-run needs to build in_shardings without ever touching
+device memory.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Axes = Tuple[Optional[str], ...]
+
+
+@jax.tree_util.register_pytree_node_class
+class Boxed:
+    """A parameter value tagged with logical axis names (pytree node)."""
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes: Axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, axes, children):
+        return cls(children[0], axes)
+
+    def __repr__(self):
+        shape = getattr(self.value, "shape", None)
+        return f"Boxed(shape={shape}, axes={self.axes})"
+
+
+def _is_boxed(x) -> bool:
+    return isinstance(x, Boxed)
+
+
+def param_values(tree):
+    """Strip boxes -> plain value pytree."""
+    return jax.tree.map(lambda b: b.value, tree, is_leaf=_is_boxed)
+
+
+def param_axes(tree):
+    """Strip values -> same-structure pytree of logical-axes tuples."""
+    return jax.tree.map(lambda b: b.axes, tree, is_leaf=_is_boxed)
+
+
+def unbox(tree):
+    return param_values(tree), param_axes(tree)
+
+
+def boxed_param(key, shape: Tuple[int, ...], axes: Axes, *,
+                scale: Optional[float] = None, dtype=jnp.float32,
+                zeros: bool = False, ones: bool = False) -> Boxed:
+    """Create one parameter.  Default init: truncated-normal, fan-in scale."""
+    assert len(shape) == len(axes), (shape, axes)
+    if zeros:
+        v = jnp.zeros(shape, dtype)
+    elif ones:
+        v = jnp.ones(shape, dtype)
+    else:
+        if scale is None:
+            fan_in = shape[0] if len(shape) <= 2 else int(np.prod(shape[:-1]))
+            scale = 1.0 / max(1.0, float(fan_in)) ** 0.5
+        v = (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+             * scale).astype(dtype)
+    return Boxed(v, axes)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / rotary
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last axis; stats in f32, output in x.dtype."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rms_norm_groups(x: jnp.ndarray, w: jnp.ndarray, ndims: int,
+                    eps: float = 1e-5) -> jnp.ndarray:
+    """RMSNorm over the last `ndims` axes jointly (Mamba-2 gated norm over
+    d_inner while keeping the (H, P) head layout)."""
+    xf = x.astype(jnp.float32)
+    red = tuple(range(x.ndim - ndims, x.ndim))
+    var = jnp.mean(xf * xf, axis=red, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+_ACTS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "relu2": lambda x: jnp.square(jax.nn.relu(x)),   # squared-ReLU (nemotron)
+}
+
+
+def activation(name: str):
+    if name in ("swiglu", "geglu"):
+        # gated: handled by the MLP (two input projections)
+        return jax.nn.silu if name == "swiglu" else jax.nn.gelu
+    return _ACTS[name]
+
+
+def is_gated(act: str) -> bool:
+    return act in ("swiglu", "geglu")
+
+
+def rotary_cos_sin(positions: jnp.ndarray, d_head: int, theta: float,
+                   dtype=jnp.float32):
+    """positions: (...,) int -> cos/sin (..., d_head//2)."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rotary(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (..., T, n, d_head); cos/sin: (..., T, d_head//2) broadcast over n."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Sharding hook (lazy import to avoid cycles)
+# ---------------------------------------------------------------------------
+def constrain(x: jnp.ndarray, kind: str) -> jnp.ndarray:
+    from repro.runtime.sharding import constrain as _c
+    return _c(x, kind)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, dims: int = 1) -> jnp.ndarray:
+    """Contract the last `dims` axes of x with the first `dims` of w.
+
+    Default: f32 accumulation (preferred_element_type) — TP partial sums
+    are then all-reduced in f32.  With the plan's `bf16_reduce` flag the
+    dot OUTPUT is bf16, so SPMD psums travel in bf16 (half the wire bytes;
+    MXU-internal accumulation stays f32 on TPU) — the standard Megatron
+    trade, measured in EXPERIMENTS.md §Perf."""
+    from repro.runtime.sharding import active_plan
+    plan = active_plan()
+    pref = jnp.float32
+    if (plan is not None and getattr(plan, "bf16_reduce", False)
+            and x.dtype == jnp.bfloat16):
+        pref = jnp.bfloat16
+    return jax.lax.dot_general(
+        x, w,
+        dimension_numbers=(
+            (tuple(range(x.ndim - dims, x.ndim)), tuple(range(dims))),
+            ((), ())),
+        preferred_element_type=pref).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, act: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"wi": boxed_param(k1, (d_model, d_ff), ("embed", "ff"), dtype=dtype),
+         "wo": boxed_param(k2, (d_ff, d_model), ("ff", "embed"), dtype=dtype)}
+    if is_gated(act):
+        p["wg"] = boxed_param(k3, (d_model, d_ff), ("embed", "ff"), dtype=dtype)
+    return p
+
+
+def mlp_apply(p: dict, x: jnp.ndarray, act: str) -> jnp.ndarray:
+    fn = activation(act)
+    h = dense(x, p["wi"])
+    if "wg" in p:
+        h = fn(dense(x, p["wg"])) * h
+    else:
+        h = fn(h)
+    h = constrain(h, "ff_act")
+    return dense(h, p["wo"])

@@ -1,0 +1,369 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity, sort-based dispatch.
+
+Two execution paths:
+
+  * `dense` (no mesh / smoke tests): every expert runs on every token and
+    the top-k routing weights mask the combine.  Exact (no capacity drops),
+    O(E) compute — only used at smoke scale.
+
+  * `ep` (production, inside shard_map): tokens replicated over 'model',
+    experts partitioned over it.  Each device routes ALL local tokens
+    (routing is deterministic and identical across the model axis), then
+    dispatches only the tokens assigned to ITS experts into an
+    (E_local, C, D) buffer via a local argsort — the paper's locality
+    principle: disjoint work, no coordination.  The single collective is
+    the final psum over 'model' that combines per-expert partial outputs —
+    the same wire cost as one tensor-parallel MLP.  When n_experts does not
+    divide the axis (qwen2's 60), the expert FFN dim is partitioned instead
+    (`ff` mode) and the same psum closes the partial contractions.
+
+Capacity follows GShard/Switch: C = ceil(S*K/E * capacity_factor), tokens
+over capacity are dropped (contribute zero; the residual carries them).
+Aux losses: Switch load-balance + router z-loss, averaged over layers.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .layers import activation, boxed_param, dense, is_gated
+
+
+def padded_experts(cfg) -> int:
+    """Experts padded up to a multiple of 16 when that unlocks EP.
+
+    qwen2's 60 experts don't divide a 16-way model axis; the fallback
+    (per-expert FF slices of 1408/16 = 88) underfills the 128-lane MXU and
+    round-trips full-size (60, C, D) dispatch buffers on every device.
+    4 dummy zero-weight experts (router never selects them: their logits
+    are masked to -inf) cost 6.7%% parameter storage and buy 16x smaller
+    per-device dispatch buffers + full-width expert matmuls.  Recorded in
+    EXPERIMENTS.md §Perf (beyond-paper optimization)."""
+    import os
+    E = cfg.moe.n_experts
+    if E % 16 == 0 or E < 16 or os.environ.get("REPRO_NO_EXPERT_PAD"):
+        return E
+    return -(-E // 16) * 16
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    m = cfg.moe
+    D, F = cfg.d_model, m.d_ff_expert
+    E = padded_experts(cfg)
+    ks = jax.random.split(key, 6)
+    # expert weights use their own D-dim logical axis ("embed_expert"):
+    # in a2a mode the experts shard over 'data' and FSDP must not also
+    # claim 'data' for the D dim of these leaves.
+    p = {
+        "router": boxed_param(ks[0], (D, m.n_experts), ("embed", None),
+                              dtype=jnp.float32),
+        "w_in": boxed_param(ks[1], (E, D, F),
+                            ("experts", "embed_expert", "ff_expert"),
+                            dtype=dtype),
+        "w_out": boxed_param(ks[2], (E, F, D),
+                             ("experts", "ff_expert", "embed_expert"),
+                             dtype=dtype),
+    }
+    if is_gated(cfg.act):
+        p["w_gate"] = boxed_param(ks[3], (E, D, F),
+                                  ("experts", "embed_expert", "ff_expert"),
+                                  dtype=dtype)
+    if m.n_shared:
+        from .layers import mlp_init
+        p["shared"] = mlp_init(ks[4], D, m.n_shared * F, cfg.act, dtype)
+        p["shared_gate"] = boxed_param(ks[5], (D, 1), ("embed", None),
+                                       dtype=jnp.float32)
+    return p
+
+
+def _route(tokens_f32: jnp.ndarray, router_w: jnp.ndarray, m):
+    """tokens: (S, D) f32 -> (gate (S,K), idx (S,K) i32, aux (lb, z))."""
+    logits = tokens_f32 @ router_w                     # (S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)
+    if m.top_k > 1:
+        gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+    # Switch aux: E * sum_e mean_prob_e * frac_assigned_e
+    E = probs.shape[-1]
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=probs.dtype), axis=1), axis=0)
+    lb = E * jnp.sum(jnp.mean(probs, axis=0) * frac)
+    z = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    return gate, idx, (lb, z)
+
+
+def _capacity(S: int, K: int, E: int, factor: float) -> int:
+    c = int(-(-S * K * factor // E))
+    c = min(max(8, c), S * K)
+    return -(-c // 8) * 8                              # pad to 8 lanes
+
+
+def _expert_ffn(buf, w_in, w_gate, w_out, act: str):
+    """buf: (E, C, D) -> (E, C, D) through each expert's (gated) MLP."""
+    fn = activation(act)
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in,
+                   preferred_element_type=jnp.float32).astype(buf.dtype)
+    if w_gate is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate,
+                       preferred_element_type=jnp.float32).astype(buf.dtype)
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out,
+                      preferred_element_type=jnp.float32).astype(buf.dtype)
+
+
+def _dispatch_combine(tokens, gate, idx, w_in, w_gate, w_out, act: str,
+                      e_lo: int, E_loc: int, C: int):
+    """Sort-based dispatch of (S,D) tokens into (E_loc, C, D), expert FFN,
+    combine back.  Tokens routed outside [e_lo, e_lo+E_loc) or over
+    capacity contribute zero.  Entirely local (called under shard_map)."""
+    S, D = tokens.shape
+    K = idx.shape[1]
+    SK = S * K
+
+    e_flat = idx.reshape(SK)
+    t_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+    g_flat = gate.reshape(SK)
+
+    e_local = e_flat - e_lo
+    mine = (e_local >= 0) & (e_local < E_loc)
+    sort_key = jnp.where(mine, e_local, E_loc).astype(jnp.int32)
+    order = jnp.argsort(sort_key)                      # stable
+    se = sort_key[order]
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(SK, dtype=jnp.int32) - first.astype(jnp.int32)
+    keep = (se < E_loc) & (rank < C)
+    slot = jnp.where(keep, se * C + rank, E_loc * C)   # overflow -> waste row
+
+    gathered = jnp.take(tokens, t_flat[order], axis=0)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    buf = jnp.zeros((E_loc * C + 1, D), tokens.dtype).at[slot].set(gathered)
+    buf = buf[:E_loc * C].reshape(E_loc, C, D)
+
+    out = _expert_ffn(buf, w_in, w_gate, w_out, act).reshape(E_loc * C, D)
+    vals = jnp.take(out, jnp.minimum(slot, E_loc * C - 1), axis=0)
+    vals = jnp.where(keep[:, None], vals, 0)
+    y_flat = jnp.zeros((SK, D), tokens.dtype).at[order].set(vals)
+    y = jnp.sum(y_flat.reshape(S, K, D) * g_flat.reshape(S, K, 1)
+                .astype(tokens.dtype), axis=1)
+    return y
+
+
+def _rank_within(sort_key: jnp.ndarray):
+    """(sorted keys) -> (order, sorted keys, rank within equal-key run)."""
+    order = jnp.argsort(sort_key)
+    se = sort_key[order]
+    first = jnp.searchsorted(se, se, side="left")
+    rank = jnp.arange(se.shape[0], dtype=jnp.int32) - first.astype(jnp.int32)
+    return order, se, rank
+
+
+def _moe_a2a(p, x, cfg, plan, m):
+    """Token all-to-all expert parallelism (beyond-paper, EXPERIMENTS §Perf).
+
+    Experts shard over 'data' (E/R per row), expert FF over 'model'.
+    Tokens are exchanged with a fixed-capacity all-to-all so WEIGHTS NEVER
+    MOVE: a ZeRO-3 400B MoE otherwise re-gathers ~params/model_size bytes
+    of expert weights per microstep x3 (fwd/remat/bwd) — measured 2.7 TB
+    per step on llama4-maverick; token a2a wires ~1% of that.
+    """
+    from repro.runtime.sharding import batch_axes_for
+    from jax.experimental.shard_map import shard_map
+
+    B, T, D = x.shape
+    mesh = plan.mesh
+    R = mesh.shape["data"]
+    msize = mesh.shape[plan.model_axis]
+    b = batch_axes_for(plan, B)
+    E_pad = p["w_in"].shape[0]
+    assert E_pad % R == 0, (E_pad, R)
+    E_loc = E_pad // R
+    S_loc = (B // _prod(mesh, b)) * T
+    C_send = _capacity(S_loc, m.top_k, R, m.capacity_factor)
+    C_e = -(-(R * C_send) // E_loc)
+    C_e = -(-C_e // 8) * 8
+
+    w_spec = P("data", None, plan.model_axis)       # (E, D, F)
+    wo_spec = P("data", plan.model_axis, None)      # (E, F, D)
+    x_spec = P(b, None, None)
+    has_gate = "w_gate" in p
+
+    def local(xx, router_w, w_in, w_gate, w_out):
+        Bl, Tl, _ = xx.shape
+        S = Bl * Tl
+        tokens = xx.reshape(S, D)
+        gate, idx, aux = _route(tokens.astype(jnp.float32), router_w, m)
+        SK = S * m.top_k
+        e_flat = idx.reshape(SK)
+        t_flat = jnp.repeat(jnp.arange(S, dtype=jnp.int32), m.top_k)
+
+        # ---- pack per-destination-row send buffers ----------------------
+        dst = e_flat // E_loc                              # (SK,) in [0,R)
+        order, srow, rank = _rank_within(dst)
+        keep = rank < C_send
+        slot = jnp.where(keep, srow * C_send + rank, R * C_send)
+        send = jnp.zeros((R * C_send + 1, D), tokens.dtype).at[slot].set(
+            jnp.where(keep[:, None], jnp.take(tokens, t_flat[order], 0), 0))
+        send = send[:R * C_send].reshape(R, C_send, D)
+        eid_send = jnp.full((R * C_send + 1,), -1, jnp.int32).at[slot].set(
+            jnp.where(keep, (e_flat % E_loc)[order], -1))
+        eid_send = eid_send[:R * C_send].reshape(R, C_send)
+
+        # ---- exchange tokens with the expert owners ---------------------
+        recv = jax.lax.all_to_all(send, "data", 0, 0, tiled=True)
+        eid = jax.lax.all_to_all(eid_send, "data", 0, 0, tiled=True)
+
+        # ---- local expert FFN (second, local dispatch by expert id) -----
+        rt = recv.reshape(R * C_send, D)
+        re = eid.reshape(R * C_send)
+        key2 = jnp.where(re >= 0, re, E_loc).astype(jnp.int32)
+        order2, se2, rank2 = _rank_within(key2)
+        keep2 = (se2 < E_loc) & (rank2 < C_e)
+        slot2 = jnp.where(keep2, se2 * C_e + rank2, E_loc * C_e)
+        buf = jnp.zeros((E_loc * C_e + 1, D), rt.dtype).at[slot2].set(
+            jnp.where(keep2[:, None], jnp.take(rt, order2, 0), 0))
+        buf = buf[:E_loc * C_e].reshape(E_loc, C_e, D)
+        out = _expert_ffn(buf, w_in, w_gate, w_out, cfg.act)
+        out = jax.lax.psum(out, plan.model_axis)   # close the F_loc slices
+        out = out.reshape(E_loc * C_e, D)
+
+        # ---- un-dispatch, reverse a2a, combine --------------------------
+        vals2 = jnp.take(out, jnp.minimum(slot2, E_loc * C_e - 1), 0)
+        vals2 = jnp.where(keep2[:, None], vals2, 0)
+        back = jnp.zeros((R * C_send, D), rt.dtype).at[order2].set(vals2)
+        back = jax.lax.all_to_all(back.reshape(R, C_send, D),
+                                  "data", 0, 0, tiled=True)
+        bt = back.reshape(R * C_send, D)
+        vals = jnp.take(bt, jnp.minimum(slot, R * C_send - 1), 0)
+        vals = jnp.where(keep[:, None], vals, 0)
+        y_flat = jnp.zeros((SK, D), tokens.dtype).at[order].set(vals)
+        y = jnp.sum(y_flat.reshape(S, m.top_k, D)
+                    * gate.reshape(S, m.top_k, 1).astype(tokens.dtype), 1)
+        return y.reshape(Bl, Tl, D), aux
+
+    args = [x, p["router"], p["w_in"],
+            p["w_gate"] if has_gate else None, p["w_out"]]
+    specs = [x_spec, P(None, None), w_spec,
+             w_spec if has_gate else None, wo_spec]
+    if not has_gate:
+        fn = lambda xx, rw, wi, wo: local(xx, rw, wi, None, wo)  # noqa: E731
+        args = [args[0], args[1], args[2], args[4]]
+        specs = [specs[0], specs[1], specs[2], specs[4]]
+    else:
+        fn = local
+    return shard_map(fn, mesh=mesh, in_specs=tuple(specs),
+                     out_specs=(x_spec, (P(), P())),
+                     check_rep=False)(*args)
+
+
+def moe_apply(p: dict, x: jnp.ndarray, cfg) -> Tuple[jnp.ndarray, Tuple]:
+    """x: (B, T, D) -> (y, (lb_loss, z_loss))."""
+    from repro.runtime.sharding import active_plan, batch_axes_for
+
+    m = cfg.moe
+    B, T, D = x.shape
+    plan = active_plan()
+    ep = (plan is not None and plan.model_axis is not None
+          and plan.ep_mode != "none")
+
+    if ep and getattr(plan, "moe_a2a", False) \
+            and p["w_in"].shape[0] % plan.mesh.shape["data"] == 0:
+        y, aux = _moe_a2a(p, x, cfg, plan, m)
+        if m.n_shared:
+            from .layers import mlp_apply
+            sg = jax.nn.sigmoid(
+                (x.astype(jnp.float32) @ p["shared_gate"])).astype(x.dtype)
+            y = y + sg * mlp_apply(p["shared"], x, cfg.act)
+        return y, aux
+
+    if not ep:
+        y, aux = _moe_dense(p, x.reshape(B * T, D), cfg)
+        y = y.reshape(B, T, D)
+    else:
+        mesh = plan.mesh
+        msize = mesh.shape[plan.model_axis]
+        b = batch_axes_for(plan, B)
+        x_spec = P(b, None, None)
+        E_pad = p["w_in"].shape[0]               # incl. dummy experts
+        if plan.ep_mode == "experts":
+            w_spec = wo_spec = P("model", None, None)
+            E_loc = E_pad // msize
+        else:  # 'ff_expert': all experts, FF dim partitioned
+            w_spec = P(None, None, "model")      # w_in/w_gate: (E, D, F)
+            wo_spec = P(None, "model", None)     # w_out:      (E, F, D)
+            E_loc = E_pad
+        S_loc = (B // _prod(mesh, b)) * T
+        C = _capacity(S_loc, m.top_k, m.n_experts, m.capacity_factor)
+
+        def local_moe(xx, router_w, w_in, w_gate, w_out):
+            Bl, Tl, _ = xx.shape
+            tokens = xx.reshape(Bl * Tl, D)
+            gate, idx, aux = _route(tokens.astype(jnp.float32), router_w, m)
+            if plan.ep_mode == "experts":
+                midx = jax.lax.axis_index(plan.model_axis)
+                e_lo = midx.astype(jnp.int32) * E_loc
+            else:
+                e_lo = 0
+            y = _dispatch_combine(tokens, gate, idx, w_in, w_gate, w_out,
+                                  cfg.act, e_lo, E_loc, C)
+            y = jax.lax.psum(y, plan.model_axis)
+            return y.reshape(Bl, Tl, D), aux
+
+        from jax.experimental.shard_map import shard_map
+        w_gate = p.get("w_gate")
+        args = (x, p["router"], p["w_in"], w_gate, p["w_out"])
+        in_specs = (x_spec, P(None, None), w_spec, w_spec, wo_spec)
+        if w_gate is None:
+            args = (x, p["router"], p["w_in"], p["w_out"])
+            in_specs = (x_spec, P(None, None), w_spec, wo_spec)
+
+            def local_moe2(xx, rw, wi, wo):
+                return local_moe(xx, rw, wi, None, wo)
+            fn = local_moe2
+        else:
+            fn = local_moe
+        y, aux = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                           out_specs=(x_spec, (P(), P())),
+                           check_rep=False)(*args)
+
+    if m.n_shared:
+        from .layers import mlp_apply
+        sg = jax.nn.sigmoid(
+            (x.astype(jnp.float32) @ p["shared_gate"])).astype(x.dtype)
+        y = y + sg * mlp_apply(p["shared"], x, cfg.act)
+    return y, aux
+
+
+def _moe_dense(p: dict, tokens: jnp.ndarray, cfg):
+    """All-experts fallback: exact routing, O(E) compute (smoke scale)."""
+    m = cfg.moe
+    gate, idx, aux = _route(tokens.astype(jnp.float32), p["router"], m)
+    E = m.n_experts
+    w = jnp.sum(jax.nn.one_hot(idx, E, dtype=tokens.dtype)
+                * gate[..., None].astype(tokens.dtype), axis=1)   # (S, E)
+    w_in, w_out = p["w_in"][:E], p["w_out"][:E]   # drop dummy pad experts
+    h = jnp.einsum("sd,edf->sef", tokens, w_in,
+                   preferred_element_type=jnp.float32).astype(tokens.dtype)
+    fn = activation(cfg.act)
+    if "w_gate" in p:
+        g = jnp.einsum("sd,edf->sef", tokens, p["w_gate"][:E],
+                       preferred_element_type=jnp.float32).astype(tokens.dtype)
+        h = fn(g) * h
+    else:
+        h = fn(h)
+    out = jnp.einsum("sef,efd->sed", h, w_out,
+                     preferred_element_type=jnp.float32).astype(tokens.dtype)
+    y = jnp.einsum("sed,se->sd", out, w)
+    return y, aux
+
+
+def _prod(mesh, axes) -> int:
+    if not axes:
+        return 1
+    return int(functools.reduce(lambda a, x: a * mesh.shape[x], axes, 1))

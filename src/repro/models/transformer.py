@@ -1,0 +1,474 @@
+"""The LM: block-pattern composable transformer.
+
+Layer stack = n_periods repetitions of `cfg.block_pattern` (e.g. jamba's
+8-layer period [mamba, mamba, mamba, mamba, attn, mamba, mamba, mamba] with
+MoE at odd positions).  Parameters for each pattern position are STACKED
+over periods and the stack is consumed by one lax.scan, so HLO size is
+O(|pattern|) — compiling a 48-layer 400B model costs the same as compiling
+one period.
+
+Vocab is padded to a multiple of 2048 (= 128 MXU lanes x 16-way model axis)
+and padded logits are masked out of the loss.
+
+Embedding lookup and the cross-entropy both run in shard_map when a plan is
+active: each device resolves ids/labels against its local vocab slice and a
+psum closes the result — never all-gathering a (V, D) table.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (Boxed, boxed_param, constrain, dense, mlp_apply,
+                     mlp_init, param_values, rms_norm, unbox)
+
+VOCAB_MULTIPLE = 2048
+
+
+def pad_vocab(v: int) -> int:
+    return -(-v // VOCAB_MULTIPLE) * VOCAB_MULTIPLE
+
+
+def _is_boxed(x):
+    return isinstance(x, Boxed)
+
+
+def _stack_axes(tree):
+    """Add the leading 'layers' (None) axis to every Boxed after vmap."""
+    return jax.tree.map(lambda b: Boxed(b.value, (None,) + b.axes), tree,
+                        is_leaf=_is_boxed)
+
+
+class LM:
+    """Functional model: `init` -> boxed params; `apply_*` -> activations."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.v_pad = pad_vocab(cfg.vocab)
+
+    # ------------------------------------------------------------- init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dtype = jnp.dtype(cfg.param_dtype)
+        k_embed, k_blocks, k_head = jax.random.split(key, 3)
+
+        params: Dict[str, Any] = {
+            "embed": boxed_param(k_embed, (self.v_pad, cfg.d_model),
+                                 ("vocab", None), scale=0.02, dtype=dtype),
+            "final_norm": boxed_param(k_head, (cfg.d_model,), (None,),
+                                      ones=True),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = boxed_param(
+                k_head, (self.v_pad, cfg.d_model), ("vocab", None),
+                scale=0.02, dtype=dtype)
+
+        blocks = {}
+        for j, btype in enumerate(cfg.block_pattern):
+            kj = jax.random.fold_in(k_blocks, j)
+
+            def init_one(kk, j=j, btype=btype):
+                km, kf = jax.random.split(kk)
+                d = {"norm1": boxed_param(kk, (cfg.d_model,), (None,),
+                                          ones=True)}
+                if btype == "attn":
+                    d["mixer"] = attn_mod.attn_init(km, cfg, dtype)
+                else:
+                    d["mixer"] = ssm_mod.ssm_init(km, cfg, dtype)
+                if cfg.mlp_per_block:
+                    d["norm2"] = boxed_param(kk, (cfg.d_model,), (None,),
+                                             ones=True)
+                    if cfg.moe is not None and cfg.moe_pattern[j]:
+                        d["mlp"] = moe_mod.moe_init(kf, cfg, dtype)
+                    else:
+                        d["mlp"] = mlp_init(kf, cfg.d_model, cfg.d_ff,
+                                            cfg.act, dtype)
+                return d
+
+            keys = jax.random.split(kj, cfg.n_periods)
+            blocks[f"pos{j}"] = _stack_axes(jax.vmap(init_one)(keys))
+        params["blocks"] = blocks
+        return params
+
+    # --------------------------------------------------------- embedding
+    def embed(self, params, tokens: jnp.ndarray) -> jnp.ndarray:
+        """tokens: (B, T) int32 -> (B, T, D), via local-slice gather + psum
+        when the vocab is sharded (never all-gathers the table)."""
+        from repro.runtime.sharding import active_plan, batch_axes_for
+        cfg = self.cfg
+        table = params["embed"]
+        plan = active_plan()
+        if plan is None or plan.model_axis is None:
+            x = jnp.take(table, tokens, axis=0)
+        else:
+            mesh = plan.mesh
+            b = batch_axes_for(plan, tokens.shape[0])
+            V_loc = self.v_pad // mesh.shape[plan.model_axis]
+
+            def local_embed(tab, ids):
+                lo = jax.lax.axis_index(plan.model_axis).astype(jnp.int32) \
+                    * V_loc
+                loc = ids - lo
+                ok = (loc >= 0) & (loc < V_loc)
+                rows = jnp.take(tab, jnp.clip(loc, 0, V_loc - 1), axis=0)
+                rows = jnp.where(ok[..., None], rows, 0)
+                return jax.lax.psum(rows, plan.model_axis)
+
+            from jax.experimental.shard_map import shard_map
+            x = shard_map(local_embed, mesh=mesh,
+                          in_specs=(P("model", None), P(b, None)),
+                          out_specs=P(b, None, None),
+                          check_rep=False)(table, tokens)
+        x = x.astype(jnp.dtype(cfg.compute_dtype))
+        return constrain(x, "btd")
+
+    # ------------------------------------------------------------ blocks
+    def _block(self, j: int, p_j, x, positions, q_chunk):
+        cfg = self.cfg
+        aux = (jnp.float32(0), jnp.float32(0))
+        h = rms_norm(x, p_j["norm1"], cfg.norm_eps)
+        if cfg.block_pattern[j] == "attn":
+            mix = attn_mod.attn_apply(p_j["mixer"], h, cfg, positions,
+                                      q_chunk)
+        else:
+            mix = ssm_mod.ssm_apply(p_j["mixer"], h, cfg)
+        x = constrain(x + mix, "btd")
+        if cfg.mlp_per_block:
+            h2 = rms_norm(x, p_j["norm2"], cfg.norm_eps)
+            if cfg.moe is not None and cfg.moe_pattern[j]:
+                y, aux = moe_mod.moe_apply(p_j["mlp"], h2, cfg)
+            else:
+                y = mlp_apply(p_j["mlp"], h2, cfg.act)
+            x = constrain(x + y, "btd")
+        return x, aux
+
+    def backbone(self, params, x, positions, q_chunk: Optional[int] = None):
+        """(B, T, D) -> (B, T, D) through all layers.
+
+        lax.scan over n_periods/scan_group steps; each step runs scan_group
+        periods.  remat wraps BOTH levels: the outer checkpoint makes the
+        scan save only one (B,T,D) residual per step (a stack of
+        n_periods/scan_group of them), the inner one bounds bwd recompute
+        memory to a single period's intermediates."""
+        cfg = self.cfg
+        G = max(1, cfg.scan_group)
+        assert cfg.n_periods % G == 0, (cfg.n_periods, G)
+
+        def wrap(fn):
+            if cfg.remat == "full":
+                return jax.checkpoint(fn)
+            if cfg.remat == "dots":
+                return jax.checkpoint(
+                    fn,
+                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            return fn
+
+        def period_fn(x, p_period):
+            lb = jnp.float32(0)
+            zl = jnp.float32(0)
+            for j in range(len(cfg.block_pattern)):
+                x, (l, z) = self._block(j, p_period[f"pos{j}"], x,
+                                        positions, q_chunk)
+                lb, zl = lb + l, zl + z
+            return x, (lb, zl)
+
+        period_fn = wrap(period_fn)
+
+        def group_fn(x, p_group):
+            lb = jnp.float32(0)
+            zl = jnp.float32(0)
+            for g in range(G):
+                x, (l, z) = period_fn(
+                    x, jax.tree.map(lambda a: a[g], p_group))
+                lb, zl = lb + l, zl + z
+            return x, (lb, zl)
+
+        if G > 1:
+            group_fn = wrap(group_fn)
+            blocks = jax.tree.map(
+                lambda a: a.reshape((cfg.n_periods // G, G) + a.shape[1:]),
+                params["blocks"])
+        else:
+            group_fn = period_fn
+            blocks = params["blocks"]
+
+        def scan_body(carry, p_group):
+            x, (lb, zl) = carry
+            x, (l, z) = group_fn(x, p_group)
+            return (x, (lb + l, zl + z)), None
+
+        init = (x, (jnp.float32(0), jnp.float32(0)))
+        (x, (lb, zl)), _ = jax.lax.scan(scan_body, init, blocks)
+        denom = max(1, cfg.n_layers)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return x, (lb / denom, zl / denom)
+
+    # ------------------------------------------------------------ logits
+    def logits(self, params, x: jnp.ndarray) -> jnp.ndarray:
+        head = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+        out = jax.lax.dot_general(
+            x, head, (((x.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return constrain(out, "logits")
+
+    def loss(self, params, x: jnp.ndarray, labels: jnp.ndarray):
+        """Masked CE.  labels: (B, T) int32, -1 = ignore.  Runs in shard_map
+        over the sharded vocab axis (local lse + psum)."""
+        from repro.runtime.sharding import active_plan, batch_axes_for
+        cfg = self.cfg
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        plan = active_plan()
+        valid = labels >= 0
+        safe_labels = jnp.where(valid, labels, 0)
+
+        if plan is None or plan.model_axis is None:
+            logits = self.logits(params, x)             # (B,T,Vp) f32
+            mask = jnp.arange(self.v_pad) < cfg.vocab
+            logits = jnp.where(mask, logits, -1e30)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            lab = jnp.take_along_axis(logits, safe_labels[..., None],
+                                      axis=-1)[..., 0]
+            nll = lse - lab
+        else:
+            mesh = plan.mesh
+            b = batch_axes_for(plan, x.shape[0])
+            V_loc = self.v_pad // mesh.shape[plan.model_axis]
+
+            def local_loss(xx, hd, lbl):
+                lo = jax.lax.axis_index(plan.model_axis).astype(jnp.int32) \
+                    * V_loc
+                lg = jax.lax.dot_general(
+                    xx, hd, (((xx.ndim - 1,), (1,)), ((), ())),
+                    preferred_element_type=jnp.float32)   # (B,T,V_loc)
+                vmask = (jnp.arange(V_loc) + lo) < cfg.vocab
+                lg = jnp.where(vmask, lg, -1e30)
+                # stability max: constant wrt grad (the two m terms cancel
+                # in d lse/d lg, so stop_gradient is exact, and pmax has no
+                # differentiation rule anyway)
+                m_loc = jax.lax.stop_gradient(jnp.max(lg, axis=-1))
+                m = jax.lax.pmax(m_loc, plan.model_axis)
+                ssum = jnp.sum(jnp.exp(lg - m[..., None]), axis=-1)
+                lse = m + jnp.log(jax.lax.psum(ssum, plan.model_axis))
+                loc = lbl - lo
+                ok = (loc >= 0) & (loc < V_loc)
+                lab = jnp.take_along_axis(
+                    lg, jnp.clip(loc, 0, V_loc - 1)[..., None], axis=-1)[..., 0]
+                lab = jax.lax.psum(jnp.where(ok, lab, 0.0), plan.model_axis)
+                return lse - lab
+
+            from jax.experimental.shard_map import shard_map
+            nll = shard_map(local_loss, mesh=mesh,
+                            in_specs=(P(b, None, None), P("model", None),
+                                      P(b, None)),
+                            out_specs=P(b, None),
+                            check_rep=False)(x, head, safe_labels)
+
+        nll = jnp.where(valid, nll, 0.0)
+        n = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+        return jnp.sum(nll) / n
+
+    # ------------------------------------------------- full train forward
+    def forward_loss(self, params, batch: Dict[str, jnp.ndarray],
+                     q_chunk: Optional[int] = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, T = tokens.shape
+        x = self.embed(params, tokens)
+        if cfg.prefix_embed and "prefix" in batch and batch["prefix"] is not None:
+            pre = batch["prefix"].astype(x.dtype)       # (B, Np, D)
+            Np = pre.shape[1]
+            x = jnp.concatenate([pre, x[:, Np:]], axis=1)
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        x, (lb, zl) = self.backbone(params, x, positions, q_chunk)
+        ce = self.loss(params, x, batch["labels"])
+        total = ce
+        if cfg.moe is not None:
+            total = total + cfg.moe.lb_coef * lb + cfg.moe.router_z_coef * zl
+        return total, {"ce": ce, "lb": lb, "z": zl}
+
+
+# ===========================================================================
+# Decode path
+# ===========================================================================
+class DecodeState(NamedTuple):
+    caches: Any              # per pattern position, stacked over periods
+    pos: jnp.ndarray         # () int32 — next absolute position
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int
+                      ) -> DecodeState:
+    dtype = jnp.dtype(cfg.compute_dtype)
+    caches = {}
+    for j, btype in enumerate(cfg.block_pattern):
+        if btype == "attn":
+            one = attn_mod.cache_init(cfg, batch, seq_len, dtype)
+        else:
+            one = ssm_mod.ssm_cache_init(cfg, batch, dtype)
+        caches[f"pos{j}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_periods,) + a.shape), one)
+    return DecodeState(caches=caches, pos=jnp.int32(0))
+
+
+def decode_block(cfg, j, p_j, cache_j, x, pos):
+    h = rms_norm(x, p_j["norm1"], cfg.norm_eps)
+    if cfg.block_pattern[j] == "attn":
+        mix, newc = attn_mod.attn_decode(p_j["mixer"], h, cfg, cache_j, pos)
+    else:
+        mix, newc = ssm_mod.ssm_decode(p_j["mixer"], h, cfg, cache_j)
+    x = x + mix
+    if cfg.mlp_per_block:
+        h2 = rms_norm(x, p_j["norm2"], cfg.norm_eps)
+        if cfg.moe is not None and cfg.moe_pattern[j]:
+            y, _ = moe_mod.moe_apply(p_j["mlp"], h2, cfg)
+        else:
+            y = mlp_apply(p_j["mlp"], h2, cfg.act)
+        x = x + y
+    return x, newc
+
+
+def decode_step(model: LM, params, state: DecodeState, token: jnp.ndarray):
+    """token: (B,) int32 -> (logits (B, V_pad) f32, new state)."""
+    cfg = model.cfg
+    x = model.embed(params, token[:, None])             # (B,1,D)
+
+    def scan_body(x, xs):
+        p_period, cache_period = xs
+        newc = {}
+        for j in range(len(cfg.block_pattern)):
+            x, c = decode_block(cfg, j, p_period[f"pos{j}"],
+                                cache_period[f"pos{j}"], x, state.pos)
+            newc[f"pos{j}"] = c
+        return x, newc
+
+    x, new_caches = jax.lax.scan(scan_body, x,
+                                 (params["blocks"], state.caches))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = model.logits(params, x)[:, 0]              # (B, V_pad)
+    return logits, DecodeState(caches=new_caches, pos=state.pos + 1)
+
+
+# ===========================================================================
+# Step factories (jit-able, plan-aware)
+# ===========================================================================
+def make_train_step(model: LM, optimizer, plan=None,
+                    q_chunk: Optional[int] = None, accum: int = 1):
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)."""
+    cfg = model.cfg
+
+    def loss_fn(params, batch):
+        return model.forward_loss(params, batch, q_chunk)
+
+    def one_grad(params, batch):
+        (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, aux, grads
+
+    def train_step(params, opt_state, batch, step):
+        ctx = plan.activate() if plan is not None else _null_ctx()
+        with ctx:
+            if accum == 1:
+                loss, aux, grads = one_grad(params, batch)
+            else:
+                acc_dtype = jnp.dtype(cfg.moments_dtype)
+
+                def micro(carry, mb):
+                    loss_a, grads_a = carry
+                    loss, aux, grads = one_grad(params, mb)
+                    return (loss_a + loss,
+                            jax.tree.map(
+                                lambda a, g: (a + g.astype(acc_dtype)),
+                                grads_a, grads)), aux
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, acc_dtype), params)
+                mbs = jax.tree.map(
+                    lambda a: a.reshape((accum, a.shape[0] // accum)
+                                        + a.shape[1:]), batch)
+                (loss, grads), aux = jax.lax.scan(
+                    micro, (jnp.float32(0), zeros), mbs)
+                loss = loss / accum
+                grads = jax.tree.map(lambda g: g / accum, grads)
+                aux = jax.tree.map(lambda a: a[-1], aux)
+            params, opt_state, gnorm = optimizer.update(
+                params, grads, opt_state, step)
+            metrics = {"loss": loss, "grad_norm": gnorm, **aux}
+            return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: LM, plan=None, q_chunk: Optional[int] = None,
+                      cache_pad: int = 0, use_flash: bool = False):
+    """prefill(params, tokens (B,S)) -> (last-token logits (B, V_pad),
+    DecodeState primed at pos=S).  `cache_pad` reserves extra KV slots so
+    subsequent decode steps don't ring-overwrite the oldest tokens.
+    `use_flash`: fused-attention Pallas core (forward-only)."""
+    cfg = model.cfg
+
+    def prefill(params, tokens, prefix=None):
+        ctx = plan.activate() if plan is not None else _null_ctx()
+        with ctx:
+            B, S = tokens.shape
+            x = model.embed(params, tokens)
+            if cfg.prefix_embed and prefix is not None:
+                pre = prefix.astype(x.dtype)
+                x = jnp.concatenate([pre, x[:, pre.shape[1]:]], axis=1)
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (B, S))
+
+            def period_fn(x, p_period):
+                caches = {}
+                for j in range(len(cfg.block_pattern)):
+                    p_j = p_period[f"pos{j}"]
+                    h = rms_norm(x, p_j["norm1"], cfg.norm_eps)
+                    if cfg.block_pattern[j] == "attn":
+                        mix, c = attn_mod.attn_prefill(
+                            p_j["mixer"], h, cfg, positions, q_chunk,
+                            cache_pad=cache_pad, use_flash=use_flash)
+                    else:
+                        mix, c = ssm_mod.ssm_apply(
+                            p_j["mixer"], h, cfg, return_cache=True)
+                    x = constrain(x + mix, "btd")
+                    if cfg.mlp_per_block:
+                        h2 = rms_norm(x, p_j["norm2"], cfg.norm_eps)
+                        if cfg.moe is not None and cfg.moe_pattern[j]:
+                            y, _ = moe_mod.moe_apply(p_j["mlp"], h2, cfg)
+                        else:
+                            y = mlp_apply(p_j["mlp"], h2, cfg.act)
+                        x = constrain(x + y, "btd")
+                    caches[f"pos{j}"] = c
+                return x, caches
+
+            x, caches = jax.lax.scan(
+                lambda xx, pp: period_fn(xx, pp), x, params["blocks"])
+            x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+            logits = model.logits(params, x[:, -1:])[:, 0]
+            return logits, DecodeState(caches=caches, pos=jnp.int32(S))
+
+    return prefill
+
+
+def make_serve_step(model: LM, plan=None):
+    def serve_step(params, state: DecodeState, token: jnp.ndarray):
+        ctx = plan.activate() if plan is not None else _null_ctx()
+        with ctx:
+            return decode_step(model, params, state, token)
+
+    return serve_step
+
+
+class _null_ctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,6 @@
+"""Optimizers + schedules + gradient utilities (self-contained, no optax)."""
+
+from .adamw import AdamW  # noqa: F401
+from .schedules import constant, cosine_warmup, linear_warmup  # noqa: F401
+from .compression import (compress_int8, decompress_int8,  # noqa: F401
+                          make_compressed_allreduce)

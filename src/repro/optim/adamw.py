@@ -1,0 +1,94 @@
+"""AdamW with dtype-configurable moment storage and global-norm clipping.
+
+Moments inherit each parameter's sharding (they are elementwise state), so
+under FSDP/TP the optimizer state is automatically distributed — nothing
+here is mesh-aware, which is the point: sharding is decided once by the
+planner and everything elementwise follows it.
+
+`moments_dtype='bfloat16'` halves optimizer HBM for the 400B-class configs
+(the update math still runs in f32; only storage is rounded).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    m: dict
+    v: dict
+    count: jnp.ndarray
+
+
+class AdamW:
+    def __init__(self, lr: Union[float, Callable] = 1e-3, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0,
+                 moments_dtype: str = "float32",
+                 chunked_update: bool = False):
+        self.lr = lr if callable(lr) else (lambda step: jnp.float32(lr))
+        self.b1, self.b2, self.eps = b1, b2, eps
+        self.weight_decay = weight_decay
+        self.clip_norm = clip_norm
+        self.moments_dtype = jnp.dtype(moments_dtype)
+        self.chunked_update = chunked_update
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, self.moments_dtype)  # noqa: E731
+        return AdamWState(m=jax.tree.map(zeros, params),
+                          v=jax.tree.map(zeros, params),
+                          count=jnp.zeros((), jnp.int32))
+
+    def update(self, params, grads, state: AdamWState, step):
+        """Returns (new_params, new_state, global_grad_norm)."""
+        gnorm = global_norm(grads)
+        scale = jnp.where(self.clip_norm > 0,
+                          jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9)),
+                          1.0)
+        count = state.count + 1
+        b1c = 1 - self.b1 ** count.astype(jnp.float32)
+        b2c = 1 - self.b2 ** count.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd_math(p, g, m, v, decay):
+            g = g.astype(jnp.float32) * scale
+            m32 = self.b1 * m.astype(jnp.float32) + (1 - self.b1) * g
+            v32 = self.b2 * v.astype(jnp.float32) + (1 - self.b2) * g * g
+            mhat = m32 / b1c
+            vhat = v32 / b2c
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if decay and self.weight_decay:
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return newp, m32.astype(self.moments_dtype), \
+                v32.astype(self.moments_dtype)
+
+        def upd(p, g, m, v):
+            decay = p.ndim >= 2
+            # optional: run the update per period slice via lax.map so the
+            # f32 temporaries are 1/n_periods of a stacked leaf
+            if self.chunked_update and p.ndim >= 3 and p.shape[0] <= 64 \
+                    and p.size > (1 << 24):
+                return jax.lax.map(
+                    lambda a: upd_math(*a, decay), (p, g, m, v))
+            return upd_math(p, g, m, v, decay)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = tdef.flatten_up_to(state.m)
+        flat_v = tdef.flatten_up_to(state.v)
+        out = [upd(p, g, m, v)
+               for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(m=new_m, v=new_v, count=count), gnorm
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))

@@ -1,0 +1,67 @@
+"""Gradient compression: int8 quantization with error feedback.
+
+Under pjit the data-parallel gradient reduction is implicit (psum inserted
+by SPMD in the backward pass), so compression must be applied where the
+reduction is explicit.  `make_compressed_allreduce` returns a shard_map
+collective that:
+
+  1. adds the residual (error feedback) carried from the previous step,
+  2. quantizes each leaf to int8 with a per-leaf f32 scale (absmax/127),
+  3. all-reduces the int8 payload over the dp axes (8x fewer bytes of
+     summed int32 than f32 — wire bytes dominate at 1000+ nodes),
+  4. dequantizes and stores the new residual.
+
+This is the classic 1-bit-Adam-family error-feedback scheme [Seide'14;
+Tang'21], adapted to SPMD: the quantize/dequantize run per-shard, the
+reduction is one jax.lax.psum over ('pod','data').  Used by train.py when
+--grad_compression int8 is set; exact training is the default.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """g (f32) -> (int8 payload, scale)."""
+    absmax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def make_compressed_allreduce(axis_names):
+    """Returns f(grads, residual) -> (reduced_grads, new_residual).
+
+    Must be called INSIDE shard_map (uses psum over `axis_names`).
+    Gradients here are the per-shard contributions; the psum of the int8
+    payloads (as int32) plus a psum'd max-scale gives the reduced value.
+    """
+
+    def allreduce(grads, residual):
+        def one(g, r):
+            g = g.astype(jnp.float32) + r
+            # shared scale across shards so the integer sum is coherent
+            absmax = jnp.max(jnp.abs(g))
+            absmax = jax.lax.pmax(absmax, axis_names)
+            scale = jnp.maximum(absmax, 1e-12) / 127.0
+            q = jnp.clip(jnp.round(g / scale), -127, 127)
+            sent = q * scale
+            new_r = g - sent                         # error feedback
+            summed = jax.lax.psum(q.astype(jnp.int32), axis_names)
+            return summed.astype(jnp.float32) * scale, new_r
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = tdef.flatten_up_to(residual)
+        out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (tdef.unflatten([o[0] for o in out]),
+                tdef.unflatten([o[1] for o in out]))
+
+    return allreduce

@@ -1,0 +1,27 @@
+"""Learning-rate schedules as plain step -> lr callables (jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def f(step):
+        s = jnp.minimum(step.astype(jnp.float32) / max(1, warmup), 1.0)
+        return jnp.float32(lr) * s
+    return f
+
+
+def cosine_warmup(lr: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to floor*lr at `total` steps."""
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(1, warmup)
+        frac = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.float32(lr) * jnp.where(s < warmup, warm, cos)
+    return f

@@ -1,0 +1,1 @@
+"""Distributed runtime: sharding planner, fault tolerance, elasticity."""

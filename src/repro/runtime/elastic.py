@@ -1,0 +1,96 @@
+"""Elastic scaling + straggler mitigation for the training runtime.
+
+On a real cluster the control plane watches pod health; here the same
+logic is driven by a pluggable `healthy_pods()` callback so tests can
+simulate failures.  The decisions it makes:
+
+  * elastic re-mesh: when a pod dies (or joins), pick the largest valid
+    mesh from the survivors, rebuild the ShardingPlan, and re-shard the
+    latest checkpoint onto it (checkpoint/store.py stores full logical
+    arrays, so re-sharding is a device_put).  Training resumes from the
+    last step — the cluster-level lock-freedom property: the system makes
+    progress as long as SOME pod survives, none blocks all.
+
+  * straggler mitigation: per-step wall times feed an EWMA; a worker whose
+    step time exceeds `factor` x the fleet median is flagged, its data
+    chunks become help candidates in the WorkJournal (runtime/journal.py),
+    and the launcher can deschedule it at the next checkpoint boundary.
+    The backoff-before-helping rule is the paper's T_avg heuristic.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+from typing import Callable, List, Optional, Tuple
+
+import jax
+
+
+@dataclass
+class MeshSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+
+    def make(self):
+        return jax.make_mesh(self.shape, self.axes)
+
+
+def plan_mesh_for(n_pods: int, chips_per_pod: int = 256,
+                  model_axis: int = 16) -> MeshSpec:
+    """Largest valid mesh for the surviving pods."""
+    assert n_pods >= 1
+    data = chips_per_pod // model_axis
+    if n_pods == 1:
+        return MeshSpec((data, model_axis), ("data", "model"))
+    return MeshSpec((n_pods, data, model_axis), ("pod", "data", "model"))
+
+
+class ElasticController:
+    """Decides when to re-mesh; owns the resume-from-checkpoint flow."""
+
+    def __init__(self, healthy_pods: Callable[[], int],
+                 chips_per_pod: int = 256, model_axis: int = 16):
+        self.healthy_pods = healthy_pods
+        self.chips_per_pod = chips_per_pod
+        self.model_axis = model_axis
+        self.current_pods = healthy_pods()
+
+    def check(self) -> Optional[MeshSpec]:
+        """Returns a new MeshSpec if the world changed, else None."""
+        now = self.healthy_pods()
+        if now == self.current_pods:
+            return None
+        if now < 1:
+            raise RuntimeError("no healthy pods left")
+        self.current_pods = now
+        return plan_mesh_for(now, self.chips_per_pod, self.model_axis)
+
+
+class StragglerMonitor:
+    """EWMA step-time tracker; flags workers slower than factor x median."""
+
+    def __init__(self, n_workers: int, factor: float = 1.5,
+                 alpha: float = 0.3):
+        self.n = n_workers
+        self.factor = factor
+        self.alpha = alpha
+        self.ewma: List[Optional[float]] = [None] * n_workers
+
+    def record(self, worker: int, step_time: float) -> None:
+        e = self.ewma[worker]
+        self.ewma[worker] = step_time if e is None else \
+            (1 - self.alpha) * e + self.alpha * step_time
+
+    def stragglers(self) -> List[int]:
+        vals = [e for e in self.ewma if e is not None]
+        if len(vals) < 2:
+            return []
+        med = statistics.median(vals)
+        return [i for i, e in enumerate(self.ewma)
+                if e is not None and e > self.factor * med]
+
+    def median(self) -> Optional[float]:
+        vals = [e for e in self.ewma if e is not None]
+        return statistics.median(vals) if vals else None

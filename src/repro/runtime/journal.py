@@ -1,0 +1,151 @@
+"""Cluster-level Refresh: a persistent work journal with helping.
+
+This is the distributed adaptation of the paper's core mechanism (DESIGN.md
+§2).  The workload (an epoch of data chunks, an index-build partition, ...)
+is split into parts; each part has a done flag and an owner.  Workers:
+
+  1. acquire parts they own and process them (EXPEDITIVE mode — no
+     coordination beyond the atomic acquire);
+  2. when their own parts are exhausted, they SCAN the journal for
+     unfinished parts, BACK OFF proportionally to the measured mean part
+     time (the paper's T_avg rule, Section V-A), and then HELP: re-execute
+     parts whose owner looks dead or slow (STANDARD mode).
+
+Processing must be idempotent (the traversing property only demands
+at-least-once application) — true for both data loading (a re-served chunk
+re-enters the batch stream after a crash; exactly-once is restored by the
+step counter in the checkpoint) and index building (inserting the same
+series twice is deduplicated by series id).
+
+The journal is a JSON file updated with atomic rename, so a restarted
+worker (or a helper on another host) sees a consistent snapshot — the
+durable analogue of the paper's shared-memory done flags.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class PartState:
+    owner: int = -1
+    done: bool = False
+    acquired_at: float = 0.0
+    done_at: float = 0.0
+    attempts: int = 0
+    helped: bool = False
+
+
+class WorkJournal:
+    """Per-stage chunk journal.  Single-writer-per-part semantics with
+    atomic whole-file persistence (rename)."""
+
+    def __init__(self, path: Optional[str], n_parts: int,
+                 backoff_factor: float = 2.0):
+        self.path = path
+        self.n_parts = n_parts
+        self.backoff_factor = backoff_factor
+        self.parts: List[PartState] = [PartState() for _ in range(n_parts)]
+        self._t_avg = 0.0
+        self._t_cnt = 0
+        if path and os.path.exists(path):
+            self._load()
+
+    # ------------------------------------------------------------ owner
+    def acquire(self, worker: int) -> Optional[int]:
+        """Next unowned part (FAI-style); None when all are owned."""
+        for i, p in enumerate(self.parts):
+            if p.owner < 0 and not p.done:
+                p.owner = worker
+                p.acquired_at = time.time()
+                p.attempts += 1
+                self._persist()
+                return i
+        return None
+
+    def mark_done(self, part: int) -> None:
+        p = self.parts[part]
+        if not p.done:
+            p.done = True
+            p.done_at = time.time()
+            if p.acquired_at:
+                dt = p.done_at - p.acquired_at
+                self._t_cnt += 1
+                self._t_avg += (dt - self._t_avg) / self._t_cnt
+            self._persist()
+
+    # ----------------------------------------------------------- helping
+    def backoff_deadline(self) -> float:
+        """Paper's rule: help only after backoff ∝ measured T_avg."""
+        return self.backoff_factor * max(self._t_avg, 1e-3)
+
+    def help_candidates(self, now: Optional[float] = None) -> List[int]:
+        """Unfinished parts whose owner has exceeded the backoff deadline
+        (or that were never acquired) — the helper's scan (Alg. 2 l.12)."""
+        now = now if now is not None else time.time()
+        ddl = self.backoff_deadline()
+        out = []
+        for i, p in enumerate(self.parts):
+            if p.done:
+                continue
+            if p.owner < 0 or (now - p.acquired_at) > ddl:
+                out.append(i)
+        return out
+
+    def steal(self, part: int, helper: int) -> None:
+        p = self.parts[part]
+        p.owner = helper
+        p.acquired_at = time.time()
+        p.attempts += 1
+        p.helped = True
+        self._persist()
+
+    def all_done(self) -> bool:
+        return all(p.done for p in self.parts)
+
+    def unfinished(self) -> List[int]:
+        return [i for i, p in enumerate(self.parts) if not p.done]
+
+    def stats(self) -> dict:
+        return {
+            "n_parts": self.n_parts,
+            "done": sum(p.done for p in self.parts),
+            "helped": sum(p.helped for p in self.parts),
+            "attempts": sum(p.attempts for p in self.parts),
+            "t_avg": self._t_avg,
+        }
+
+    # -------------------------------------------------------- persistence
+    def _persist(self) -> None:
+        if not self.path:
+            return
+        data = {"n_parts": self.n_parts,
+                "t_avg": self._t_avg, "t_cnt": self._t_cnt,
+                "parts": [vars(p) for p in self.parts]}
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d)
+        with os.fdopen(fd, "w") as f:
+            json.dump(data, f)
+        os.replace(tmp, self.path)          # atomic on POSIX
+
+    def _load(self) -> None:
+        with open(self.path) as f:
+            data = json.load(f)
+        assert data["n_parts"] == self.n_parts, \
+            "journal/workload mismatch (elastic re-partition not supported " \
+            "mid-stage; finish or clear the stage first)"
+        self._t_avg = data.get("t_avg", 0.0)
+        self._t_cnt = data.get("t_cnt", 0)
+        self.parts = [PartState(**p) for p in data["parts"]]
+        # crash recovery: surviving owners re-acquire; stale ownership is
+        # cleared so restarted workers do not wait on the dead
+        for p in self.parts:
+            if not p.done:
+                p.owner = -1

@@ -1,0 +1,19 @@
+"""Shared fixtures.  Deliberately does NOT set XLA_FLAGS: smoke tests must
+see 1 CPU device; multi-device tests spawn subprocesses with their own
+flags (see tests/test_sharded.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def walks():
+    """A small random-walk collection shared across tests."""
+    from repro.data.synthetic import random_walk
+    return random_walk(2048, 256, seed=7)
+
+
+@pytest.fixture(scope="session")
+def queries(walks):
+    from repro.data.synthetic import query_workload
+    return query_workload(walks, 24, noise_sigma=0.05, seed=11)

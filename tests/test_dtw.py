@@ -1,0 +1,83 @@
+"""DTW support (paper Section II generality claim): banded DTW vs O(L^2)
+oracle, LB_Keogh soundness (hypothesis), exact DTW 1-NN vs brute force."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtw import (dtw_band, dtw_ref, envelope, lb_keogh,
+                            search_dtw, search_dtw_bruteforce)
+
+
+def _pair(seed, L=32):
+    rng = np.random.default_rng(seed)
+    q = np.cumsum(rng.standard_normal(L)).astype(np.float32)
+    x = np.cumsum(rng.standard_normal(L)).astype(np.float32)
+    return q, x
+
+
+@pytest.mark.parametrize("r", [1, 4, 8, 16])
+def test_dtw_band_matches_oracle(r):
+    q, x = _pair(0, 48)
+    got = float(dtw_band(jnp.asarray(q), jnp.asarray(x), r))
+    want = dtw_ref(q, x, r)
+    assert abs(got - want) / max(want, 1e-9) < 1e-5
+
+
+def test_dtw_identity_is_zero():
+    q, _ = _pair(1)
+    assert float(dtw_band(jnp.asarray(q), jnp.asarray(q), 4)) < 1e-9
+
+
+def test_dtw_leq_euclidean():
+    """DTW with any band <= ED (warping can only help)."""
+    q, x = _pair(2)
+    ed = float(jnp.sum((jnp.asarray(q) - jnp.asarray(x)) ** 2))
+    for r in (0, 2, 8):
+        assert float(dtw_band(jnp.asarray(q), jnp.asarray(x), r)) <= ed + 1e-4
+
+
+def test_envelope_contains_query():
+    q, _ = _pair(3)
+    lo, hi = envelope(jnp.asarray(q), 5)
+    assert np.all(np.asarray(lo) <= q + 1e-6)
+    assert np.all(q <= np.asarray(hi) + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 5, 9]))
+def test_lb_keogh_lower_bounds_dtw(seed, r):
+    """THE soundness property: LB_Keogh <= banded DTW, always."""
+    q, x = _pair(seed, 24)
+    lb = float(lb_keogh(jnp.asarray(q), jnp.asarray(x)[None, :], r)[0])
+    d = dtw_ref(q, x, r)
+    assert lb <= d + 1e-4 * max(d, 1.0), (lb, d)
+
+
+def test_search_dtw_exact_vs_bruteforce():
+    rng = np.random.default_rng(7)
+    X = np.cumsum(rng.standard_normal((300, 64)), axis=1).astype(np.float32)
+    Q = X[rng.integers(0, 300, 6)] + 0.05 * rng.standard_normal(
+        (6, 64)).astype(np.float32)
+    d, i = search_dtw(jnp.asarray(X), jnp.asarray(Q), r=6, round_k=16)
+    db, ib = search_dtw_bruteforce(jnp.asarray(X), jnp.asarray(Q), r=6)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(db), rtol=1e-5,
+                               atol=1e-5)
+    mism = np.asarray(i) != np.asarray(ib)
+    if mism.any():       # ties only
+        np.testing.assert_allclose(np.asarray(d)[mism],
+                                   np.asarray(db)[mism], rtol=1e-5)
+
+
+def test_search_dtw_finds_warped_twin():
+    """A time-warped copy should be the DTW-NN even when it is not the
+    ED-NN — the point of supporting DTW at all."""
+    rng = np.random.default_rng(8)
+    base = np.cumsum(rng.standard_normal(64)).astype(np.float32)
+    warped = np.interp(np.linspace(0, 63, 64) + 2 * np.sin(
+        np.linspace(0, 3, 64)), np.arange(64), base).astype(np.float32)
+    X = np.cumsum(rng.standard_normal((100, 64)), axis=1).astype(np.float32)
+    X[37] = warped
+    d, i = search_dtw(jnp.asarray(X), jnp.asarray(base[None, :]), r=8)
+    assert int(i[0]) == 37

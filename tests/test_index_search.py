@@ -1,0 +1,106 @@
+"""Device data plane: flat index build + exact search vs brute force."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (build_index, index_stats, search, search_bruteforce)
+from repro.core.index import leaf_regions
+from repro.core import isax
+
+
+@pytest.fixture(scope="module")
+def built(walks):
+    raw = jnp.asarray(walks)
+    return raw, build_index(raw, leaf_capacity=64)
+
+
+def test_index_shapes_and_stats(built, walks):
+    raw, idx = built
+    st = index_stats(idx)
+    assert st["n_series"] == walks.shape[0]
+    assert st["n_leaves"] * idx.leaf_capacity >= walks.shape[0]
+    assert st["max_fill"] <= idx.leaf_capacity
+
+
+def test_exact_search_matches_bruteforce(built, queries):
+    raw, idx = built
+    q = jnp.asarray(queries)
+    d, i = search(idx, q)
+    db, ib = search_bruteforce(raw, q)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(db),
+                               rtol=1e-4, atol=1e-4)
+    # ids may differ only on exact distance ties
+    mism = np.asarray(i) != np.asarray(ib)
+    if mism.any():
+        np.testing.assert_allclose(np.asarray(d)[mism],
+                                   np.asarray(db)[mism], rtol=1e-5)
+
+
+@pytest.mark.parametrize("bound", ["prefix", "symbox", "paabox"])
+def test_every_leaf_bound_is_sound(walks, queries, bound):
+    raw = jnp.asarray(walks[:512])
+    idx = build_index(raw, leaf_capacity=32, bound=bound)
+    q = jnp.asarray(queries[:8])
+    d, i = search(idx, q)
+    db, ib = search_bruteforce(raw, q)
+    np.testing.assert_allclose(np.asarray(d), np.asarray(db),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_leaf_regions_contain_members(walks):
+    raw = jnp.asarray(walks[:512])
+    idx = build_index(raw, leaf_capacity=32)
+    # each member's PAA must lie inside its leaf's [lo, hi] region box is
+    # only required for paabox; for prefix bounds the SYMBOL region applies
+    M = idx.leaf_capacity
+    words = np.asarray(idx.words).reshape(idx.n_leaves, M, -1)
+    valid = np.asarray(idx.valid).reshape(idx.n_leaves, M)
+    lo = np.asarray(idx.leaf_lo)
+    hi = np.asarray(idx.leaf_hi)
+    pad = np.asarray(isax.padded_breakpoints())
+    sym_lo = pad[words]
+    sym_hi = pad[words.astype(np.int64) + 1]
+    for lf in range(idx.n_leaves):
+        v = valid[lf]
+        if not v.any():
+            continue
+        assert np.all(lo[lf][None, :] <= sym_lo[lf][v] + 1e-6)
+        assert np.all(sym_hi[lf][v] <= hi[lf][None, :] + 1e-6)
+
+
+def test_search_with_max_rounds_is_upper_bound(built, queries):
+    """Capped refinement is approximate but never better than exact."""
+    raw, idx = built
+    q = jnp.asarray(queries[:8])
+    d_exact, _ = search(idx, q)
+    d_cap, _ = search(idx, q, max_rounds=1)
+    assert np.all(np.asarray(d_cap) >= np.asarray(d_exact) - 1e-5)
+
+
+def test_build_is_deterministic(walks):
+    raw = jnp.asarray(walks[:256])
+    a = build_index(raw, leaf_capacity=32)
+    b = build_index(raw, leaf_capacity=32)
+    np.testing.assert_array_equal(np.asarray(a.perm), np.asarray(b.perm))
+
+
+def test_search_single_query_batch(built):
+    raw, idx = built
+    q = jnp.asarray(np.asarray(raw[3:4]))  # a collection member: dist 0
+    d, i = search(idx, q)
+    assert float(d[0]) < 1e-3
+    assert int(i[0]) == 3
+
+
+def test_padded_index_reports_exact_distances():
+    """Regression: perm contains -1 padding when n % leaf_capacity != 0;
+    the winner-distance recompute must not misalign (argsort bug)."""
+    from repro.data.synthetic import random_walk, query_workload
+    w = random_walk(1000, 256, seed=13)          # 1000 % 64 != 0
+    q = query_workload(w, 8, noise_sigma=0.05, seed=14)
+    idx = build_index(jnp.asarray(w), leaf_capacity=64)
+    d, i = search(idx, jnp.asarray(q))
+    db, ib = search_bruteforce(jnp.asarray(w), jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ib))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(db), atol=1e-5)

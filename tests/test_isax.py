@@ -1,0 +1,123 @@
+"""Unit tests for the iSAX math (core/isax.py): the numeric foundation.
+
+The pruning property (MINDIST <= ED) is THE soundness invariant of the
+whole index — if it ever breaks, exact search silently returns wrong
+answers.  It gets both fixed-seed and hypothesis coverage.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import isax
+
+
+def test_ndtri_matches_known_quantiles():
+    # N(0,1) quantiles: Phi^-1(0.5)=0, Phi^-1(0.975)~1.959964
+    assert abs(isax.ndtri(np.array([0.5]))[0]) < 1e-9
+    assert abs(isax.ndtri(np.array([0.975]))[0] - 1.959964) < 1e-5
+    assert abs(isax.ndtri(np.array([0.025]))[0] + 1.959964) < 1e-5
+
+
+def test_breakpoints_monotone_and_symmetric():
+    for bits in (1, 2, 4, 8):
+        bp = isax.breakpoints(bits)
+        assert len(bp) == (1 << bits) - 1
+        assert np.all(np.diff(bp) > 0)
+        np.testing.assert_allclose(bp, -bp[::-1], atol=1e-12)
+
+
+def test_paa_mean_preserving():
+    x = jnp.arange(32.0).reshape(2, 16)
+    p = isax.paa(x, 4)
+    assert p.shape == (2, 4)
+    np.testing.assert_allclose(np.asarray(p[0]),
+                               [1.5, 5.5, 9.5, 13.5], atol=1e-6)
+
+
+def test_sax_word_bounds_and_regions():
+    p = jnp.asarray([[-10.0, 0.0, 10.0, 0.3]])
+    w = isax.sax_word(p, 8)
+    assert int(w[0, 0]) == 0
+    assert int(w[0, 2]) == 255
+    lo, hi = isax.symbol_region(w, 8, 8)
+    # every PAA value must lie in its full-cardinality region
+    assert np.all(np.asarray(lo[0]) <= np.asarray(p[0]))
+    assert np.all(np.asarray(p[0]) <= np.asarray(hi[0]))
+
+
+def test_root_bucket_packs_msbs():
+    w = jnp.zeros((1, 4), jnp.uint8).at[0, 0].set(128)  # MSB of seg 0 only
+    b = isax.root_bucket(w, 8)
+    assert int(b[0]) == 8  # 1000_2
+
+
+def test_interleaved_key_orders_like_msb_planes():
+    # two words differing only in MSB of segment 0 must order by it
+    a = jnp.asarray([[0x80, 0, 0, 0]], jnp.uint8)
+    b = jnp.asarray([[0x7F, 0xFF, 0xFF, 0xFF]], jnp.uint8)
+    ka = np.asarray(isax.interleaved_key(a, 8))[0]
+    kb = np.asarray(isax.interleaved_key(b, 8))[0]
+    assert tuple(ka) > tuple(kb)
+
+
+def _pruning_gap(series, query):
+    """returns (mindist, euclid) for znormalized inputs."""
+    x = isax.znormalize(jnp.asarray(series, jnp.float32))
+    q = isax.znormalize(jnp.asarray(query, jnp.float32))
+    L = x.shape[-1]
+    p, w = isax.summarize(x)
+    qp = isax.paa(q)
+    lb = isax.mindist_isax_sq(qp, w, series_len=L)
+    ed = isax.euclidean_sq(q, x)
+    return np.asarray(lb), np.asarray(ed)
+
+
+def test_pruning_property_fixed(walks, queries):
+    lb, ed = _pruning_gap(walks[:256], queries[:1])
+    assert np.all(lb <= ed + 1e-3 * np.maximum(ed, 1.0))
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_pruning_property_hypothesis(seed):
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.standard_normal((8, 256)), axis=1)
+    q = np.cumsum(rng.standard_normal((1, 256)), axis=1)
+    lb, ed = _pruning_gap(x, q)
+    assert np.all(lb <= ed + 1e-3 * np.maximum(ed, 1.0)), \
+        f"pruning property violated: lb={lb}, ed={ed}"
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from([2, 4, 8]),
+       st.sampled_from([4, 8, 16]))
+def test_pruning_property_param_sweep(seed, bits, segments):
+    rng = np.random.default_rng(seed)
+    x = np.cumsum(rng.standard_normal((4, 64)), axis=1)
+    q = np.cumsum(rng.standard_normal((1, 64)), axis=1)
+    xz = isax.znormalize(jnp.asarray(x, jnp.float32))
+    qz = isax.znormalize(jnp.asarray(q, jnp.float32))
+    p, w = isax.summarize(xz, segments, bits)
+    qp = isax.paa(qz, segments)
+    lb = np.asarray(isax.mindist_isax_sq(qp, w, bits, bits, 64))
+    ed = np.asarray(isax.euclidean_sq(qz, xz))
+    assert np.all(lb <= ed + 1e-3 * np.maximum(ed, 1.0))
+
+
+def test_mindist_at_reduced_depth_is_looser():
+    """Internal-node bounds (fewer prefix bits) must be <= leaf bounds."""
+    rng = np.random.default_rng(3)
+    x = isax.znormalize(jnp.asarray(
+        np.cumsum(rng.standard_normal((16, 256)), 1), jnp.float32))
+    q = isax.znormalize(jnp.asarray(
+        np.cumsum(rng.standard_normal((1, 256)), 1), jnp.float32))
+    _, w = isax.summarize(x)
+    qp = isax.paa(q)
+    prev = None
+    for depth in (8, 4, 2, 1):
+        lb = np.asarray(isax.mindist_isax_sq(qp, w, depth))
+        if prev is not None:
+            assert np.all(lb <= prev + 1e-5)
+        prev = lb

@@ -1,0 +1,147 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret
+mode (CPU executes the kernel body in Python — bit-identical semantics)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _walks(n, L, seed=0, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(np.cumsum(rng.standard_normal((n, L)), 1), dtype)
+
+
+@pytest.mark.parametrize("n", [1, 7, 64, 300])
+@pytest.mark.parametrize("L,segments", [(256, 16), (128, 8), (64, 16)])
+def test_summarize_matches_ref_shapes(n, L, segments):
+    x = _walks(n, L)
+    paa_k, w_k = ops.summarize(x, segments=segments, interpret=True)
+    paa_r, w_r = ref.summarize_ref(x, segments=segments)
+    np.testing.assert_allclose(np.asarray(paa_k), np.asarray(paa_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_summarize_bits_sweep(bits):
+    x = _walks(50, 256, seed=3)
+    _, w_k = ops.summarize(x, bits=bits, interpret=True)
+    _, w_r = ref.summarize_ref(x, bits=bits)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+    assert int(jnp.max(w_k)) < (1 << bits)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_summarize_dtypes(dtype):
+    x = _walks(33, 256, seed=5, dtype=np.float32).astype(dtype)
+    paa_k, w_k = ops.summarize(x, interpret=True)
+    paa_r, w_r = ref.summarize_ref(x)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(paa_k, np.float32),
+                               np.asarray(paa_r, np.float32),
+                               rtol=tol, atol=tol)
+    diff = np.abs(np.asarray(w_k, np.int32) - np.asarray(w_r, np.int32))
+    if dtype == jnp.float32:
+        assert (diff == 0).all()
+    else:
+        # bf16 epsilon (~0.008 at |x|~1) straddles 8-bit region boundaries
+        # (width ~0.01 near the middle): symbols may flip, but only to the
+        # NEIGHBORING region, and mostly agree
+        assert diff.max() <= 1 and (diff == 0).mean() > 0.7
+
+
+def test_summarize_no_znorm():
+    x = _walks(16, 256)
+    paa_k, w_k = ops.summarize(x, znorm=False, interpret=True)
+    paa_r, w_r = ref.summarize_ref(x, znorm=False)
+    np.testing.assert_allclose(np.asarray(paa_k), np.asarray(paa_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(w_k), np.asarray(w_r))
+
+
+@pytest.mark.parametrize("Q,NL", [(1, 16), (8, 129), (32, 1024), (3, 7)])
+def test_lb_distance_matches_ref(Q, NL):
+    rng = np.random.default_rng(1)
+    w = 16
+    qp = jnp.asarray(rng.standard_normal((Q, w)), jnp.float32)
+    lo = jnp.asarray(rng.standard_normal((NL, w)) - 0.5, jnp.float32)
+    hi = lo + jnp.asarray(np.abs(rng.standard_normal((NL, w))), jnp.float32)
+    d_k = ops.lb_distance(qp, lo, hi, series_len=256, interpret=True)
+    d_r = ref.lb_distance_ref(qp, lo, hi, series_len=256)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("Q,N,L", [(1, 64, 256), (16, 1000, 256),
+                                   (5, 33, 128), (32, 4096, 64)])
+def test_ed_argmin_matches_ref(Q, N, L):
+    q = _walks(Q, L, seed=2)
+    xs = _walks(N, L, seed=9)
+    d_k, i_k = ops.ed_argmin(q, xs, interpret=True)
+    d_r, i_r = ref.ed_argmin_ref(q, xs)
+    np.testing.assert_allclose(np.asarray(d_k), np.asarray(d_r),
+                               rtol=1e-4, atol=1e-4)
+    ties = np.asarray(i_k) != np.asarray(i_r)
+    if ties.any():   # argmin ties: distances must match exactly enough
+        np.testing.assert_allclose(np.asarray(d_k)[ties],
+                                   np.asarray(d_r)[ties], rtol=1e-4)
+
+
+def test_kernels_compose_with_index_pipeline(walks):
+    """The kernels ARE the stage implementations: summarize -> lb -> ed
+    reproduces exact 1-NN on a small collection."""
+    x = jnp.asarray(walks[:512])
+    q = jnp.asarray(walks[5:6]) + 0.01
+    from repro.core import isax, search_bruteforce
+    paa, words = ops.summarize(x, interpret=True)
+    d, i = ops.ed_argmin(isax.znormalize(q), isax.znormalize(x),
+                         interpret=True)
+    db, ib = search_bruteforce(x, q)
+    # near-zero distance (q is a perturbed member): matmul form clamps to
+    # 0 while the oracle recomputes ~2e-6 directly — atol covers it
+    np.testing.assert_allclose(np.sqrt(np.asarray(d)), np.asarray(db),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("B,Hq,Hkv,T,dh", [(2, 4, 2, 128, 64),
+                                           (1, 8, 8, 256, 32),
+                                           (2, 2, 1, 64, 128),
+                                           (1, 4, 4, 512, 64)])
+def test_flash_attention_matches_ref(B, Hq, Hkv, T, dh):
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(jax.random.fold_in(k, 1), (B, Hq, T, dh))
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (B, Hkv, T, dh))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (B, Hkv, T, dh))
+    o1 = ops.flash_attention(q, kk, v, block_q=64, interpret=True)
+    o2 = ref.flash_attention_ref(q, kk, v)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 128])
+def test_flash_attention_sliding_window(window):
+    k = jax.random.PRNGKey(1)
+    q = jax.random.normal(jax.random.fold_in(k, 1), (1, 2, 256, 64))
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (1, 2, 256, 64))
+    v = jax.random.normal(jax.random.fold_in(k, 3), (1, 2, 256, 64))
+    o1 = ops.flash_attention(q, kk, v, window=window, block_q=64,
+                             interpret=True)
+    o2 = ref.flash_attention_ref(q, kk, v, window=window)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    k = jax.random.PRNGKey(2)
+    q = jax.random.normal(jax.random.fold_in(k, 1), (1, 2, 128, 64)).astype(dtype)
+    kk = jax.random.normal(jax.random.fold_in(k, 2), (1, 2, 128, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(k, 3), (1, 2, 128, 64)).astype(dtype)
+    o1 = ops.flash_attention(q, kk, v, block_q=128, interpret=True)
+    o2 = ref.flash_attention_ref(q, kk, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), rtol=tol, atol=tol)

@@ -1,0 +1,138 @@
+"""Refresh (Alg. 2) + baselines: traversing property and lock-freedom
+under delays and permanent crashes — the Figure 7/8 behaviours as tests."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.refresh import Injectors, RefreshExecutor, RefreshRun
+from repro.core.baselines import CasBased, DoAllSplit, FaiBased
+from repro.core.traverse import (ArrayTraverse, SequentialExecutor,
+                                 check_traversing_property)
+
+
+def _run(executor_cls=RefreshExecutor, n=200, n_threads=4, injectors=None,
+         **kw):
+    ex = executor_cls(n_threads=n_threads, injectors=injectors, **kw) \
+        if injectors or kw else executor_cls(n_threads=n_threads)
+    t = ArrayTraverse(ex)
+    for i in range(n):
+        t.put(i)
+    seen = []
+    lock = threading.Lock()
+
+    def f(e):
+        with lock:
+            seen.append(e)
+
+    t.traverse(f)
+    return ex, seen
+
+
+def test_traversing_property_no_faults():
+    ex, seen = _run()
+    assert check_traversing_property(200, seen)
+
+
+@pytest.mark.parametrize("excls", [DoAllSplit, FaiBased, CasBased])
+def test_baselines_traversing_property(excls):
+    ex, seen = _run(excls)
+    assert check_traversing_property(200, seen)
+
+
+def test_refresh_with_delayed_thread():
+    """Figure 7: one slow thread; others must help and finish everything."""
+    inj = Injectors(delay=lambda tid, lvl, i: 0.002 if tid == 0 else 0.0)
+    ex, seen = _run(injectors=inj, n=120)
+    assert check_traversing_property(120, seen)
+    assert ex.last_stats.wall_time < 2.0, "helpers did not pick up the slack"
+
+
+def test_refresh_with_crashed_threads():
+    """Figure 8: permanent thread failures; survivors complete the stage."""
+    crashed = set()
+
+    def crash(tid, lvl, i):
+        # threads 1 and 2 die on the first element they touch
+        if tid in (1, 2) and tid not in crashed:
+            crashed.add(tid)
+            return True
+        return False
+
+    ex, seen = _run(injectors=Injectors(crash=crash), n=400)
+    assert check_traversing_property(400, seen)
+    # on a loaded 1-core box a designated thread may never get scheduled
+    # before the work runs out; whoever DID run must have crashed
+    assert ex.last_stats.crashed_workers == len(crashed)
+
+
+def test_refresh_all_but_one_crash():
+    """Lock-freedom: progress as long as ONE worker survives."""
+    def crash(tid, lvl, i):
+        return tid != 3 and i % 2 == 0
+
+    ex, seen = _run(injectors=Injectors(crash=crash), n=100, n_threads=4)
+    assert check_traversing_property(100, seen)
+
+
+@pytest.mark.parametrize("excls", [FaiBased, CasBased, DoAllSplit])
+def test_baselines_survive_crashes(excls):
+    def crash(tid, lvl, i):
+        return tid == 0 and i == 5
+
+    ex, seen = _run(excls, injectors=Injectors(crash=crash), n=80)
+    assert check_traversing_property(80, seen)
+
+
+def test_helping_duplicates_are_possible_but_bounded():
+    """At-least-once, not exactly-once: applications >= n, and helping adds
+    at most (threads-1) x parts duplicates in the worst case."""
+    inj = Injectors(delay=lambda tid, lvl, i: 0.001 if tid == 0 else 0.0)
+    ex, seen = _run(injectors=inj, n=64, n_threads=4)
+    assert len(seen) >= 64
+    assert len(seen) <= 64 * 4
+
+
+def test_mode_switch_on_helping():
+    """A delayed owner must observe the help flag and switch to standard."""
+    inj = Injectors(delay=lambda tid, lvl, i:
+                    0.01 if (tid == 0 and i < 8) else 0.0)
+    ex, _ = _run(injectors=inj, n=64, n_threads=4,
+                 )
+    # helping happened => either mode switches or helped parts recorded
+    st = ex.last_stats
+    assert st.helped_parts >= 0  # smoke: fields populated
+    assert st.applications >= 64
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 6), st.integers(10, 80))
+def test_traversing_property_random_crashes(seed, n_threads, n):
+    """Property: any crash pattern that leaves >= 1 surviving thread still
+    satisfies the traversing property."""
+    rng = np.random.default_rng(seed)
+    surviving = int(rng.integers(0, n_threads))
+
+    def crash(tid, lvl, i):
+        return tid != surviving and bool(rng.random() < 0.05)
+
+    ex = RefreshExecutor(n_threads=n_threads, injectors=Injectors(crash=crash))
+    t = ArrayTraverse(ex)
+    for i in range(n):
+        t.put(i)
+    seen = []
+    lock = threading.Lock()
+    t.traverse(lambda e: (lock.acquire(), seen.append(e), lock.release()))
+    assert check_traversing_property(n, seen)
+
+
+def test_sequential_executor_exactly_once():
+    t = ArrayTraverse(SequentialExecutor())
+    for i in range(50):
+        t.put(i)
+    seen = []
+    t.traverse(seen.append)
+    assert seen == list(range(50))

@@ -1,0 +1,56 @@
+"""Runtime FT machinery: elastic controller, straggler monitor, mesh
+planning for surviving pods."""
+
+import pytest
+
+from repro.runtime.elastic import (ElasticController, MeshSpec,
+                                   StragglerMonitor, plan_mesh_for)
+
+
+def test_plan_mesh_for_pod_counts():
+    m1 = plan_mesh_for(1)
+    assert m1.shape == (16, 16) and m1.axes == ("data", "model")
+    m2 = plan_mesh_for(2)
+    assert m2.shape == (2, 16, 16) and m2.axes == ("pod", "data", "model")
+    m3 = plan_mesh_for(3)
+    assert m3.shape == (3, 16, 16)
+
+
+def test_elastic_controller_detects_pod_loss():
+    world = {"pods": 2}
+    ctl = ElasticController(lambda: world["pods"])
+    assert ctl.check() is None                 # steady state
+    world["pods"] = 1                          # pod dies
+    spec = ctl.check()
+    assert spec is not None and spec.shape == (16, 16)
+    assert ctl.check() is None                 # re-meshed, steady again
+    world["pods"] = 2                          # pod rejoins
+    spec = ctl.check()
+    assert spec.shape == (2, 16, 16)
+
+
+def test_elastic_controller_total_loss_raises():
+    world = {"pods": 1}
+    ctl = ElasticController(lambda: world["pods"])
+    world["pods"] = 0
+    with pytest.raises(RuntimeError):
+        ctl.check()
+
+
+def test_straggler_monitor_flags_slow_worker():
+    mon = StragglerMonitor(n_workers=4, factor=1.5)
+    for step in range(10):
+        for w in range(4):
+            mon.record(w, 1.0 if w != 2 else 2.5)
+    assert mon.stragglers() == [2]
+    assert abs(mon.median() - 1.0) < 0.2
+
+
+def test_straggler_monitor_recovers():
+    mon = StragglerMonitor(n_workers=2, factor=1.5, alpha=0.9)
+    mon.record(0, 1.0)
+    mon.record(1, 5.0)
+    assert mon.stragglers() == [1]
+    for _ in range(6):
+        mon.record(1, 1.0)                     # back to normal
+    assert mon.stragglers() == []
