@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_index, build_index_host, search
+from repro.api import FreshIndex, IndexConfig
+from repro.core import build_index_host
 from repro.core.baselines import CasBased, DoAllSplit, FaiBased
 from repro.core.refresh import Injectors, RefreshExecutor
 from repro.core.tree import FatLeafTree
@@ -55,12 +56,16 @@ def fig3_thread_scaling() -> List[str]:
         out.append(row(f"fig3/build/fresh/t{nt}", t_fresh,
                        f"speedup_vs_block={t_block/t_fresh:.2f}"))
         out.append(row(f"fig3/build/messi_like/t{nt}", t_block))
-    # query answering (device plane, jitted)
-    idx = build_index(jnp.asarray(walks), leaf_capacity=64)
+    # query answering (device plane, jitted, through the facade)
+    index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
     qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
-    t_q = timeit(lambda: jax.block_until_ready(search(idx, qs)))
+    t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
     out.append(row("fig3/query/fresh_device", t_q,
                    f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
+    for k in (10, 100):
+        t_k = timeit(lambda: jax.block_until_ready(index.search(qs, k=k)))
+        out.append(row(f"fig3/query/fresh_device_k{k}", t_k,
+                       f"per_query_us={t_k/N_QUERIES*1e6:.0f}"))
     return out
 
 
@@ -69,12 +74,13 @@ def fig5_dataset_scaling() -> List[str]:
     for gen, tag in ((random_walk, "random"), (seismic_like, "seismic")):
         for n in (5_000, 20_000, 80_000):
             walks = gen(n, 256, seed=1)
-            raw = jnp.asarray(walks)
+            raw = jnp.asarray(walks)           # H2D outside the timed region
             t_b = timeit(lambda: jax.block_until_ready(
-                build_index(raw, leaf_capacity=64)), repeat=2)
-            idx = build_index(raw, leaf_capacity=64)
+                FreshIndex.build(raw, leaf_capacity=64).index.series),
+                repeat=2)
+            index = FreshIndex.build(raw, leaf_capacity=64)
             qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
-            t_q = timeit(lambda: jax.block_until_ready(search(idx, qs)))
+            t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
             out.append(row(f"fig5/{tag}/n{n}/build", t_b))
             out.append(row(f"fig5/{tag}/n{n}/query", t_q,
                            f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
@@ -84,10 +90,10 @@ def fig5_dataset_scaling() -> List[str]:
 def fig6a_query_difficulty() -> List[str]:
     out = []
     walks = random_walk(N_SERIES, 256, seed=2)
-    idx = build_index(jnp.asarray(walks), leaf_capacity=64)
+    index = FreshIndex.build(walks, leaf_capacity=64)
     for sigma in (0.01, 0.02, 0.05, 0.1):
         qs = jnp.asarray(query_workload(walks, N_QUERIES, sigma))
-        t_q = timeit(lambda: jax.block_until_ready(search(idx, qs)))
+        t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
         out.append(row(f"fig6a/sigma{sigma}", t_q,
                        f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
     return out

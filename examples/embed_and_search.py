@@ -1,6 +1,6 @@
 """The paper's technique as a first-class retrieval subsystem: embed
 documents with ANY assigned architecture (--arch), index the embeddings
-with FreSh, and serve exact nearest-neighbor queries.
+with the FreshIndex facade, and serve exact top-k nearest-neighbor queries.
 
     PYTHONPATH=src python examples/embed_and_search.py --arch mamba2-130m
 
@@ -15,13 +15,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import FreshIndex, IndexConfig
 from repro.configs import ARCH_IDS, smoke_config
-from repro.core import build_index, search, search_bruteforce
+from repro.core import search_bruteforce
 from repro.models import LM, param_values
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--arch", default="mamba2-130m", choices=ARCH_IDS)
 ap.add_argument("--docs", type=int, default=512)
+ap.add_argument("--topk", type=int, default=3)
 args = ap.parse_args()
 
 cfg = smoke_config(args.arch)
@@ -45,21 +47,24 @@ def embed(tokens):
 
 emb = np.asarray(embed(docs), np.float32)
 # FreSh indexes fixed-length series; embeddings are exactly that.  Pad the
-# feature dim up to a segment multiple.
+# feature dim up to a segment multiple (IndexConfig.validate_series_len
+# would reject a mismatch instead of silently mis-summarizing).
 D = emb.shape[1]
-segs = 16
-pad = (-D) % segs
+index_cfg = IndexConfig(segments=16, leaf_capacity=16)
+pad = (-D) % index_cfg.segments
 if pad:
     emb = np.pad(emb, ((0, 0), (0, pad)))
 
-idx = build_index(jnp.asarray(emb), leaf_capacity=16)
+index = FreshIndex.build(emb, index_cfg)
 queries = emb[:8] + 0.01 * np.random.default_rng(2).standard_normal(
     (8, emb.shape[1])).astype(np.float32)
-d, i = search(idx, jnp.asarray(queries))
-db, ib = search_bruteforce(jnp.asarray(emb), jnp.asarray(queries))
-print("query ->  nearest doc (FreSh) | (brute force)")
+K = args.topk
+d, i = index.search(queries, k=K)
+db, ib = search_bruteforce(jnp.asarray(emb), jnp.asarray(queries), k=K)
+print(f"query ->  top-{K} docs (FreSh) | (brute force)")
 for k in range(8):
-    print(f"  q{k}: doc {int(i[k]):4d} d={float(d[k]):.4f} | "
-          f"doc {int(ib[k]):4d} d={float(db[k]):.4f}")
+    print(f"  q{k}: docs {np.asarray(i[k]).tolist()} | "
+          f"{np.asarray(ib[k]).tolist()}")
 assert np.allclose(np.asarray(d), np.asarray(db), atol=1e-3)
-print(f"OK — exact retrieval over {cfg.name} embeddings.")
+assert np.array_equal(np.asarray(i), np.asarray(ib))
+print(f"OK — exact top-{K} retrieval over {cfg.name} embeddings.")

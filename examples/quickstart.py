@@ -1,23 +1,25 @@
-"""Quickstart: the paper's system in 30 lines.
+"""Quickstart: the paper's system in 30 lines, through the FreshIndex facade.
 
 Builds a FreSh index over 100k random-walk series (the paper's Random
-dataset), answers 100 exact 1-NN queries, and verifies exactness against
-brute force — Algorithm 1's four traverse-object stages run as the bulk
-SPMD pipeline described in DESIGN.md §2.
+dataset), answers 100 exact 10-NN queries, verifies exactness against the
+brute-force oracle, then demonstrates the rest of the lifecycle:
+incremental add -> compact, and save -> load.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
+import tempfile
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import build_index, index_stats, search, search_bruteforce
+from repro.api import FreshIndex, IndexConfig
+from repro.core import search_bruteforce
 from repro.data.synthetic import query_workload, random_walk
 
-N, L, Q = 100_000, 256, 100
+N, L, Q, K = 100_000, 256, 100, 10
 
 print(f"generating {N} random-walk series of length {L} ...")
 walks = random_walk(N, L, seed=0)
@@ -25,21 +27,38 @@ queries = query_workload(walks, Q, noise_sigma=0.05, seed=1)
 
 print("building the FreSh index (summarize -> sort -> leaves) ...")
 t0 = time.time()
-idx = build_index(jnp.asarray(walks), leaf_capacity=64)
-jax.block_until_ready(idx.series)
-print(f"  built in {time.time()-t0:.2f}s: {index_stats(idx)}")
+index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+jax.block_until_ready(index.index.series)
+print(f"  built in {time.time()-t0:.2f}s: {index.stats()}")
 
-print(f"answering {Q} exact 1-NN queries ...")
+print(f"answering {Q} exact {K}-NN queries ...")
 t0 = time.time()
-dist, ids = search(idx, jnp.asarray(queries))
+dist, ids = index.search(queries, k=K)
 jax.block_until_ready(dist)
 dt = time.time() - t0
 print(f"  {dt:.3f}s ({dt/Q*1e3:.2f} ms/query)")
 
 print("verifying exactness against brute force ...")
-bf_dist, bf_ids = search_bruteforce(jnp.asarray(walks), jnp.asarray(queries))
+bf_dist, bf_ids = search_bruteforce(jnp.asarray(walks),
+                                    jnp.asarray(queries), k=K)
 match = np.mean(np.asarray(ids) == np.asarray(bf_ids))
 err = np.max(np.abs(np.asarray(dist) - np.asarray(bf_dist)))
 print(f"  id match: {match*100:.1f}%  max |dist err|: {err:.2e}")
 assert err < 1e-3
-print("OK — exact answers, paper-faithful pipeline.")
+
+print("incremental add (Jiffy-style delta) -> compact ...")
+fresh_batch = random_walk(1_000, L, seed=2)
+index.add(fresh_batch)                    # searchable immediately
+d2, i2 = index.search(queries, k=1)
+index.compact()                           # merge delta via bulk rebuild
+d3, i3 = index.search(queries, k=1)
+assert np.array_equal(np.asarray(i2), np.asarray(i3))
+print(f"  {index.stats()['n_series']} series after compact, answers stable")
+
+print("save -> load round trip (no rebuild) ...")
+with tempfile.TemporaryDirectory() as ckdir:
+    index.save(ckdir)
+    restored = FreshIndex.load(ckdir)
+    d4, i4 = restored.search(queries, k=K)
+assert np.array_equal(np.asarray(i4)[:, 0], np.asarray(i3))
+print("OK — exact answers, paper-faithful pipeline, one facade.")

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# End-to-end smoke: build -> k-NN search -> add/compact -> save/load via
+# the FreshIndex facade, on whatever backend jax finds (CPU in CI).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+python examples/quickstart.py

@@ -1,0 +1,394 @@
+"""Unified FreshIndex facade: one config-driven API for the whole index
+lifecycle — build, k-NN search, incremental add, shard, checkpoint.
+
+The paper frames FreSh as a modular pipeline of traverse-object stages
+(BC -> TP -> PS/RS); this module is the single public surface over that
+pipeline.  All tuning knobs live in one frozen `IndexConfig`; the
+`FreshIndex` object carries them through every stage so segment counts,
+bit depths and bounds can never silently disagree between build and query
+time (the bug class `prepare_queries` used to have).
+
+Quickstart::
+
+    from repro.api import FreshIndex, IndexConfig
+
+    index = FreshIndex.build(series)                     # defaults
+    index = FreshIndex.build(series, IndexConfig(leaf_capacity=32,
+                                                 bound="paabox"))
+    dist, ids = index.search(queries, k=10)              # exact k-NN
+
+    index.add(new_batch)          # delta-buffered, searchable immediately
+    index.compact()               # merge the delta via rebuild
+
+    index.shard(mesh)             # leaves block-sharded over mesh axis
+    index.save("ckpt/")           # config + arrays
+    index = FreshIndex.load("ckpt/")                     # no rebuild
+
+Migration table (old free functions -> facade):
+
+    ====================================  ================================
+    old call                              new call
+    ====================================  ================================
+    build_index(x, leaf_capacity=...)     FreshIndex.build(x, IndexConfig(
+                                              leaf_capacity=...))
+    search(idx, q)                        index.search(q)           (1-NN)
+    search(idx, q, max_rounds=r)          index.search(q, max_rounds=r)
+    (no k-NN equivalent)                  index.search(q, k=10)
+    search_bruteforce(x, q)               search_bruteforce(x, q, k=...)
+    shard_index(idx, mesh)  +             index.shard(mesh)  then
+      make_sharded_search(mesh)(idx, q)     index.search(q, k=...)
+    save_checkpoint(dir, step, idx)       index.save(dir)
+    load_checkpoint(dir, like)            FreshIndex.load(dir)
+    (no incremental insert)               index.add(batch); index.compact()
+    ====================================  ================================
+
+The old functions remain importable from `repro.core` and are the engine
+under this facade; new code should not call them directly.
+
+Incremental adds follow Jiffy's batch-update idea (lock-free skip list
+with batch updates, arXiv:2102.01044): recent series live in an unsorted
+delta buffer that every query scans EXACTLY (brute force) alongside the
+pruned main index, and `compact()` merges the delta into the main index in
+one bulk rebuild — the expeditive/standard analogue of Jiffy's batch
+merge.  Search results are therefore always exact, with or without a
+pending delta.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import load_arrays, save_checkpoint
+from repro.core import isax
+from repro.core.index import FlatIndex, build_index, index_stats, pad_leaves
+from repro.core.search import (make_sharded_search, search as _search,
+                               search_bruteforce, shard_index)
+
+_BOUNDS = ("prefix", "symbox", "paabox")
+_BACKENDS = ("ref", "pallas")
+_DTYPES = ("float32", "bfloat16", "float16")
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    """Every knob of the index lifecycle in one frozen, hashable place.
+
+    segments       PAA/iSAX word length w (series length must divide by it)
+    bits           symbol cardinality 2^bits
+    leaf_capacity  series per flat leaf
+    bound          leaf lower bound: 'prefix' (paper MINDIST) | 'symbox'
+                   | 'paabox' (tightest)
+    znorm          z-normalize series and queries (the paper's setting)
+    dtype          storage dtype of the series matrix; search math is f32
+    backend        summarization/pruning kernels: 'pallas' (Mosaic on TPU,
+                   interpret elsewhere) | 'ref' (pure jnp)
+    """
+    segments: int = isax.SEGMENTS
+    bits: int = isax.SAX_BITS
+    leaf_capacity: int = 64
+    bound: str = "prefix"
+    znorm: bool = True
+    dtype: str = "float32"
+    backend: str = "ref"
+
+    def __post_init__(self):
+        if self.bound not in _BOUNDS:
+            raise ValueError(f"bound must be one of {_BOUNDS}, "
+                             f"got {self.bound!r}")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.dtype not in _DTYPES:
+            raise ValueError(f"dtype must be one of {_DTYPES}, "
+                             f"got {self.dtype!r}")
+        if self.segments < 1 or self.bits < 1 or self.bits > 8:
+            raise ValueError("need segments >= 1 and 1 <= bits <= 8")
+        if self.leaf_capacity < 1:
+            raise ValueError("leaf_capacity must be >= 1")
+
+    def validate_series_len(self, L: int) -> None:
+        if L % self.segments != 0:
+            raise ValueError(
+                f"series length {L} is not divisible by segments="
+                f"{self.segments}; pick a divisor or pad the series")
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "IndexConfig":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in known})
+
+
+class FreshIndex:
+    """The index lifecycle object.  Construct via build() or load()."""
+
+    def __init__(self, idx: FlatIndex, config: IndexConfig):
+        self._idx = idx
+        self.config = config
+        # No host copy of the dataset is retained: compact() reconstructs
+        # the (normalized) series from the index arrays on demand via
+        # _reconstruct_data(), so the facade adds O(1) memory on top of
+        # the device-resident index.
+        self._n_base = int(jnp.sum(idx.valid))
+        self._delta: list = []                  # pending unsorted batches
+        self._delta_cat: Optional[np.ndarray] = None    # concat cache
+        self._mesh = None
+        self._mesh_axis = "data"
+        self._sharded_fns: dict = {}            # (k, round_leaves, ...) -> fn
+
+    # ------------------------------------------------------------------ #
+    # construction
+    # ------------------------------------------------------------------ #
+    @classmethod
+    def build(cls, data, config: Optional[IndexConfig] = None,
+              **overrides) -> "FreshIndex":
+        """Bulk-build an index over (n, L) series.
+
+        `overrides` are IndexConfig fields, so the two spellings
+        `build(x, IndexConfig(leaf_capacity=32))` and
+        `build(x, leaf_capacity=32)` are equivalent.
+        """
+        cfg = config or IndexConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        raw = jnp.asarray(data)
+        if raw.ndim != 2:
+            raise ValueError(f"data must be (n, L), got shape {raw.shape}")
+        cfg.validate_series_len(raw.shape[1])
+        idx = build_index(raw, segments=cfg.segments,
+                          bits=cfg.bits, leaf_capacity=cfg.leaf_capacity,
+                          znorm=cfg.znorm, bound=cfg.bound,
+                          backend=cfg.backend)
+        idx = _cast_storage(idx, cfg.dtype)
+        return cls(idx, cfg)
+
+    # ------------------------------------------------------------------ #
+    # introspection
+    # ------------------------------------------------------------------ #
+    @property
+    def index(self) -> FlatIndex:
+        """The underlying device-resident FlatIndex (read-only use)."""
+        return self._idx
+
+    @property
+    def n_series(self) -> int:
+        return self._n_base + self.n_pending
+
+    @property
+    def n_pending(self) -> int:
+        return sum(b.shape[0] for b in self._delta)
+
+    @property
+    def series_len(self) -> int:
+        return self._idx.series.shape[1]
+
+    def stats(self) -> dict:
+        st = index_stats(self._idx)
+        st["n_pending"] = self.n_pending
+        st["sharded"] = self._mesh is not None
+        return st
+
+    def __repr__(self) -> str:
+        return (f"FreshIndex(n={self.n_series}, L={self.series_len}, "
+                f"pending={self.n_pending}, config={self.config})")
+
+    # ------------------------------------------------------------------ #
+    # search
+    # ------------------------------------------------------------------ #
+    def search(self, queries, k: int = 1, *, round_leaves: int = 8,
+               sync_every: int = 1, max_rounds: Optional[int] = None
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """Exact k-NN.  Returns (dist, ids): shape (Q,) for k == 1,
+        (Q, k) ascending by distance otherwise.  Any pending delta buffer
+        is scanned exactly and merged into the result, so adds are visible
+        to queries immediately, before compact().  `max_rounds` caps the
+        refinement loop (approximate search; distances become upper
+        bounds)."""
+        q = jnp.asarray(queries, jnp.float32)
+        if q.ndim == 1:
+            q = q[None]
+        if q.shape[-1] != self.series_len:
+            raise ValueError(
+                f"queries have length {q.shape[-1]}, index holds series of "
+                f"length {self.series_len}")
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if k > self.n_series:
+            raise ValueError(f"k={k} exceeds the {self.n_series} indexed "
+                             f"series")
+        if self._mesh is not None:
+            key = (k, round_leaves, sync_every, max_rounds)
+            fn = self._sharded_fns.get(key)
+            if fn is None:
+                fn = make_sharded_search(
+                    self._mesh, axis=self._mesh_axis, k=k,
+                    round_leaves=round_leaves, sync_every=sync_every,
+                    max_rounds=max_rounds, znorm=self.config.znorm,
+                    backend=self.config.backend)
+                self._sharded_fns[key] = fn
+            d, i = fn(self._idx, q)
+        else:
+            d, i = _search(self._idx, q, k=k, round_leaves=round_leaves,
+                           znorm=self.config.znorm, max_rounds=max_rounds,
+                           backend=self.config.backend)
+        if not self._delta:
+            return d, i
+        return self._merge_delta(q, d, i, k)
+
+    def _merge_delta(self, q, d, i, k: int):
+        """Exact scan of the unsorted delta, folded into the main top-k.
+
+        The concatenated delta is cached between add() calls; note the
+        brute-force scan re-jits whenever the delta's row count changes,
+        so keep deltas small relative to compact() frequency."""
+        if self._delta_cat is None:
+            self._delta_cat = np.concatenate(self._delta, axis=0)
+        delta = self._delta_cat
+        kd = min(k, delta.shape[0])
+        dd, di = search_bruteforce(jnp.asarray(delta), q, k=kd,
+                                   znorm=self.config.znorm)
+        base = self._n_base
+        d2, i2 = jnp.atleast_2d(d.T).T, jnp.atleast_2d(i.T).T
+        dd2, di2 = jnp.atleast_2d(dd.T).T, jnp.atleast_2d(di.T).T
+        alld = jnp.concatenate([d2, dd2], axis=1)
+        alli = jnp.concatenate([i2, di2 + base], axis=1)
+        neg, pos = jax.lax.top_k(-alld, k)
+        md = -neg
+        mi = jnp.take_along_axis(alli, pos, axis=1)
+        if k == 1:
+            return md[:, 0], mi[:, 0]
+        return md, mi
+
+    # ------------------------------------------------------------------ #
+    # incremental updates (Jiffy-style batch delta)
+    # ------------------------------------------------------------------ #
+    def add(self, batch) -> "FreshIndex":
+        """Append a batch of series to the delta buffer.  O(1), no
+        rebuild; the batch is immediately visible to search() via an exact
+        delta scan.  Ids continue after the existing series."""
+        b = np.asarray(batch, np.float32)
+        if b.ndim == 1:
+            b = b[None]
+        if b.ndim != 2 or b.shape[1] != self.series_len:
+            raise ValueError(
+                f"batch must be (m, {self.series_len}), got {b.shape}")
+        self._delta.append(b)
+        self._delta_cat = None
+        return self
+
+    def compact(self) -> "FreshIndex":
+        """Merge the delta buffer into the main index with one bulk
+        rebuild (Jiffy's batch merge).  With float32 storage (the
+        default), results after compact() are identical to a fresh build
+        over the concatenated data: the base series are reconstructed
+        from the index arrays (already normalized when config.znorm), the
+        delta is normalized to match, and the rebuild runs with
+        znorm=False, so no series is ever normalized twice.  With half
+        storage (bfloat16/float16) the rebuild necessarily starts from
+        the rounded stored series — each compact re-rounds through the
+        storage dtype, trading exact fresh-build equivalence for the 2x
+        memory the config asked for."""
+        if not self._delta:
+            return self
+        cfg = self.config
+        base = self._reconstruct_data()
+        delta = np.concatenate(self._delta, axis=0)
+        if cfg.znorm:
+            delta = np.asarray(
+                isax.znormalize(jnp.asarray(delta, jnp.float32)), np.float32)
+        data = jnp.asarray(np.concatenate([base, delta], axis=0))
+        idx = build_index(data, segments=cfg.segments, bits=cfg.bits,
+                          leaf_capacity=cfg.leaf_capacity, znorm=False,
+                          bound=cfg.bound, backend=cfg.backend)
+        self._idx = _cast_storage(idx, cfg.dtype)
+        self._n_base = int(data.shape[0])
+        self._delta = []
+        self._delta_cat = None
+        if self._mesh is not None:
+            mesh, axis = self._mesh, self._mesh_axis
+            self._mesh = None
+            self.shard(mesh, axis=axis)
+        return self
+
+    # ------------------------------------------------------------------ #
+    # sharding
+    # ------------------------------------------------------------------ #
+    def shard(self, mesh, axis: str = "data") -> "FreshIndex":
+        """Block-shard the leaves (and their entries) over a mesh axis and
+        route subsequent search() calls through the sharded expeditive/
+        standard path."""
+        n_dev = mesh.shape[axis]
+        self._idx = shard_index(pad_leaves(self._idx, n_dev), mesh, axis=axis)
+        self._mesh = mesh
+        self._mesh_axis = axis
+        self._sharded_fns = {}
+        return self
+
+    # ------------------------------------------------------------------ #
+    # persistence
+    # ------------------------------------------------------------------ #
+    def save(self, directory: str, step: int = 0) -> str:
+        """Persist config + index arrays (+ any pending delta).  The saved
+        checkpoint restores with load() without a rebuild."""
+        L = self.series_len
+        delta = (np.concatenate(self._delta, axis=0) if self._delta
+                 else np.zeros((0, L), np.float32))
+        tree = {"index": self._idx._asdict(), "delta": delta}
+        extra = {"config": self.config.to_dict(),
+                 "n_series": self._n_base,
+                 "format": "fresh-index-v1"}
+        return save_checkpoint(directory, step, tree, extra=extra)
+
+    @classmethod
+    def load(cls, directory: str, step: Optional[int] = None) -> "FreshIndex":
+        """Restore a save()d index: config + arrays, no rebuild.  The
+        restored index is unsharded; call shard(mesh) to re-place it."""
+        arrays, manifest = load_arrays(directory, step=step)
+        extra = manifest.get("extra", {})
+        if extra.get("format") != "fresh-index-v1":
+            raise ValueError(
+                f"{directory} is not a FreshIndex checkpoint "
+                f"(format={extra.get('format')!r}); use "
+                f"repro.checkpoint.load_checkpoint for raw pytrees")
+        cfg = IndexConfig.from_dict(extra["config"])
+        fields = FlatIndex._fields
+        idx = FlatIndex(**{f: jnp.asarray(arrays[f"index/{f}"])
+                           for f in fields})
+        out = cls(idx, cfg)
+        saved_n = extra.get("n_series")
+        if saved_n is not None and saved_n != out._n_base:
+            raise ValueError(
+                f"corrupt checkpoint: manifest records {saved_n} series "
+                f"but the index arrays hold {out._n_base}")
+        delta = arrays.get("delta")
+        if delta is not None and delta.shape[0]:
+            out._delta = [np.asarray(delta, np.float32)]
+        return out
+
+    def _reconstruct_data(self) -> np.ndarray:
+        """Series in original id order, recovered from the leaf-ordered
+        index arrays via the stored permutation (padding rows dropped)."""
+        series = np.asarray(jax.device_get(self._idx.series), np.float32)
+        perm = np.asarray(jax.device_get(self._idx.perm))
+        valid = perm >= 0
+        out = np.zeros((int(valid.sum()), series.shape[1]), np.float32)
+        out[perm[valid]] = series[valid]
+        return out
+
+
+def _cast_storage(idx: FlatIndex, dtype: str) -> FlatIndex:
+    """Cast the bulk series matrix to the configured storage dtype.
+    f32 is the exact default; half formats trade exactness of the final
+    refinement distances for 2x HBM capacity (search math stays f32 via
+    preferred_element_type)."""
+    if dtype == "float32":
+        return idx
+    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float16
+    return idx._replace(series=idx.series.astype(dt))

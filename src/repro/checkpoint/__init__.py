@@ -1,4 +1,4 @@
 """Sharded checkpointing: save/restore, async writes, elastic re-shard."""
 
-from .store import (CheckpointManager, load_checkpoint,  # noqa: F401
-                    save_checkpoint)
+from .store import (CheckpointManager, load_arrays,  # noqa: F401
+                    load_checkpoint, save_checkpoint)

@@ -64,9 +64,15 @@ def save_checkpoint(directory: str, step: int, tree, *,
     for key, leaf in flat.items():
         arr = np.asarray(jax.device_get(leaf))
         fname = key.replace("/", "__") + ".npy"
+        dtype_str = str(arr.dtype)
+        if dtype_str == "bfloat16":
+            # np.save writes ml_dtypes arrays as raw void (|V2), which
+            # np.load cannot hand back to jax; store the bit pattern as
+            # uint16 and record the logical dtype in the manifest
+            arr = arr.view(np.uint16)
         np.save(os.path.join(tmp, fname), arr)
         manifest["leaves"][key] = {
-            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            "file": fname, "shape": list(arr.shape), "dtype": dtype_str}
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
@@ -88,6 +94,33 @@ def latest_step(directory: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _decode_leaf(arr: np.ndarray, dtype_str: str) -> np.ndarray:
+    """Undo the save-side bfloat16 -> uint16 bit-pattern encoding."""
+    if dtype_str == "bfloat16":
+        return arr.view(jax.numpy.bfloat16)
+    return arr
+
+
+def load_arrays(directory: str, *, step: Optional[int] = None
+                ) -> "tuple[Dict[str, np.ndarray], dict]":
+    """Load a checkpoint WITHOUT a template tree: returns the flat
+    {leaf-path: np.ndarray} dict plus the manifest.  This is how callers
+    that know their own structure (e.g. the FreshIndex facade, which
+    rebuilds a FlatIndex from field names) restore without first
+    constructing a like-shaped pytree."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {directory}")
+    path = os.path.join(directory, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    arrays = {key: _decode_leaf(np.load(os.path.join(path, info["file"])),
+                                info["dtype"])
+              for key, info in manifest["leaves"].items()}
+    return arrays, manifest
+
+
 def load_checkpoint(directory: str, like_tree, *, step: Optional[int] = None,
                     shardings=None):
     """Restore into the structure of `like_tree`.  `shardings` (same
@@ -105,7 +138,8 @@ def load_checkpoint(directory: str, like_tree, *, step: Optional[int] = None,
     out_flat = {}
     for key in flat_like:
         info = manifest["leaves"][key]
-        arr = np.load(os.path.join(path, info["file"]))
+        arr = _decode_leaf(np.load(os.path.join(path, info["file"])),
+                           info["dtype"])
         if key in flat_sh:
             out_flat[key] = jax.device_put(arr, flat_sh[key])
         else:

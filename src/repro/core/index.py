@@ -87,25 +87,34 @@ def leaf_regions(lo_sym: jnp.ndarray, hi_sym: jnp.ndarray,
 
 @functools.partial(jax.jit, static_argnames=("segments", "bits",
                                              "leaf_capacity", "znorm",
-                                             "bound"))
+                                             "bound", "backend"))
 def build_index(raw: jnp.ndarray,
                 *,
                 segments: int = isax.SEGMENTS,
                 bits: int = isax.SAX_BITS,
                 leaf_capacity: int = 64,
                 znorm: bool = True,
-                bound: str = "prefix") -> FlatIndex:
+                bound: str = "prefix",
+                backend: str = "ref") -> FlatIndex:
     """Bulk index construction (buffer-creation + tree-population stages).
 
     raw: (n, L) float series.  n is padded up to a leaf multiple.
     The global sort is the only step with cross-shard dataflow (an all-to-all
     under pjit) — everything else is embarrassingly local, mirroring the
     paper's "threads work on disjoint buffers/subtrees" design.
+
+    backend 'pallas' runs the summarization stage through the fused Pallas
+    kernel (Mosaic on TPU, interpret elsewhere); 'ref' is pure jnp.
     """
     n, L = raw.shape
     x = isax.znormalize(raw) if znorm else raw
     x = x.astype(jnp.float32)
-    p, w = isax.summarize(x, segments, bits)
+    if backend == "pallas":
+        from repro.kernels import ops
+        p, w = ops.summarize(x, segments=segments, bits=bits, znorm=False)
+        w = w.astype(jnp.uint8 if bits <= 8 else jnp.int32)
+    else:
+        p, w = isax.summarize(x, segments, bits)
 
     # ---- sort by interleaved key (leaf order of the round-robin tree) ----
     key = isax.interleaved_key(w, bits)                    # (n, lanes)
@@ -148,6 +157,43 @@ def build_index(raw: jnp.ndarray,
     return FlatIndex(series=x, paa=p, words=w, sq_norms=sq_norms,
                      perm=perm, valid=valid,
                      leaf_lo=lo, leaf_hi=hi, leaf_valid=leaf_valid)
+
+
+def pad_leaves(idx: FlatIndex, multiple: int) -> FlatIndex:
+    """Append fully-padded (invalid) leaves so n_leaves % multiple == 0.
+
+    Padded leaves carry empty regions at +inf (lower bound = +inf, never a
+    candidate) and perm == -1 entries, so search results are unchanged;
+    this is what lets any index shard over any device count.
+    """
+    target = -(-idx.n_leaves // multiple) * multiple
+    extra = target - idx.n_leaves
+    if extra == 0:
+        return idx
+    M = idx.leaf_capacity
+    L = idx.series.shape[1]
+    w = idx.paa.shape[1]
+    rows = extra * M
+    big = jnp.float32(1e30)
+
+    def cat(a, b):
+        return jnp.concatenate([a, b], axis=0)
+
+    return FlatIndex(
+        series=cat(idx.series, jnp.zeros((rows, L), idx.series.dtype)),
+        paa=cat(idx.paa, jnp.full((rows, w), jnp.inf, idx.paa.dtype)),
+        words=cat(idx.words, jnp.zeros((rows, w), idx.words.dtype)),
+        sq_norms=cat(idx.sq_norms, jnp.full((rows,), 1e30,
+                                            idx.sq_norms.dtype)),
+        perm=cat(idx.perm, jnp.full((rows,), -1, idx.perm.dtype)),
+        valid=cat(idx.valid, jnp.zeros((rows,), idx.valid.dtype)),
+        leaf_lo=cat(idx.leaf_lo, jnp.full((extra, w), big,
+                                          idx.leaf_lo.dtype)),
+        leaf_hi=cat(idx.leaf_hi, jnp.full((extra, w), big,
+                                          idx.leaf_hi.dtype)),
+        leaf_valid=cat(idx.leaf_valid, jnp.zeros((extra,),
+                                                 idx.leaf_valid.dtype)),
+    )
 
 
 def build_index_host(raw: np.ndarray, executor, *,

@@ -38,17 +38,46 @@ from .index import FlatIndex
 BIG = jnp.float32(1e30)
 
 
-def prepare_queries(queries: jnp.ndarray, znorm: bool = True):
+def prepare_queries(queries: jnp.ndarray, znorm: bool = True,
+                    segments: Optional[int] = None,
+                    index: Optional[FlatIndex] = None):
+    """Normalize queries and compute their PAA at the index's segment count.
+
+    The segment count MUST match the index the queries will be matched
+    against — a silent mismatch makes every lower bound meaningless.  Pass
+    either `index` (preferred: segments are derived from it, which is what
+    `FreshIndex.search` does) or an explicit `segments`; when neither is
+    given the library default `isax.SEGMENTS` is used.  Raises ValueError
+    when the series length is not divisible by the segment count (the old
+    behaviour silently fell back to `segments = L`, producing PAA widths
+    that disagree with the index).
+    """
+    if index is not None:
+        segments = index.paa.shape[1]
+    if segments is None:
+        segments = isax.SEGMENTS
+    L = queries.shape[-1]
+    if L % segments != 0:
+        raise ValueError(
+            f"query length {L} is not divisible by the index segment count "
+            f"{segments}; queries must have the same length as the indexed "
+            f"series (pad the feature dim up to a segment multiple)")
     q = isax.znormalize(queries) if znorm else queries
     q = q.astype(jnp.float32)
-    q_paa = isax.paa(q, segments=isax.SEGMENTS if q.shape[-1] % isax.SEGMENTS == 0
-                     else q.shape[-1])
-    return q, q_paa
+    return q, isax.paa(q, segments)
 
 
 def leaf_lower_bounds(idx: FlatIndex, q_paa: jnp.ndarray,
-                      series_len: int) -> jnp.ndarray:
-    """(Q, n_leaves) squared lower bounds — the pruning stage."""
+                      series_len: int, backend: str = "ref") -> jnp.ndarray:
+    """(Q, n_leaves) squared lower bounds — the pruning stage.
+
+    backend 'pallas' routes through the fused Pallas MINDIST kernel
+    (Mosaic on TPU, interpret mode elsewhere); 'ref' is the pure-jnp path.
+    """
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.lb_distance(q_paa, idx.leaf_lo, idx.leaf_hi,
+                               series_len=series_len)
     return isax.mindist_region_sq(q_paa[:, None, :],
                                   idx.leaf_lo[None],
                                   idx.leaf_hi[None],
@@ -75,24 +104,47 @@ def _refine_block(q: jnp.ndarray, q_sq: jnp.ndarray, idx: FlatIndex,
     return jnp.maximum(d2, 0.0), entry
 
 
-@functools.partial(jax.jit, static_argnames=("round_leaves", "znorm",
-                                             "max_rounds"))
+def _topk_merge(bsf_d: jnp.ndarray, bsf_e: jnp.ndarray,
+                d2: jnp.ndarray, entry: jnp.ndarray, k: int
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold a refined block into the per-query top-k BSF buffer.
+
+    bsf_d/bsf_e: (Q, k) ascending; d2/entry: (Q, B) new candidates.
+    Entries never repeat across rounds (leaves are disjoint; padded
+    duplicate leaves carry lb=BIG and are pruned before they get here), so
+    a plain merge-and-top_k keeps the buffer duplicate-free.
+    """
+    alld = jnp.concatenate([bsf_d, d2], axis=1)
+    alle = jnp.concatenate([bsf_e, entry], axis=1)
+    neg, pos = jax.lax.top_k(-alld, k)                  # ascending distances
+    return -neg, jnp.take_along_axis(alle, pos, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "round_leaves", "znorm",
+                                             "max_rounds", "backend"))
 def search(idx: FlatIndex, queries: jnp.ndarray, *,
-           round_leaves: int = 8, znorm: bool = True,
-           max_rounds: Optional[int] = None
+           k: int = 1, round_leaves: int = 8, znorm: bool = True,
+           max_rounds: Optional[int] = None, backend: str = "ref"
            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact 1-NN for a batch of queries.  Returns (dist, original_id)."""
+    """Exact k-NN for a batch of queries.
+
+    Returns (dist, original_id) of shape (Q,) when k == 1 (the historical
+    1-NN interface) and (Q, k) ascending-by-distance otherwise.  The BSF
+    scalar of the paper generalizes to a per-query top-k buffer: each
+    refinement round's real distances are folded in with jax.lax.top_k and
+    the PQ termination condition compares the next unrefined lower bound
+    against the k-th best-so-far (the buffer's worst member).
+    """
     L = idx.series.shape[1]
     Q = queries.shape[0]
     K = round_leaves
+    M = idx.leaf_capacity
     n_leaves = idx.n_leaves
 
-    q = isax.znormalize(queries).astype(jnp.float32) if znorm \
-        else queries.astype(jnp.float32)
-    q_paa = isax.paa(q, idx.paa.shape[1])
+    q, q_paa = prepare_queries(queries, znorm, index=idx)
     q_sq = jnp.sum(q * q, axis=-1)
 
-    lb = leaf_lower_bounds(idx, q_paa, L)              # (Q, n_leaves)
+    lb = leaf_lower_bounds(idx, q_paa, L, backend)     # (Q, n_leaves)
     order = jnp.argsort(lb, axis=1)                    # PQ order
     sorted_lb = jnp.take_along_axis(lb, order, axis=1)
 
@@ -108,50 +160,55 @@ def search(idx: FlatIndex, queries: jnp.ndarray, *,
                             constant_values=BIG)
 
     def cond(state):
-        cursor, bsf, _ = state
-        # PQ termination: stop when the best unrefined lb >= BSF everywhere
+        cursor, bsf_d, _ = state
+        # PQ termination: stop when the best unrefined lb >= the k-th BSF
         nxt = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
-        live = jnp.any(nxt[:, 0] < bsf)
+        live = jnp.any(nxt[:, 0] < bsf_d[:, -1])
         return jnp.logical_and(cursor < n_rounds_cap * K, live)
 
     def body(state):
-        cursor, bsf, best = state
+        cursor, bsf_d, bsf_e = state
         ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
         lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
         d2, entry = _refine_block(q, q_sq, idx, ids)
-        # prune: leaves whose lb >= current BSF contribute nothing
-        alive = (lbs < bsf[:, None])                     # (Q, K)
-        M = idx.leaf_capacity
+        # prune: leaves whose lb >= the current k-th BSF contribute nothing
+        alive = (lbs < bsf_d[:, -1:])                    # (Q, K)
         d2 = jnp.where(jnp.repeat(alive, M, axis=1), d2, BIG)
-        k = jnp.argmin(d2, axis=1)
-        dmin = jnp.take_along_axis(d2, k[:, None], axis=1)[:, 0]
-        emin = jnp.take_along_axis(entry, k[:, None], axis=1)[:, 0]
-        upd = dmin < bsf
-        bsf = jnp.where(upd, dmin, bsf)                  # CAS-min analogue
-        best = jnp.where(upd, idx.perm[emin], best)
-        return cursor + K, bsf, best
+        bsf_d, bsf_e = _topk_merge(bsf_d, bsf_e, d2, entry, k)
+        return cursor + K, bsf_d, bsf_e
 
-    state = (jnp.int32(0), jnp.full((Q,), BIG), jnp.full((Q,), -1, jnp.int32))
-    _, bsf, best = jax.lax.while_loop(cond, body, state)
-    # the argmin is exact; the matmul-form distance loses ~1e-3 absolute to
-    # f32 cancellation (||q||^2+||x||^2-2qx with ||.||^2 ~ L).  Recompute
-    # the winner's distance in direct form — one gather per query.
-    # Inverse permutation built by scatter: padding rows (perm == -1) are
-    # routed out-of-bounds and dropped (argsort would misalign them).
-    n_pad = idx.perm.shape[0]
-    scatter_idx = jnp.where(idx.perm >= 0, idx.perm, n_pad)
-    inv = jnp.zeros((n_pad,), jnp.int32).at[scatter_idx].set(
-        jnp.arange(n_pad, dtype=jnp.int32), mode="drop")
-    row = inv[jnp.maximum(best, 0)]
-    d_exact = jnp.sum(jnp.square(q - idx.series[row]), axis=-1)
-    return jnp.sqrt(jnp.where(best >= 0, d_exact, bsf)), best
+    state = (jnp.int32(0), jnp.full((Q, k), BIG),
+             jnp.zeros((Q, k), jnp.int32))
+    _, bsf_d, bsf_e = jax.lax.while_loop(cond, body, state)
+
+    # the top-k set is exact; the matmul-form distance loses ~1e-3 absolute
+    # to f32 cancellation (||q||^2+||x||^2-2qx with ||.||^2 ~ L).  Recompute
+    # the winners' distances in direct form — k gathers per query — and
+    # re-sort the buffer by the exact values.
+    found = bsf_d < BIG                                  # (Q, k)
+    ids = jnp.where(found, idx.perm[bsf_e], -1)
+    d_exact = jnp.sum(jnp.square(q[:, None, :] - idx.series[bsf_e]), axis=-1)
+    d = jnp.where(found, d_exact, bsf_d)
+    resort = jnp.argsort(d, axis=1)
+    d = jnp.sqrt(jnp.take_along_axis(d, resort, axis=1))
+    ids = jnp.take_along_axis(ids, resort, axis=1)
+    if k == 1:
+        return d[:, 0], ids[:, 0]
+    return d, ids
 
 
-@functools.partial(jax.jit, static_argnames=("znorm",))
+@functools.partial(jax.jit, static_argnames=("k", "znorm"))
 def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
-                      znorm: bool = True
+                      *, k: int = 1, znorm: bool = True
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Oracle: exact scan over all series (matmul form)."""
+    """Top-k oracle: exact scan over all series (matmul form).
+
+    Candidate selection uses the same matmul-form distances as the index
+    search; reported distances are recomputed in direct form.  Returns
+    shapes (Q,) for k == 1, (Q, k) ascending otherwise.  k and znorm are
+    keyword-only: the old signature had znorm third, and a positional k
+    would silently reinterpret those call sites.
+    """
     x = isax.znormalize(raw).astype(jnp.float32) if znorm \
         else raw.astype(jnp.float32)
     q = isax.znormalize(queries).astype(jnp.float32) if znorm \
@@ -159,9 +216,14 @@ def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
     d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(x * x, -1)[None, :]
           - 2.0 * q @ x.T)
     d2 = jnp.maximum(d2, 0.0)
-    i = jnp.argmin(d2, axis=1)
-    d_exact = jnp.sum(jnp.square(q - x[i]), axis=-1)   # see search(): exact
-    return jnp.sqrt(d_exact), i.astype(jnp.int32)
+    _, i = jax.lax.top_k(-d2, k)                        # (Q, k)
+    d_exact = jnp.sum(jnp.square(q[:, None, :] - x[i]), axis=-1)
+    resort = jnp.argsort(d_exact, axis=1)               # see search(): exact
+    d = jnp.sqrt(jnp.take_along_axis(d_exact, resort, axis=1))
+    i = jnp.take_along_axis(i.astype(jnp.int32), resort, axis=1)
+    if k == 1:
+        return d[:, 0], i[:, 0]
+    return d, i
 
 
 # ===========================================================================
@@ -185,15 +247,21 @@ def shard_index(idx: FlatIndex, mesh: Mesh, axis: str = "data") -> FlatIndex:
     )
 
 
-def make_sharded_search(mesh: Mesh, *, axis: str = "data",
+def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
                         round_leaves: int = 8, sync_every: int = 1,
-                        max_rounds: Optional[int] = None):
-    """Builds a jitted sharded search(idx, queries) for the given mesh.
+                        max_rounds: Optional[int] = None, znorm: bool = True,
+                        backend: str = "ref"):
+    """Builds a jitted sharded k-NN search(idx, queries) for the given mesh.
 
     Each device: local lower bounds + local PQ order + local refinement
-    rounds against a LOCAL BSF (expeditive); every `sync_every` rounds the
-    global BSF is published with an all-reduce-min (standard mode).  The
-    final (dist, id) winner is resolved with a tiny all-gather.
+    rounds against a LOCAL top-k BSF buffer (expeditive); every
+    `sync_every` rounds the global k-th bound is published with an
+    all-reduce-min (standard mode).  Soundness of the published bound: each
+    device's local k-th BSF is an upper bound on the global k-th distance
+    (its k candidates are all <= it and all belong to the union), so the
+    pmin over devices is too.  The final (dist, id) top-k is resolved by
+    all-gathering the n_dev local buffers and re-top-k'ing the union.
+    Returns (Q,) arrays for k == 1, (Q, k) ascending otherwise.
     """
     K = round_leaves
 
@@ -203,8 +271,12 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data",
         n_leaves_local = leaf_lo.shape[0]
         M = series.shape[0] // n_leaves_local
 
-        lb = isax.mindist_region_sq(q_paa[:, None, :], leaf_lo[None],
-                                    leaf_hi[None], L)
+        if backend == "pallas":
+            from repro.kernels import ops
+            lb = ops.lb_distance(q_paa, leaf_lo, leaf_hi, series_len=L)
+        else:
+            lb = isax.mindist_region_sq(q_paa[:, None, :], leaf_lo[None],
+                                        leaf_hi[None], L)
         order = jnp.argsort(lb, axis=1)
         sorted_lb = jnp.take_along_axis(lb, order, axis=1)
 
@@ -218,11 +290,12 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data",
                                 constant_values=BIG)
 
         # Two accumulators per query:
-        #   lbsf — distance of the best LOCALLY-held candidate (never
-        #          overwritten by syncs: it is the winner-resolution key);
-        #   pb   — the pruning bound: last PUBLISHED global min (standard-
-        #          mode sync).  Pruning/termination use min(pb, lbsf).
-        def refine(cursor, lbsf, best, pb):
+        #   bsf_d/bsf_e — the LOCAL top-k buffer (never overwritten by
+        #          syncs: it is the winner-resolution payload);
+        #   pb   — the pruning bound: last PUBLISHED global k-th min
+        #          (standard-mode sync).  Pruning/termination use
+        #          min(pb, local k-th).
+        def refine(cursor, bsf_d, bsf_e, pb):
             ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
             lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
             entry = ids[..., None] * M + jnp.arange(M)[None, None, :]
@@ -232,68 +305,65 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data",
             dots = jnp.einsum("qnl,ql->qn", xs, q,
                               preferred_element_type=jnp.float32)
             d2 = jnp.maximum(q_sq[:, None] + xn - 2.0 * dots, 0.0)
-            bound = jnp.minimum(pb, lbsf)
+            bound = jnp.minimum(pb, bsf_d[:, -1])
             alive = lbs < bound[:, None]
             d2 = jnp.where(jnp.repeat(alive, M, axis=1), d2, BIG)
-            kk = jnp.argmin(d2, axis=1)
-            dmin = jnp.take_along_axis(d2, kk[:, None], 1)[:, 0]
-            emin = jnp.take_along_axis(entry, kk[:, None], 1)[:, 0]
-            upd = dmin < lbsf
-            return (jnp.where(upd, dmin, lbsf),
-                    jnp.where(upd, perm[emin], best),
-                    jnp.where(upd, emin, jnp.zeros_like(emin)))
+            return _topk_merge(bsf_d, bsf_e, d2, entry, k)
 
         def cond(state):
-            cursor, lbsf, _, _, pb, rounds = state
+            cursor, bsf_d, _, pb, rounds = state
             nxt = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
-            bound = jnp.minimum(pb, lbsf)
+            bound = jnp.minimum(pb, bsf_d[:, -1])
             live_local = jnp.any(nxt[:, 0] < bound)
             live = jax.lax.pmax(live_local.astype(jnp.int32), axis)
             return jnp.logical_and(cursor < cap * K, live > 0)
 
         def body(state):
-            cursor, lbsf, best, brow, pb, rounds = state
-            nl, nb, nr = refine(cursor, lbsf, best, pb)
-            brow = jnp.where(nl < lbsf, nr, brow)
-            lbsf, best = nl, nb
-            # standard mode: publish global BSF every sync_every rounds
+            cursor, bsf_d, bsf_e, pb, rounds = state
+            bsf_d, bsf_e = refine(cursor, bsf_d, bsf_e, pb)
+            # standard mode: publish the global k-th bound every sync_every
             do_sync = (rounds % sync_every) == (sync_every - 1)
-            gbsf = jax.lax.pmin(lbsf, axis)
+            gbsf = jax.lax.pmin(bsf_d[:, -1], axis)
             pb = jnp.where(do_sync, jnp.minimum(pb, gbsf), pb)
-            return cursor + K, lbsf, best, brow, pb, rounds + 1
+            return cursor + K, bsf_d, bsf_e, pb, rounds + 1
 
         Qn = q.shape[0]
-        state = (jnp.int32(0), jnp.full((Qn,), BIG),
-                 jnp.full((Qn,), -1, jnp.int32),
-                 jnp.zeros((Qn,), jnp.int32), jnp.full((Qn,), BIG),
+        state = (jnp.int32(0), jnp.full((Qn, k), BIG),
+                 jnp.zeros((Qn, k), jnp.int32), jnp.full((Qn,), BIG),
                  jnp.int32(0))
-        _, lbsf, best, brow, _, _ = jax.lax.while_loop(cond, body, state)
+        _, bsf_d, bsf_e, _, _ = jax.lax.while_loop(cond, body, state)
 
-        # recompute the local winner's distance in DIRECT form (matmul form
-        # loses ~1e-3 absolute to f32 cancellation — see search())
-        d_exact = jnp.sum(jnp.square(q - series[brow]), axis=-1)
-        lbsf = jnp.where(best >= 0, d_exact, lbsf)
+        # recompute the local winners' distances in DIRECT form (matmul
+        # form loses ~1e-3 absolute to f32 cancellation — see search())
+        found = bsf_d < BIG
+        d_exact = jnp.sum(jnp.square(q[:, None, :] - series[bsf_e]), axis=-1)
+        d_local = jnp.where(found, d_exact, bsf_d)
+        ids_local = jnp.where(found, perm[bsf_e], -1)
 
-        # final resolution: gather per-device (lbsf, best), global argmin
-        all_bsf = jax.lax.all_gather(lbsf, axis)         # (n_dev, Q)
-        all_best = jax.lax.all_gather(best, axis)        # (n_dev, Q)
-        widx = jnp.argmin(all_bsf, axis=0)               # (Q,)
-        dist = jnp.take_along_axis(all_bsf, widx[None], 0)[0]
-        bid = jnp.take_along_axis(all_best, widx[None], 0)[0]
+        # final resolution: gather the n_dev local buffers, top-k the union
+        all_d = jax.lax.all_gather(d_local, axis)        # (n_dev, Q, k)
+        all_i = jax.lax.all_gather(ids_local, axis)
+        all_d = jnp.moveaxis(all_d, 0, 1).reshape(Q, -1)
+        all_i = jnp.moveaxis(all_i, 0, 1).reshape(Q, -1)
+        neg, pos = jax.lax.top_k(-all_d, k)              # ascending
+        dist = -neg
+        bid = jnp.take_along_axis(all_i, pos, axis=1)
+        if k == 1:
+            return jnp.sqrt(dist[:, 0]), bid[:, 0]
         return jnp.sqrt(dist), bid
 
     pleaf = P(axis, None)
+    out_spec = P(None) if k == 1 else P(None, None)
 
     @functools.partial(jax.jit)
     def sharded_search(idx: FlatIndex, queries: jnp.ndarray):
-        q = isax.znormalize(queries).astype(jnp.float32)
-        q_paa = isax.paa(q, idx.paa.shape[1])
+        q, q_paa = prepare_queries(queries, znorm, index=idx)
         q_sq = jnp.sum(q * q, axis=-1)
         fn = shard_map(
             _local_search, mesh=mesh,
             in_specs=(pleaf, P(axis), P(axis), pleaf, pleaf,
                       P(None, None), P(None, None), P(None)),
-            out_specs=(P(None), P(None)),
+            out_specs=(out_spec, out_spec),
             check_rep=False)
         return fn(idx.series, idx.sq_norms, idx.perm, idx.leaf_lo,
                   idx.leaf_hi, q, q_paa, q_sq)

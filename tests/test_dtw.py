@@ -4,6 +4,8 @@ oracle, LB_Keogh soundness (hypothesis), exact DTW 1-NN vs brute force."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dtw import (dtw_band, dtw_ref, envelope, lb_keogh,

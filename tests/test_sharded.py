@@ -25,6 +25,36 @@ def _run(body: str, devices: int = 8, timeout: int = 900):
     return r.stdout
 
 
+def test_sharded_facade_knn_matches_oracle():
+    """FreshIndex.shard(mesh): exact top-k on the sharded path, including
+    a delta buffer and a compact() that re-pads leaves to the device
+    count."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import FreshIndex
+    from repro.core import search_bruteforce
+    from repro.data.synthetic import random_walk, query_workload
+    walks = random_walk(2048, 256, seed=1)
+    qs = jnp.asarray(query_workload(walks, 12, noise_sigma=0.05, seed=2))
+    ix = FreshIndex.build(walks, leaf_capacity=64)
+    mesh = jax.make_mesh((8,), ("data",))
+    ix.shard(mesh)
+    for k in (1, 10):
+        d, i = ix.search(qs, k=k, sync_every=2)
+        db, ib = search_bruteforce(jnp.asarray(walks), qs, k=k)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ib))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(db),
+                                   rtol=1e-5, atol=1e-5)
+    extra = random_walk(100, 256, seed=3)         # 2148 series: 34 leaves,
+    ix.add(extra); ix.compact()                   # pad_leaves -> 40
+    both = jnp.asarray(np.concatenate([walks, extra]))
+    d, i = ix.search(qs, k=10)
+    db, ib = search_bruteforce(both, qs, k=10)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(ib))
+    print("sharded facade knn OK")
+    """)
+
+
 def test_sharded_search_matches_single_device():
     _run("""
     import jax, jax.numpy as jnp, numpy as np

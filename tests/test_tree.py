@@ -123,6 +123,7 @@ def test_tree_hypothesis_no_duplicates_random():
     """Property: random words/capacities -> every payload reachable exactly
     once via descent-consistent paths (would have caught the _descend /
     _build_split depth off-by-one)."""
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     @settings(max_examples=20, deadline=None)
