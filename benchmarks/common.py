@@ -73,5 +73,24 @@ def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
     return ts[len(ts) // 2]
 
 
-def row(name: str, seconds: float, derived: str = "") -> str:
-    return f"{name},{seconds * 1e6:.1f},{derived}"
+def row(name: str, seconds: float, derived: str = "", **extra) -> dict:
+    """One benchmark figure as a dict (us_per_call + free-form extras).
+
+    run.py formats these as the historical CSV lines AND collects them
+    into the machine-readable BENCH_fresh.json; keep numeric extras (e.g.
+    per_query_us=...) as keyword fields so the JSON stays parseable.
+    """
+    d = {"name": name, "us_per_call": round(seconds * 1e6, 1),
+         "derived": derived}
+    d.update(extra)
+    return d
+
+
+def fmt_row(r: dict) -> str:
+    """The historical `name,us_per_call,derived` CSV line."""
+    derived = r.get("derived", "")
+    extras = [f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+              for k, v in r.items()
+              if k not in ("name", "us_per_call", "derived")]
+    tail = " ".join(x for x in [derived, *extras] if x)
+    return f"{r['name']},{r['us_per_call']:.1f},{tail}"

@@ -38,6 +38,25 @@ from .common import BlockingExecutor, row, timeit
 N_SERIES = 20_000
 N_QUERIES = 32
 
+# Query-answering figures run through BOTH kernel backends, resolved from
+# the index's IndexConfig (never passed per call): 'ref' is the
+# materializing jnp path, 'pallas' the fused kernels (Mosaic on TPU; on
+# CPU the interpreter executes the kernel body per grid cell, so its
+# wall-clock is a correctness trace, not perf — see EXPERIMENTS.md).
+BACKENDS = ("ref", "pallas")
+
+
+def set_quick() -> None:
+    """Shrink dataset/query counts for CI smoke (scripts/smoke.sh).
+
+    The interpret-mode pallas rows cost O(Q * K) Python kernel-body
+    executions per refinement round on CPU; quick mode keeps the
+    two-backend comparison while bounding the wall clock.
+    """
+    global N_SERIES, N_QUERIES
+    N_SERIES = 4_000
+    N_QUERIES = 8
+
 
 def _host_build_time(executor, walks, n_threads) -> float:
     t0 = time.perf_counter()
@@ -46,7 +65,7 @@ def _host_build_time(executor, walks, n_threads) -> float:
     return time.perf_counter() - t0
 
 
-def fig3_thread_scaling() -> List[str]:
+def fig3_thread_scaling() -> List[dict]:
     out = []
     walks = random_walk(N_SERIES, 256, seed=0)
     _host_build_time(RefreshExecutor(n_threads=2), walks, 2)   # jit warmup
@@ -56,38 +75,46 @@ def fig3_thread_scaling() -> List[str]:
         out.append(row(f"fig3/build/fresh/t{nt}", t_fresh,
                        f"speedup_vs_block={t_block/t_fresh:.2f}"))
         out.append(row(f"fig3/build/messi_like/t{nt}", t_block))
-    # query answering (device plane, jitted, through the facade)
-    index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+    # query answering (device plane, jitted, through the facade; the
+    # backend is resolved from each index's IndexConfig)
     qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
-    t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
-    out.append(row("fig3/query/fresh_device", t_q,
-                   f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
-    for k in (10, 100):
-        t_k = timeit(lambda: jax.block_until_ready(index.search(qs, k=k)))
-        out.append(row(f"fig3/query/fresh_device_k{k}", t_k,
-                       f"per_query_us={t_k/N_QUERIES*1e6:.0f}"))
+    for bk in BACKENDS:
+        index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64,
+                                                    backend=bk))
+        t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
+        out.append(row(f"fig3/query/fresh_device/{bk}", t_q,
+                       per_query_us=t_q / N_QUERIES * 1e6))
+        for k in (10, 100):
+            t_k = timeit(
+                lambda: jax.block_until_ready(index.search(qs, k=k)))
+            out.append(row(f"fig3/query/fresh_device_k{k}/{bk}", t_k,
+                           per_query_us=t_k / N_QUERIES * 1e6))
     return out
 
 
-def fig5_dataset_scaling() -> List[str]:
+def fig5_dataset_scaling() -> List[dict]:
     out = []
+    sizes = (5_000, 20_000, 80_000) if N_SERIES >= 20_000 \
+        else (2_000, 4_000, 8_000)
     for gen, tag in ((random_walk, "random"), (seismic_like, "seismic")):
-        for n in (5_000, 20_000, 80_000):
+        for n in sizes:
             walks = gen(n, 256, seed=1)
             raw = jnp.asarray(walks)           # H2D outside the timed region
             t_b = timeit(lambda: jax.block_until_ready(
                 FreshIndex.build(raw, leaf_capacity=64).index.series),
                 repeat=2)
-            index = FreshIndex.build(raw, leaf_capacity=64)
-            qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
-            t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
             out.append(row(f"fig5/{tag}/n{n}/build", t_b))
-            out.append(row(f"fig5/{tag}/n{n}/query", t_q,
-                           f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
+            qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
+            for bk in BACKENDS:
+                index = FreshIndex.build(raw, leaf_capacity=64, backend=bk)
+                t_q = timeit(
+                    lambda: jax.block_until_ready(index.search(qs)))
+                out.append(row(f"fig5/{tag}/n{n}/query/{bk}", t_q,
+                               per_query_us=t_q / N_QUERIES * 1e6))
     return out
 
 
-def fig6a_query_difficulty() -> List[str]:
+def fig6a_query_difficulty() -> List[dict]:
     out = []
     walks = random_walk(N_SERIES, 256, seed=2)
     index = FreshIndex.build(walks, leaf_capacity=64)
@@ -95,7 +122,7 @@ def fig6a_query_difficulty() -> List[str]:
         qs = jnp.asarray(query_workload(walks, N_QUERIES, sigma))
         t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
         out.append(row(f"fig6a/sigma{sigma}", t_q,
-                       f"per_query_us={t_q/N_QUERIES*1e6:.0f}"))
+                       per_query_us=t_q / N_QUERIES * 1e6))
     return out
 
 
@@ -141,7 +168,7 @@ def _tree_populate(variant: str, words: np.ndarray, n_threads: int) -> float:
     return time.perf_counter() - t0
 
 
-def fig6bc_tree_variants() -> List[str]:
+def fig6bc_tree_variants() -> List[dict]:
     from repro.core import isax
     walks = random_walk(N_SERIES, 256, seed=3)
     x = jnp.asarray(walks)
@@ -154,7 +181,7 @@ def fig6bc_tree_variants() -> List[str]:
     return out
 
 
-def fig6d_buffer_baselines() -> List[str]:
+def fig6d_buffer_baselines() -> List[dict]:
     out = []
     walks = random_walk(N_SERIES, 256, seed=4)
     execs = [("fresh", RefreshExecutor(n_threads=4)),
@@ -167,7 +194,7 @@ def fig6d_buffer_baselines() -> List[str]:
     return out
 
 
-def fig7_delays() -> List[str]:
+def fig7_delays() -> List[dict]:
     """Delay thread 0 by `d` per element: blocking pays n/nt * d extra;
     FreSh helpers absorb it."""
     out = []
@@ -186,7 +213,7 @@ def fig7_delays() -> List[str]:
     return out
 
 
-def fig8_crashes() -> List[str]:
+def fig8_crashes() -> List[dict]:
     """k of 4 workers crash permanently: FreSh terminates, tracks the
     (4-k)-thread no-failure time; blocking would hang (assert only)."""
     out = []
@@ -222,7 +249,7 @@ def fig8_crashes() -> List[str]:
     return out
 
 
-def kernel_microbench() -> List[str]:
+def kernel_microbench() -> List[dict]:
     """Per-kernel interpret-mode timing vs oracle (correctness-weighted;
     wall times on CPU interpret are NOT TPU perf — see EXPERIMENTS.md)."""
     from repro.kernels import ops, ref
@@ -237,10 +264,30 @@ def kernel_microbench() -> List[str]:
         ops.ed_argmin(q, x, interpret=True)))
     t_r = timeit(lambda: jax.block_until_ready(ref.ed_argmin_ref(q, x)))
     out.append(row("kernel/ed_argmin/64x4096", t_k, f"ref={t_r*1e6:.0f}us"))
+
+    # fused refinement round: Q=16 queries x K=8 leaves x M=64 entries
+    rng = np.random.default_rng(11)
+    Q, K, M, NL, L, k = 16, 8, 64, 64, 256, 10
+    series = jnp.asarray(rng.standard_normal((NL * M, L)), jnp.float32)
+    sqn = jnp.sum(series * series, -1)
+    qq = jnp.asarray(rng.standard_normal((Q, L)), jnp.float32)
+    qsq = jnp.sum(qq * qq, -1)
+    ids = jnp.asarray(rng.integers(0, NL, (Q, K)), jnp.int32)
+    alive = jnp.ones((Q, K), bool)
+    bsf_d = jnp.full((Q, k), 1e30)
+    bsf_e = jnp.zeros((Q, k), jnp.int32)
+    t_k = timeit(lambda: jax.block_until_ready(ops.refine_topk(
+        qq, qsq, series, sqn, ids, alive, bsf_d, bsf_e,
+        leaf_capacity=M, k=k, interpret=True)), repeat=2)
+    t_r = timeit(lambda: jax.block_until_ready(ref.refine_topk_ref(
+        qq, qsq, series, sqn, ids, alive, bsf_d, bsf_e,
+        leaf_capacity=M, k=k)), repeat=2)
+    out.append(row("kernel/refine_topk/16q_8x64", t_k,
+                   f"ref={t_r*1e6:.0f}us"))
     return out
 
 
-def dtw_generality() -> List[str]:
+def dtw_generality() -> List[dict]:
     """Section II generality: exact DTW 1-NN — LB_Keogh-pruned search vs
     banded-DTW brute force (speedup = the pruning win)."""
     import jax.numpy as jnp

@@ -59,6 +59,37 @@ def table(multi: bool = False, csv: bool = False) -> List[str]:
             for r in rows]
 
 
+def refine_rows(Q: int = 128, K: int = 8, M: int = 64, L: int = 256,
+                k: int = 10) -> List[str]:
+    """Analytic v5e roofline for ONE refinement round, fused vs
+    materializing.
+
+    The matmul work is identical (2*Q*K*M*L FLOPs); what the fused
+    kernels.refine_topk changes is HBM traffic: the materializing path
+    writes the (Q, K*M, L) gather to HBM and reads it back for the einsum
+    (3x the leaf bytes in flight), while the fused kernel streams each
+    (M, L) leaf block HBM->VMEM exactly once and keeps distances + the
+    top-k fold in VMEM/VREGs.  Both paths share the tiny (Q, k) buffer
+    and (Q, L) query traffic.
+    """
+    from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+    flops = 2.0 * Q * K * M * L
+    leaf = 4.0 * Q * K * M * L                    # the gathered member rows
+    small = 4.0 * Q * L + 12.0 * Q * k            # queries + BSF buffers
+    fused = leaf + small
+    mat = 3.0 * leaf + small                      # gather out + in + source
+    t_c = flops / PEAK_FLOPS_BF16
+    rows = [("refine-round (Q=%d K=%d M=%d L=%d k=%d)" % (Q, K, M, L, k),
+             "flops=%.1fM" % (flops / 1e6))]
+    for tag, b in (("fused/refine_topk", fused), ("materializing/ref", mat)):
+        t_m = b / HBM_BW
+        dom = "memory" if t_m > t_c else "compute"
+        rows.append(("  %-20s" % tag,
+                     "hbm=%.1fMB t_mem=%.1fus t_comp=%.2fus dom=%s"
+                     % (b / 1e6, t_m * 1e6, t_c * 1e6, dom)))
+    return ["%s  %s" % r for r in rows]
+
+
 def summary() -> List[str]:
     out = []
     for multi in (False, True):

@@ -2,13 +2,20 @@
 the roofline tables derived from the multi-pod dry-run.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig3,fig7]
+                                            [--json BENCH_fresh.json]
+                                            [--quick]
 
 Prints ``name,us_per_call,derived`` CSV rows, then the roofline summary.
+--json additionally writes every figure as machine-readable JSON (rows +
+meta) so the perf trajectory is tracked across PRs; --quick shrinks the
+dataset/query counts to the CI smoke scale (scripts/smoke.sh).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 import sys
 import time
 import traceback
@@ -18,28 +25,43 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list of bench prefixes (fig3,fig5,...)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as machine-readable JSON "
+                         "(BENCH_fresh.json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke scale: fewer series/queries")
     args = ap.parse_args()
 
     from . import fresh_bench
     from . import roofline_table
+    from .common import fmt_row
+
+    if args.quick:
+        fresh_bench.set_quick()
 
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     t0 = time.time()
     failures = 0
+    rows = []
     for fn in fresh_bench.ALL:
         tag = fn.__name__.split("_")[0]
         if only and tag not in only:
             continue
         try:
-            for line in fn():
-                print(line, flush=True)
+            for r in fn():
+                rows.append(r)
+                print(fmt_row(r), flush=True)
         except Exception as e:       # pragma: no cover
             failures += 1
             print(f"{fn.__name__},nan,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
 
     print(f"# benches done in {time.time()-t0:.1f}s", flush=True)
+    print("#")
+    print("# ---- refine-round roofline (fused kernel vs materializing) ----")
+    for line in roofline_table.refine_rows():
+        print(f"# {line}")
     print("#")
     print("# ---- multi-pod dry-run / roofline summary ----")
     for line in roofline_table.summary():
@@ -48,6 +70,29 @@ def main() -> None:
     print("# ---- roofline table (single pod, 16x16) ----")
     for line in roofline_table.table(multi=False):
         print(f"# {line}")
+
+    if args.json:
+        import jax
+        payload = {
+            "meta": {
+                "quick": bool(args.quick),
+                "n_series": fresh_bench.N_SERIES,
+                "n_queries": fresh_bench.N_QUERIES,
+                "backends": list(fresh_bench.BACKENDS),
+                "jax_backend": jax.default_backend(),
+                "jax_version": jax.__version__,
+                "python": platform.python_version(),
+                "wall_seconds": round(time.time() - t0, 1),
+                "note": ("interpret-mode pallas timings on CPU are "
+                         "correctness traces, not hardware perf — "
+                         "see EXPERIMENTS.md"),
+            },
+            "rows": rows,
+        }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=1, sort_keys=True)
+            fh.write("\n")
+        print(f"# wrote {len(rows)} rows to {args.json}")
     if failures:
         sys.exit(1)
 

@@ -1,7 +1,21 @@
 #!/usr/bin/env bash
 # End-to-end smoke: build -> k-NN search -> add/compact -> save/load via
-# the FreshIndex facade, on whatever backend jax finds (CPU in CI).
+# the FreshIndex facade, on whatever backend jax finds (CPU in CI), then
+# a 2-figure benchmark subset (fig3 query + fig5 scaling, both kernel
+# backends) at --quick scale, emitting the machine-readable
+# BENCH_fresh.json perf record.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python examples/quickstart.py
+python -m benchmarks.run --only fig3,fig5 --quick --json BENCH_fresh.json
+python - <<'EOF'
+import json
+rows = json.load(open("BENCH_fresh.json"))["rows"]
+for fig, bk in (("fig3", "ref"), ("fig3", "pallas"),
+                ("fig5", "ref"), ("fig5", "pallas")):
+    assert any(r["name"].startswith(fig) and r["name"].endswith("/" + bk)
+               and "per_query_us" in r for r in rows), (fig, bk)
+print(f"BENCH_fresh.json OK: {len(rows)} rows, "
+      "both backends present for fig3+fig5")
+EOF

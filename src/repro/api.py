@@ -85,8 +85,14 @@ class IndexConfig:
                    | 'paabox' (tightest)
     znorm          z-normalize series and queries (the paper's setting)
     dtype          storage dtype of the series matrix; search math is f32
-    backend        summarization/pruning kernels: 'pallas' (Mosaic on TPU,
-                   interpret elsewhere) | 'ref' (pure jnp)
+    backend        summarization/pruning/refinement kernels: 'pallas'
+                   (Mosaic on TPU, interpret elsewhere; refinement runs
+                   the fused allocation-free kernels.refine_topk) | 'ref'
+                   (pure jnp, materializes the (Q, K*M, L) gather)
+    round_leaves   leaves refined per query per refinement round (K)
+    pq_budget      cap on leaves admitted to the per-query priority queue
+                   (None = the exact round budget; smaller values trade
+                   exactness for PQ setup time, like max_rounds)
     """
     segments: int = isax.SEGMENTS
     bits: int = isax.SAX_BITS
@@ -95,6 +101,8 @@ class IndexConfig:
     znorm: bool = True
     dtype: str = "float32"
     backend: str = "ref"
+    round_leaves: int = 8
+    pq_budget: Optional[int] = None
 
     def __post_init__(self):
         if self.bound not in _BOUNDS:
@@ -110,6 +118,10 @@ class IndexConfig:
             raise ValueError("need segments >= 1 and 1 <= bits <= 8")
         if self.leaf_capacity < 1:
             raise ValueError("leaf_capacity must be >= 1")
+        if self.round_leaves < 1:
+            raise ValueError("round_leaves must be >= 1")
+        if self.pq_budget is not None and self.pq_budget < 1:
+            raise ValueError("pq_budget must be >= 1 or None")
 
     def validate_series_len(self, L: int) -> None:
         if L % self.segments != 0:
@@ -202,15 +214,20 @@ class FreshIndex:
     # ------------------------------------------------------------------ #
     # search
     # ------------------------------------------------------------------ #
-    def search(self, queries, k: int = 1, *, round_leaves: int = 8,
-               sync_every: int = 1, max_rounds: Optional[int] = None
+    def search(self, queries, k: int = 1, *,
+               round_leaves: Optional[int] = None, sync_every: int = 1,
+               max_rounds: Optional[int] = None,
+               pq_budget: Optional[int] = None,
+               backend: Optional[str] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
         """Exact k-NN.  Returns (dist, ids): shape (Q,) for k == 1,
         (Q, k) ascending by distance otherwise.  Any pending delta buffer
         is scanned exactly and merged into the result, so adds are visible
         to queries immediately, before compact().  `max_rounds` caps the
         refinement loop (approximate search; distances become upper
-        bounds)."""
+        bounds).  round_leaves / pq_budget / the kernel backend default
+        from this index's IndexConfig (pass explicit values to override
+        per call)."""
         q = jnp.asarray(queries, jnp.float32)
         if q.ndim == 1:
             q = q[None]
@@ -224,20 +241,23 @@ class FreshIndex:
             raise ValueError(f"k={k} exceeds the {self.n_series} indexed "
                              f"series")
         if self._mesh is not None:
-            key = (k, round_leaves, sync_every, max_rounds)
+            key = (k, round_leaves, sync_every, max_rounds, pq_budget,
+                   backend)
             fn = self._sharded_fns.get(key)
             if fn is None:
                 fn = make_sharded_search(
                     self._mesh, axis=self._mesh_axis, k=k,
                     round_leaves=round_leaves, sync_every=sync_every,
                     max_rounds=max_rounds, znorm=self.config.znorm,
-                    backend=self.config.backend)
+                    pq_budget=pq_budget, backend=backend,
+                    config=self.config)
                 self._sharded_fns[key] = fn
             d, i = fn(self._idx, q)
         else:
             d, i = _search(self._idx, q, k=k, round_leaves=round_leaves,
                            znorm=self.config.znorm, max_rounds=max_rounds,
-                           backend=self.config.backend)
+                           pq_budget=pq_budget, backend=backend,
+                           config=self.config)
         if not self._delta:
             return d, i
         return self._merge_delta(q, d, i, k)

@@ -5,14 +5,28 @@ The four traverse-object stages map to:
   pruning    — ONE vectorized lower-bound computation over all leaf
                summaries (Pallas kernel on TPU), instead of a tree walk;
   RS / the priority queues
-             — per-query argsort of leaf lower bounds (ascending): the
-               sorted order IS the DeleteMin order of the paper's queues;
+             — two-stage partial selection over the leaf lower bounds:
+               jax.lax.top_k picks (and orders — top_k returns sorted
+               values, so the within-budget argsort is fused into the
+               selection) only the R leaves the refinement loop can ever
+               consume, where R is calibrated from the round budget
+               (R = n_rounds_cap * K, further capped by pq_budget).  The
+               selected ascending order IS the DeleteMin order of the
+               paper's queues; PQ setup is O(NL + R log R) per query
+               instead of the full argsort's O(NL log NL);
   refinement — a while_loop over ROUNDS: each round takes the next K best
                leaves per query, computes real distances in matmul form
                (dist^2 = ||q||^2 + ||x||^2 - 2 q.x  -> MXU), and folds the
                min into BSF.  The loop exits as soon as the next unrefined
                lower bound >= BSF — exactly the PQ termination condition, so
-               the answer is EXACT.
+               the answer is EXACT.  backend='pallas' runs the whole round
+               body through the fused kernels.refine_topk (gather +
+               distances + prune + top-k fold in VMEM — no (Q, K*M, L)
+               intermediate ever reaches HBM); backend='ref' is the
+               materializing pure-jnp path.  The two are bit-comparable in
+               interpret mode: identical entry buffers and final
+               distances (which are recomputed in direct form from the
+               winners), with intra-round f32 sums equal to the last ulp.
 
 Expeditive vs standard (Section IV) on the mesh: in the sharded search each
 device refines against its LOCAL BSF (no communication = expeditive mode)
@@ -36,6 +50,71 @@ from . import isax
 from .index import FlatIndex
 
 BIG = jnp.float32(1e30)
+
+
+_BACKENDS = ("ref", "pallas")
+
+
+def _resolve_knob(value, config, name: str, fallback):
+    """Explicit argument wins; otherwise the index's IndexConfig field;
+    the hard fallback only when neither is given (e.g. backend -> 'ref',
+    the old hard default)."""
+    if value is not None:
+        return value
+    if config is not None and getattr(config, name, None) is not None:
+        return getattr(config, name)
+    return fallback
+
+
+def _resolve_backend(backend, config) -> str:
+    """Like _resolve_knob('backend') but validated: IndexConfig checks its
+    own field, so a per-call override is the one path a typo ('Pallas',
+    'mosaic') could otherwise silently fall through to the ref branch."""
+    bk = _resolve_knob(backend, config, "backend", "ref")
+    if bk not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, got {bk!r}")
+    return bk
+
+
+def _rounds_cap(n_leaves: int, K: int, max_rounds: Optional[int],
+                pq_budget: Optional[int]) -> int:
+    """Static bound on refinement rounds: enough to cover every leaf,
+    tightened by max_rounds and/or the pq_budget leaf allowance."""
+    cap = -(-n_leaves // K)
+    if max_rounds is not None:
+        cap = min(cap, max_rounds)
+    if pq_budget is not None:
+        cap = min(cap, max(1, -(-pq_budget // K)))
+    return cap
+
+
+def _pq_order(lb: jnp.ndarray, K: int, n_rounds_cap: int,
+              leaf_budget: Optional[int] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Two-stage partial-selection priority queue.
+
+    The refinement loop reads at most n_rounds_cap * K PQ entries, so only
+    the R = min(n_rounds_cap * K, NL) best leaves need selecting and
+    ordering: jax.lax.top_k over -lb picks them AND returns them sorted
+    (ascending in lb, ties to the lower leaf index — the same permutation
+    prefix a full stable argsort would produce), dropping PQ setup from
+    O(NL log NL) to O(NL + R log R) per query.  `leaf_budget` (pq_budget)
+    is an exact cap on admitted leaves, not rounded up to whole rounds.
+    Entries past R are padded with lb=BIG so every dynamic_slice of width
+    K stays in range and padded slots never pass the pruning test.
+    """
+    NL = lb.shape[1]
+    R = min(n_rounds_cap * K, NL)
+    if leaf_budget is not None:
+        R = max(1, min(R, leaf_budget))
+    neg, order = jax.lax.top_k(-lb, R)
+    sorted_lb = -neg
+    padw = n_rounds_cap * K - R
+    if padw > 0:
+        order = jnp.pad(order, ((0, 0), (0, padw)))
+        sorted_lb = jnp.pad(sorted_lb, ((0, 0), (0, padw)),
+                            constant_values=BIG)
+    return order, sorted_lb
 
 
 def prepare_queries(queries: jnp.ndarray, znorm: bool = True,
@@ -84,48 +163,35 @@ def leaf_lower_bounds(idx: FlatIndex, q_paa: jnp.ndarray,
                                   series_len)
 
 
-def _refine_block(q: jnp.ndarray, q_sq: jnp.ndarray, idx: FlatIndex,
-                  leaf_ids: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Real distances of all entries in the given leaves.
+def _refine_round(q, q_sq, series, sq_norms, ids, alive, bsf_d, bsf_e,
+                  *, M: int, k: int, backend: str):
+    """One refinement round: distances of the addressed leaves' members,
+    pruned by `alive`, folded into the (Q, k) BSF buffer.
 
-    q: (Q, L); leaf_ids: (Q, K) -> dists (Q, K*M) and flat entry ids (Q, K*M).
-    Matmul form feeds the MXU; gathers are per-leaf blocks (contiguous —
-    the locality the sort bought us).
+    The single dispatch point both the local and sharded loops share.
+    'pallas' is the fused allocation-free kernel; 'ref' is the
+    materializing oracle in kernels.ref (gather (Q, K*M, L), matmul-form
+    distances — the MXU-feeding layout — mask, lax.top_k merge).  Entries
+    never repeat across rounds (leaves are disjoint; padded duplicate PQ
+    slots carry lb=BIG and fail `alive`), so the buffer stays
+    duplicate-free.
     """
-    Q, L = q.shape
-    M = idx.leaf_capacity
-    entry = leaf_ids[..., None] * M + jnp.arange(M)[None, None, :]  # (Q,K,M)
-    entry = entry.reshape(Q, -1)                                    # (Q, K*M)
-    xs = jnp.take(idx.series, entry, axis=0)                        # (Q,K*M,L)
-    xn = jnp.take(idx.sq_norms, entry, axis=0)                      # (Q,K*M)
-    dots = jnp.einsum("qnl,ql->qn", xs, q,
-                      preferred_element_type=jnp.float32)
-    d2 = q_sq[:, None] + xn - 2.0 * dots
-    return jnp.maximum(d2, 0.0), entry
-
-
-def _topk_merge(bsf_d: jnp.ndarray, bsf_e: jnp.ndarray,
-                d2: jnp.ndarray, entry: jnp.ndarray, k: int
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Fold a refined block into the per-query top-k BSF buffer.
-
-    bsf_d/bsf_e: (Q, k) ascending; d2/entry: (Q, B) new candidates.
-    Entries never repeat across rounds (leaves are disjoint; padded
-    duplicate leaves carry lb=BIG and are pruned before they get here), so
-    a plain merge-and-top_k keeps the buffer duplicate-free.
-    """
-    alld = jnp.concatenate([bsf_d, d2], axis=1)
-    alle = jnp.concatenate([bsf_e, entry], axis=1)
-    neg, pos = jax.lax.top_k(-alld, k)                  # ascending distances
-    return -neg, jnp.take_along_axis(alle, pos, axis=1)
+    from repro.kernels import ops, ref
+    if backend == "pallas":
+        return ops.refine_topk(q, q_sq, series, sq_norms, ids, alive,
+                               bsf_d, bsf_e, leaf_capacity=M, k=k)
+    return ref.refine_topk_ref(q, q_sq, series, sq_norms, ids, alive,
+                               bsf_d, bsf_e, leaf_capacity=M, k=k)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "round_leaves", "znorm",
-                                             "max_rounds", "backend"))
+                                             "max_rounds", "backend",
+                                             "pq_budget", "config"))
 def search(idx: FlatIndex, queries: jnp.ndarray, *,
-           k: int = 1, round_leaves: int = 8, znorm: bool = True,
-           max_rounds: Optional[int] = None, backend: str = "ref"
-           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+           k: int = 1, round_leaves: Optional[int] = None,
+           znorm: bool = True, max_rounds: Optional[int] = None,
+           backend: Optional[str] = None, pq_budget: Optional[int] = None,
+           config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Exact k-NN for a batch of queries.
 
     Returns (dist, original_id) of shape (Q,) when k == 1 (the historical
@@ -134,30 +200,29 @@ def search(idx: FlatIndex, queries: jnp.ndarray, *,
     refinement round's real distances are folded in with jax.lax.top_k and
     the PQ termination condition compares the next unrefined lower bound
     against the k-th best-so-far (the buffer's worst member).
+
+    backend / round_leaves / pq_budget default to None and resolve from
+    `config` (an IndexConfig — what FreshIndex.search passes) when given,
+    falling back to 'ref' / 8 / uncapped.  `pq_budget` caps the number of
+    leaves admitted to the priority queue: like `max_rounds`, a budget too
+    small for the termination condition to trigger makes distances upper
+    bounds instead of exact.
     """
     L = idx.series.shape[1]
     Q = queries.shape[0]
-    K = round_leaves
+    K = _resolve_knob(round_leaves, config, "round_leaves", 8)
+    bk = _resolve_backend(backend, config)
+    pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
     M = idx.leaf_capacity
     n_leaves = idx.n_leaves
 
     q, q_paa = prepare_queries(queries, znorm, index=idx)
     q_sq = jnp.sum(q * q, axis=-1)
 
-    lb = leaf_lower_bounds(idx, q_paa, L, backend)     # (Q, n_leaves)
-    order = jnp.argsort(lb, axis=1)                    # PQ order
-    sorted_lb = jnp.take_along_axis(lb, order, axis=1)
+    lb = leaf_lower_bounds(idx, q_paa, L, bk)          # (Q, n_leaves)
 
-    n_rounds_cap = -(-n_leaves // K)
-    if max_rounds is not None:
-        n_rounds_cap = min(n_rounds_cap, max_rounds)
-
-    # pad order/sorted_lb so every dynamic_slice of width K is in range
-    padw = n_rounds_cap * K - n_leaves
-    if padw > 0:
-        order = jnp.pad(order, ((0, 0), (0, padw)))
-        sorted_lb = jnp.pad(sorted_lb, ((0, 0), (0, padw)),
-                            constant_values=BIG)
+    n_rounds_cap = _rounds_cap(n_leaves, K, max_rounds, pq_budget)
+    order, sorted_lb = _pq_order(lb, K, n_rounds_cap, pq_budget)
 
     def cond(state):
         cursor, bsf_d, _ = state
@@ -170,11 +235,11 @@ def search(idx: FlatIndex, queries: jnp.ndarray, *,
         cursor, bsf_d, bsf_e = state
         ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
         lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
-        d2, entry = _refine_block(q, q_sq, idx, ids)
         # prune: leaves whose lb >= the current k-th BSF contribute nothing
         alive = (lbs < bsf_d[:, -1:])                    # (Q, K)
-        d2 = jnp.where(jnp.repeat(alive, M, axis=1), d2, BIG)
-        bsf_d, bsf_e = _topk_merge(bsf_d, bsf_e, d2, entry, k)
+        bsf_d, bsf_e = _refine_round(q, q_sq, idx.series, idx.sq_norms,
+                                     ids, alive, bsf_d, bsf_e,
+                                     M=M, k=k, backend=bk)
         return cursor + K, bsf_d, bsf_e
 
     state = (jnp.int32(0), jnp.full((Q, k), BIG),
@@ -248,13 +313,15 @@ def shard_index(idx: FlatIndex, mesh: Mesh, axis: str = "data") -> FlatIndex:
 
 
 def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
-                        round_leaves: int = 8, sync_every: int = 1,
+                        round_leaves: Optional[int] = None,
+                        sync_every: int = 1,
                         max_rounds: Optional[int] = None, znorm: bool = True,
-                        backend: str = "ref"):
+                        backend: Optional[str] = None,
+                        pq_budget: Optional[int] = None, config=None):
     """Builds a jitted sharded k-NN search(idx, queries) for the given mesh.
 
-    Each device: local lower bounds + local PQ order + local refinement
-    rounds against a LOCAL top-k BSF buffer (expeditive); every
+    Each device: local lower bounds + local partial-selection PQ + local
+    refinement rounds against a LOCAL top-k BSF buffer (expeditive); every
     `sync_every` rounds the global k-th bound is published with an
     all-reduce-min (standard mode).  Soundness of the published bound: each
     device's local k-th BSF is an upper bound on the global k-th distance
@@ -262,8 +329,14 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
     pmin over devices is too.  The final (dist, id) top-k is resolved by
     all-gathering the n_dev local buffers and re-top-k'ing the union.
     Returns (Q,) arrays for k == 1, (Q, k) ascending otherwise.
+
+    backend / round_leaves / pq_budget resolve from `config` (IndexConfig)
+    when unset, like the local search().  backend='pallas' routes each
+    device's refine closure through the fused kernels.refine_topk.
     """
-    K = round_leaves
+    K = _resolve_knob(round_leaves, config, "round_leaves", 8)
+    bk = _resolve_backend(backend, config)
+    pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
 
     def _local_search(series, sq_norms, perm, leaf_lo, leaf_hi, q, q_paa, q_sq):
         L = series.shape[1]
@@ -271,23 +344,15 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
         n_leaves_local = leaf_lo.shape[0]
         M = series.shape[0] // n_leaves_local
 
-        if backend == "pallas":
+        if bk == "pallas":
             from repro.kernels import ops
             lb = ops.lb_distance(q_paa, leaf_lo, leaf_hi, series_len=L)
         else:
             lb = isax.mindist_region_sq(q_paa[:, None, :], leaf_lo[None],
                                         leaf_hi[None], L)
-        order = jnp.argsort(lb, axis=1)
-        sorted_lb = jnp.take_along_axis(lb, order, axis=1)
 
-        cap = -(-n_leaves_local // K)
-        if max_rounds is not None:
-            cap = min(cap, max_rounds)
-        padw = cap * K - n_leaves_local
-        if padw > 0:
-            order = jnp.pad(order, ((0, 0), (0, padw)))
-            sorted_lb = jnp.pad(sorted_lb, ((0, 0), (0, padw)),
-                                constant_values=BIG)
+        cap = _rounds_cap(n_leaves_local, K, max_rounds, pq_budget)
+        order, sorted_lb = _pq_order(lb, K, cap, pq_budget)
 
         # Two accumulators per query:
         #   bsf_d/bsf_e — the LOCAL top-k buffer (never overwritten by
@@ -298,17 +363,10 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
         def refine(cursor, bsf_d, bsf_e, pb):
             ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
             lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
-            entry = ids[..., None] * M + jnp.arange(M)[None, None, :]
-            entry = entry.reshape(Q, -1)
-            xs = jnp.take(series, entry, axis=0)
-            xn = jnp.take(sq_norms, entry, axis=0)
-            dots = jnp.einsum("qnl,ql->qn", xs, q,
-                              preferred_element_type=jnp.float32)
-            d2 = jnp.maximum(q_sq[:, None] + xn - 2.0 * dots, 0.0)
             bound = jnp.minimum(pb, bsf_d[:, -1])
             alive = lbs < bound[:, None]
-            d2 = jnp.where(jnp.repeat(alive, M, axis=1), d2, BIG)
-            return _topk_merge(bsf_d, bsf_e, d2, entry, k)
+            return _refine_round(q, q_sq, series, sq_norms, ids, alive,
+                                 bsf_d, bsf_e, M=M, k=k, backend=bk)
 
         def cond(state):
             cursor, bsf_d, _, pb, rounds = state

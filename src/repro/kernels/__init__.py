@@ -3,6 +3,8 @@
     isax_summarize  — fused z-norm + PAA + iSAX quantization (buffer creation)
     lb_distance     — batched MINDIST over leaf regions (pruning)
     ed_argmin       — matmul-form Euclidean argmin (refinement, MXU)
+    refine_topk     — fused refinement round: gather + distances + prune
+                      + top-k fold (no (Q, K*M, L) intermediate)
     flash_attention — fused causal GQA/SWA attention (LM substrate hot spot)
 
 ops.py exposes the jit'd wrappers (interpret=True on CPU, Mosaic on TPU);
@@ -11,4 +13,4 @@ ref.py holds the oracles used by the allclose test sweeps.
 
 from . import ops, ref  # noqa: F401
 from .ops import (ed_argmin, flash_attention, lb_distance,  # noqa: F401
-                  summarize)
+                  refine_topk, summarize)

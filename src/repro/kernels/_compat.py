@@ -1,0 +1,33 @@
+"""Shared kernel-module plumbing (a leaf module — no package imports, so
+every kernel module can use it without cycling through ops.py).
+
+INTERPRET resolves once per process: interpret mode (kernel body run in
+Python — bit-identical semantics, no Mosaic) everywhere except TPU, where
+kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+INTERPRET: bool = jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """None -> the process default (Mosaic on TPU, interpreter elsewhere).
+
+    Raw kernels default interpret=None and resolve through this, so a
+    direct caller never silently runs the Python interpreter on TPU.
+    """
+    return INTERPRET if interpret is None else interpret
+
+
+def tpu_compiler_params(dimension_semantics: Tuple[str, ...]):
+    """Mosaic compiler params across jax versions (jax <= 0.4.x spells the
+    class TPUCompilerParams; newer jax renamed it CompilerParams)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    return cls(dimension_semantics=dimension_semantics)

@@ -61,8 +61,13 @@ def _ed_kernel(q_ref, x_ref, min_ref, arg_ref, *, block_n: int):
 @functools.partial(jax.jit, static_argnames=("block_q", "block_n",
                                              "interpret"))
 def ed_argmin(q: jnp.ndarray, xs: jnp.ndarray, *, block_q: int = 128,
-              block_n: int = 512, interpret: bool = True):
-    """q: (Q, L), xs: (N, L) -> ((Q,) min d^2 f32, (Q,) argmin i32)."""
+              block_n: int = 512, interpret: bool = None):
+    """q: (Q, L), xs: (N, L) -> ((Q,) min d^2 f32, (Q,) argmin i32).
+
+    interpret=None resolves via _compat.INTERPRET (Mosaic on TPU).
+    """
+    from ._compat import resolve_interpret
+    interpret = resolve_interpret(interpret)
     Q, L = q.shape
     N = xs.shape[0]
     bq = min(block_q, max(8, Q))
@@ -76,8 +81,9 @@ def ed_argmin(q: jnp.ndarray, xs: jnp.ndarray, *, block_q: int = 128,
 
     kwargs = {}
     if not interpret:
-        kwargs["compiler_params"] = pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"))
+        from ._compat import tpu_compiler_params
+        kwargs["compiler_params"] = tpu_compiler_params(
+            ("parallel", "arbitrary"))
     dmin, arg = pl.pallas_call(
         functools.partial(_ed_kernel, block_n=bn),
         grid=(Qp // bq, Np // bn),

@@ -61,8 +61,13 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, bq: int,
                                              "interpret"))
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                     causal: bool = True, window: int = 0,
-                    block_q: int = 128, interpret: bool = True):
-    """q: (B, Hq, T, dh); k/v: (B, Hkv, S, dh) -> (B, Hq, T, dh)."""
+                    block_q: int = 128, interpret: bool = None):
+    """q: (B, Hq, T, dh); k/v: (B, Hkv, S, dh) -> (B, Hq, T, dh).
+
+    interpret=None resolves via _compat.INTERPRET (Mosaic on TPU).
+    """
+    from ._compat import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, Hq, T, dh = q.shape
     _, Hkv, S, _ = k.shape
     assert Hq % Hkv == 0

@@ -52,8 +52,13 @@ def _summarize_kernel(x_ref, bp_ref, paa_ref, word_ref, *, segments: int,
                                              "block_rows", "interpret"))
 def summarize(x: jnp.ndarray, *, segments: int = isax.SEGMENTS,
               bits: int = isax.SAX_BITS, znorm: bool = True,
-              block_rows: int = 256, interpret: bool = True):
-    """x: (n, L) -> (paa (n, w) f32, words (n, w) i32).  Pads n internally."""
+              block_rows: int = 256, interpret: bool = None):
+    """x: (n, L) -> (paa (n, w) f32, words (n, w) i32).  Pads n internally.
+
+    interpret=None resolves via _compat.INTERPRET (Mosaic on TPU).
+    """
+    from ._compat import resolve_interpret
+    interpret = resolve_interpret(interpret)
     n, L = x.shape
     assert L % segments == 0
     bn = min(block_rows, max(8, n))

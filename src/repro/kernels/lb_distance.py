@@ -45,8 +45,15 @@ def _lb_kernel(q_ref, lo_ref, hi_ref, out_ref, *, scale: float):
 def lb_distance(q_paa: jnp.ndarray, leaf_lo: jnp.ndarray,
                 leaf_hi: jnp.ndarray, *, series_len: int = isax.SERIES_LEN,
                 block_q: int = 128, block_l: int = 256,
-                interpret: bool = True) -> jnp.ndarray:
-    """(Q, w) x (NL, w) -> (Q, NL) squared lower bounds."""
+                interpret: bool = None) -> jnp.ndarray:
+    """(Q, w) x (NL, w) -> (Q, NL) squared lower bounds.
+
+    interpret=None resolves via _compat.INTERPRET (Mosaic on TPU,
+    interpreter elsewhere) — a hard-coded True would silently run the
+    Python interpreter for direct callers even on TPU.
+    """
+    from ._compat import resolve_interpret
+    interpret = resolve_interpret(interpret)
     Q, w = q_paa.shape
     NL = leaf_lo.shape[0]
     bq = min(block_q, max(8, Q))

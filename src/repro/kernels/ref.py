@@ -52,6 +52,37 @@ def ed_argmin_ref(q: jnp.ndarray, xs: jnp.ndarray
     return jnp.take_along_axis(d2, i[:, None].astype(jnp.int32), 1)[:, 0], i
 
 
+def refine_topk_ref(q: jnp.ndarray, q_sq: jnp.ndarray, series: jnp.ndarray,
+                    sq_norms: jnp.ndarray, leaf_ids: jnp.ndarray,
+                    alive: jnp.ndarray, bsf_d: jnp.ndarray,
+                    bsf_e: jnp.ndarray, *, leaf_capacity: int, k: int
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One refinement round, reference semantics (materializing path).
+
+    Gathers the (Q, K*M, L) member rows, computes matmul-form squared
+    distances, masks pruned leaves to BIG and folds the candidates into
+    the carried (Q, k) buffer with jax.lax.top_k (ascending, ties to the
+    lower union index).  This IS the allocation-heavy backend='ref' round
+    that core.search dispatches to — and the oracle the fused kernel is
+    tested against (identical entry buffers; distances to the last ulp).
+    """
+    big = jnp.float32(1e30)
+    Q, L = q.shape
+    M = leaf_capacity
+    entry = leaf_ids[..., None] * M + jnp.arange(M)[None, None, :]
+    entry = entry.reshape(Q, -1).astype(jnp.int32)          # (Q, K*M)
+    xs = jnp.take(series, entry, axis=0).astype(jnp.float32)
+    xn = jnp.take(sq_norms, entry, axis=0).astype(jnp.float32)
+    dots = jnp.einsum("qnl,ql->qn", xs, q.astype(jnp.float32),
+                      preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(q_sq[:, None] + xn - 2.0 * dots, 0.0)
+    d2 = jnp.where(jnp.repeat(alive.astype(bool), M, axis=1), d2, big)
+    alld = jnp.concatenate([bsf_d, d2], axis=1)
+    alle = jnp.concatenate([bsf_e, entry], axis=1)
+    neg, pos = jax.lax.top_k(-alld, k)
+    return -neg, jnp.take_along_axis(alle, pos, axis=1)
+
+
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                         causal: bool = True, window: int = 0) -> jnp.ndarray:
     """Plain softmax attention oracle.  q: (B,Hq,T,dh); k/v: (B,Hkv,S,dh)."""

@@ -1,0 +1,194 @@
+"""Pallas TPU kernel: fused refinement round — gather + distances + prune
++ top-k fold, allocation-free.
+
+One refinement round of the k-NN search visits, for every query, the next
+K best leaves of its priority queue and folds the real distances of their
+K*M member series into the per-query best-so-far (BSF) top-k buffer.  The
+reference path materializes the gathered member rows as a (Q, K*M, L)
+tensor in HBM before the matmul ever sees it — at Q=128, K=8, M=64, L=256
+that is 64 MiB f32 of pure intermediate traffic per round, dwarfing the
+useful reads.  This kernel fuses the whole round:
+
+    gather leaf block -> squared distances (matmul form, MXU)
+        -> lower-bound/BSF pruning mask -> rank-select top-k fold
+
+so the only HBM traffic is the leaf blocks themselves (read once, (M, L)
+at a time, contiguous — the locality the PQ sort bought us) and the tiny
+(Q, k) BSF buffers.  The (Q, K*M, L) intermediate never exists.
+
+Grid and gather: grid (Q, K) — one program per (query row, PQ slot).  The
+leaf visited by program (i, j) is data-dependent (`leaf_ids[i, j]`), so the
+ids ride in as a scalar-prefetch operand and the series BlockSpec
+index_map reads them to DMA exactly the addressed (M, L) leaf block into
+VMEM (the paged-attention move).  j is the inner, sequential grid
+dimension: the (1, kp) output tiles act as accumulators revisited by every
+j step (initialized from the carried-in BSF at j == 0, exactly like
+ed_argmin's running min).
+
+Pruning: `alive[i, j]` (precomputed outside from lb vs the round-start
+k-th BSF — O(Q*K), free) also rides in scalar-prefetch; a dead (query,
+leaf) program skips gather arithmetic via pl.when, AND skips the HBM->VMEM
+copy itself: the wrapper forward-fills dead PQ slots with the last alive
+slot's leaf id, so the pipeliner sees an unchanged block index across the
+dead steps and elides the DMA (late rounds, where most queries are already
+finished, then stream no pruned leaf bytes at all).  Skipping is
+bit-identical to the reference path's where(alive, d2, BIG) masking: a
+masked candidate carries distance BIG and can never displace a buffer slot
+(ties prefer the lower union index, and buffer slots precede candidates),
+and dead programs never read the (possibly stale) block.
+
+Top-k fold without a sort: the union of the kp carried slots and the M
+candidates is ranked by a (U, U) comparison matrix — rank(e) = #{f :
+d_f < d_e or (d_f == d_e and f < e)} — a total order, so slot t of the
+output is the unique union element of rank t, selected by a one-hot
+sum.  U = kp + M is tiny (~74 at k=10, M=64); the O(U^2) compare-reduce
+vectorizes on the VPU and needs no jax.lax.sort lowering inside Mosaic.
+The index tie-break reproduces jax.lax.top_k's lower-index preference, so
+the fold is bit-comparable with the reference merge in ref.refine_topk_ref
+(same final buffer CONTENTS and ORDER — see tests/test_refine.py).
+
+Buffer width: kp = k in interpret mode; on Mosaic the buffer is padded up
+to a 128-lane multiple (padded slots carry d=BIG, entry 0 — they sort
+after every real candidate and are sliced off by the wrapper).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from ._compat import resolve_interpret, tpu_compiler_params
+
+BIG = 1e30
+
+
+def _rank_select(u_d: jnp.ndarray, u_e: jnp.ndarray, kp: int
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(1, U) distances + (1, U) entries -> the kp smallest, ascending.
+
+    rank(e) = #{f : d_f < d_e or (d_f == d_e and f < e)} is a permutation
+    of 0..U-1 (the index term breaks every tie), so `rank == t` selects
+    exactly one element per output slot.
+    """
+    U = u_d.shape[1]
+    dcol = jnp.reshape(u_d, (U, 1))                    # d_f down the rows
+    drow = u_d                                         # d_e along the lanes
+    fcol = jax.lax.broadcasted_iota(jnp.int32, (U, U), 0)
+    frow = jax.lax.broadcasted_iota(jnp.int32, (U, U), 1)
+    smaller = (dcol < drow) | ((dcol == drow) & (fcol < frow))
+    rank = jnp.sum(smaller.astype(jnp.int32), axis=0)  # (U,) rank of elem e
+    slot = jax.lax.broadcasted_iota(jnp.int32, (U, kp), 1)
+    onehot = rank[:, None] == slot                     # (U, kp)
+    out_d = jnp.sum(jnp.where(onehot, jnp.reshape(u_d, (U, 1)), 0.0), axis=0)
+    out_e = jnp.sum(jnp.where(onehot, jnp.reshape(u_e, (U, 1)), 0), axis=0)
+    return out_d[None, :], out_e[None, :]
+
+
+def _refine_kernel(ids_ref, alive_ref, q_ref, qsq_ref, bsfd_ref, bsfe_ref,
+                   xs_ref, xn_ref, outd_ref, oute_ref, *,
+                   leaf_capacity: int, kp: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():                       # seed the accumulator from the carry
+        outd_ref[...] = bsfd_ref[...]
+        oute_ref[...] = bsfe_ref[...]
+
+    @pl.when(alive_ref[i, j] != 0)
+    def _fold():
+        M = leaf_capacity
+        q = q_ref[...].astype(jnp.float32)             # (1, L)
+        xs = xs_ref[...].astype(jnp.float32)           # (M, L) leaf block
+        xn = xn_ref[...]                               # (1, M)
+        dots = jax.lax.dot_general(q, xs, (((1,), (1,)), ((), ())),
+                                   preferred_element_type=jnp.float32)
+        d2 = jnp.maximum(qsq_ref[...] + xn - 2.0 * dots, 0.0)   # (1, M)
+        cand_e = (ids_ref[i, j] * M
+                  + jax.lax.broadcasted_iota(jnp.int32, (1, M), 1))
+        u_d = jnp.concatenate([outd_ref[...], d2], axis=1)       # (1, kp+M)
+        u_e = jnp.concatenate([oute_ref[...], cand_e], axis=1)
+        outd_ref[...], oute_ref[...] = _rank_select(u_d, u_e, kp)
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_capacity", "k",
+                                             "interpret"))
+def refine_topk(q: jnp.ndarray, q_sq: jnp.ndarray, series: jnp.ndarray,
+                sq_norms: jnp.ndarray, leaf_ids: jnp.ndarray,
+                alive: jnp.ndarray, bsf_d: jnp.ndarray, bsf_e: jnp.ndarray,
+                *, leaf_capacity: int, k: int,
+                interpret: Optional[bool] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused refinement round.
+
+    q:        (Q, L) f32 prepared queries
+    q_sq:     (Q,)   f32 ||q||^2
+    series:   (n_pad, L) leaf-ordered series (any float dtype; math in f32)
+    sq_norms: (n_pad,)   f32 ||x||^2 (padded rows pushed to 1e30)
+    leaf_ids: (Q, K) i32 leaves to visit this round (PQ order)
+    alive:    (Q, K) bool/int — lb < round-start k-th BSF (pruning mask)
+    bsf_d/e:  (Q, k) carried top-k buffer (ascending) / entry ids
+    -> the merged (Q, k) buffer, same semantics as the reference
+       ref.refine_topk_ref round, with no (Q, K*M, L) intermediate.
+    """
+    interpret = resolve_interpret(interpret)
+    Q, L = q.shape
+    K = leaf_ids.shape[1]
+    M = leaf_capacity
+    NL = series.shape[0] // M
+    # lane-pad the buffer on Mosaic; exact width in interpret mode
+    kp = k if interpret else -(-k // 128) * 128
+    if kp != k:
+        bsf_d = jnp.pad(bsf_d, ((0, 0), (0, kp - k)), constant_values=BIG)
+        bsf_e = jnp.pad(bsf_e, ((0, 0), (0, kp - k)))
+
+    ids32 = leaf_ids.astype(jnp.int32)
+    alive32 = alive.astype(jnp.int32)
+    # DMA elision for pruned slots: a dead slot repeats the last alive
+    # slot's leaf id (slot 0's id when the row starts dead — that block is
+    # fetched at j == 0 regardless), so consecutive grid steps address the
+    # same block and the pipeliner skips the copy.  Dead programs never
+    # read the block, and alive slots keep their own id (the forward fill
+    # maps an alive slot to itself), so results are unchanged.
+    slot = jnp.arange(alive32.shape[1], dtype=jnp.int32)[None, :]
+    last_alive = jax.lax.cummax(jnp.where(alive32 != 0, slot, -1), axis=1)
+    ids32 = jnp.take_along_axis(ids32, jnp.maximum(last_alive, 0), axis=1)
+    xn = sq_norms.astype(jnp.float32).reshape(NL, M)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                 # leaf ids + alive mask
+        grid=(Q, K),                           # j (PQ slot) innermost
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, j, ids, al: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, ids, al: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, j, ids, al: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, j, ids, al: (i, 0)),
+            # the data-dependent gather: block row = the addressed leaf
+            pl.BlockSpec((M, L), lambda i, j, ids, al: (ids[i, j], 0)),
+            pl.BlockSpec((1, M), lambda i, j, ids, al: (ids[i, j], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda i, j, ids, al: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, j, ids, al: (i, 0)),
+        ],
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = tpu_compiler_params(
+            ("parallel", "arbitrary"))
+    out_d, out_e = pl.pallas_call(
+        functools.partial(_refine_kernel, leaf_capacity=M, kp=kp),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, kp), jnp.float32),
+            jax.ShapeDtypeStruct((Q, kp), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(ids32, alive32, q, q_sq[:, None], bsf_d, bsf_e, series, xn)
+    return out_d[:, :k], out_e[:, :k]

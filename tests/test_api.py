@@ -182,6 +182,17 @@ def test_config_is_frozen_and_validated():
         IndexConfig(dtype="int8")
     cfg = IndexConfig(leaf_capacity=32)
     assert IndexConfig.from_dict(cfg.to_dict()) == cfg
+    with pytest.raises(ValueError, match="round_leaves"):
+        IndexConfig(round_leaves=0)
+    with pytest.raises(ValueError, match="pq_budget"):
+        IndexConfig(pq_budget=0)
+    # the new refinement knobs round-trip through to_dict/from_dict (the
+    # checkpoint manifest path) and old manifests without them still load
+    cfg = IndexConfig(round_leaves=16, pq_budget=64)
+    assert IndexConfig.from_dict(cfg.to_dict()) == cfg
+    old = {k: v for k, v in IndexConfig().to_dict().items()
+           if k not in ("round_leaves", "pq_budget")}
+    assert IndexConfig.from_dict(old) == IndexConfig()
 
 
 def test_build_rejects_indivisible_series_len():

@@ -90,6 +90,65 @@ def test_ed_argmin_matches_ref(Q, N, L):
                                    np.asarray(d_r)[ties], rtol=1e-4)
 
 
+def _refine_case(Q, K, M, NL, L, k, seed=0):
+    rng = np.random.default_rng(seed)
+    series = jnp.asarray(rng.standard_normal((NL * M, L)), jnp.float32)
+    sqn = jnp.sum(series * series, -1)
+    q = jnp.asarray(rng.standard_normal((Q, L)), jnp.float32)
+    qsq = jnp.sum(q * q, -1)
+    ids = jnp.asarray(rng.integers(0, NL, (Q, K)), jnp.int32)
+    alive = jnp.asarray(rng.integers(0, 2, (Q, K)).astype(bool))
+    bsf_d = jnp.full((Q, k), 1e30)
+    bsf_e = jnp.zeros((Q, k), jnp.int32)
+    return q, qsq, series, sqn, ids, alive, bsf_d, bsf_e
+
+
+@pytest.mark.parametrize("k", [1, 5, 10])
+@pytest.mark.parametrize("Q,K,M,NL,L", [(4, 3, 8, 11, 64),
+                                        (7, 4, 16, 9, 128),
+                                        (1, 8, 32, 40, 256)])
+def test_refine_topk_matches_ref(Q, K, M, NL, L, k):
+    """The fused round vs the materializing oracle: identical ENTRY
+    buffers (contents and order), distances equal to the last ulps (XLA
+    CPU picks a different reduction order for the oracle's batched einsum
+    at some shapes, so f32 sums may differ by ~1 ulp), across two chained
+    rounds (the second exercises the non-trivial carry)."""
+    q, qsq, series, sqn, ids, alive, bsf_d, bsf_e = _refine_case(
+        Q, K, M, NL, L, k, seed=Q * 100 + k)
+    for rnd in range(2):
+        ids = jnp.asarray(
+            np.random.default_rng(rnd).integers(0, NL, (Q, K)), jnp.int32)
+        dk, ek = ops.refine_topk(q, qsq, series, sqn, ids, alive,
+                                 bsf_d, bsf_e, leaf_capacity=M, k=k,
+                                 interpret=True)
+        dr, er = ref.refine_topk_ref(q, qsq, series, sqn, ids, alive,
+                                     bsf_d, bsf_e, leaf_capacity=M, k=k)
+        np.testing.assert_array_equal(np.asarray(ek), np.asarray(er))
+        np.testing.assert_allclose(np.asarray(dk), np.asarray(dr),
+                                   rtol=2e-6, atol=2e-6)
+        # carry the KERNEL's buffer so round 2 tests the fused carry path
+        bsf_d, bsf_e = dk, ek
+        alive = jnp.ones_like(alive)   # round 2: everything alive
+
+
+def test_refine_topk_all_pruned_round_is_identity():
+    """An all-dead round (every lb >= BSF) must return the carried buffer
+    unchanged — the kernel skips gather+matmul entirely via pl.when."""
+    q, qsq, series, sqn, ids, _, _, bsf_e = _refine_case(
+        5, 4, 8, 13, 64, 3, seed=7)
+    alive = jnp.zeros((5, 4), bool)
+    bsf_d = jnp.asarray(
+        np.sort(np.random.default_rng(8).uniform(1, 2, (5, 3)), axis=1),
+        jnp.float32)
+    bsf_e = jnp.asarray(
+        np.random.default_rng(9).integers(0, 13 * 8, (5, 3)), jnp.int32)
+    dk, ek = ops.refine_topk(q, qsq, series, sqn, ids, alive,
+                             bsf_d, bsf_e, leaf_capacity=8, k=3,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(dk), np.asarray(bsf_d))
+    np.testing.assert_array_equal(np.asarray(ek), np.asarray(bsf_e))
+
+
 def test_kernels_compose_with_index_pipeline(walks):
     """The kernels ARE the stage implementations: summarize -> lb -> ed
     reproduces exact 1-NN on a small collection."""

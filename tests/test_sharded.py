@@ -55,6 +55,31 @@ def test_sharded_facade_knn_matches_oracle():
     """)
 
 
+def test_sharded_pallas_backend_matches_oracle():
+    """backend='pallas' (resolved from IndexConfig) on the sharded path:
+    each device's refine closure runs the fused kernel; results must be
+    identical to the ref backend and the brute-force oracle."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import FreshIndex, IndexConfig
+    from repro.core import search_bruteforce
+    from repro.data.synthetic import random_walk, query_workload
+    walks = random_walk(1024, 256, seed=4)
+    qs = jnp.asarray(query_workload(walks, 6, noise_sigma=0.05, seed=5))
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=64,
+                                             backend="pallas"))
+    mesh = jax.make_mesh((8,), ("data",))
+    ix.shard(mesh)
+    for k in (1, 5, 10):
+        d, i = ix.search(qs, k=k, sync_every=2)
+        db, ib = search_bruteforce(jnp.asarray(walks), qs, k=k)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ib))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(db),
+                                   rtol=1e-5, atol=1e-5)
+    print("sharded pallas knn OK")
+    """)
+
+
 def test_sharded_search_matches_single_device():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
