@@ -60,8 +60,9 @@ class BlockingExecutor(Executor):
             crashed_workers=len(crashed))
 
 
-def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
-    """Median wall seconds."""
+def timeit_samples(fn: Callable, *, repeat: int = 3,
+                   warmup: int = 1) -> List[float]:
+    """Per-call wall seconds, warmup excluded (feed latency_summary)."""
     for _ in range(warmup):
         fn()
     ts = []
@@ -69,8 +70,34 @@ def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
         t0 = time.perf_counter()
         fn()
         ts.append(time.perf_counter() - t0)
-    ts.sort()
+    return ts
+
+
+def timeit(fn: Callable, *, repeat: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds."""
+    ts = sorted(timeit_samples(fn, repeat=repeat, warmup=warmup))
     return ts[len(ts) // 2]
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Nearest-rank percentile (p in [0, 1]) of an unsorted sample;
+    0.0 when empty.  Matches QueryEngine.stats()'s definition so bench
+    rows and engine telemetry agree."""
+    if not values:
+        return 0.0
+    vs = sorted(values)
+    return vs[min(len(vs) - 1, max(0, int(p * len(vs))))]
+
+
+def latency_summary(samples_s: Sequence[float]) -> dict:
+    """p50/p99/mean in microseconds from per-call seconds — the shared
+    aggregation for the serve bench and the fig3/fig5 query benches."""
+    n = len(samples_s)
+    return {
+        "p50_us": round(percentile(samples_s, 0.50) * 1e6, 1),
+        "p99_us": round(percentile(samples_s, 0.99) * 1e6, 1),
+        "mean_us": round(sum(samples_s) / n * 1e6, 1) if n else 0.0,
+    }
 
 
 def row(name: str, seconds: float, derived: str = "", **extra) -> dict:

@@ -33,7 +33,8 @@ from repro.core.refresh import Injectors, RefreshExecutor
 from repro.core.tree import FatLeafTree
 from repro.data.synthetic import query_workload, random_walk, seismic_like
 
-from .common import BlockingExecutor, row, timeit
+from .common import (BlockingExecutor, latency_summary, percentile, row,
+                     timeit, timeit_samples)
 
 N_SERIES = 20_000
 N_QUERIES = 32
@@ -81,14 +82,20 @@ def fig3_thread_scaling() -> List[dict]:
     for bk in BACKENDS:
         index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64,
                                                     backend=bk))
-        t_q = timeit(lambda: jax.block_until_ready(index.search(qs)))
+        ts = timeit_samples(
+            lambda: jax.block_until_ready(index.search(qs)), repeat=5)
+        t_q = percentile(ts, 0.50)
         out.append(row(f"fig3/query/fresh_device/{bk}", t_q,
-                       per_query_us=t_q / N_QUERIES * 1e6))
+                       per_query_us=t_q / N_QUERIES * 1e6,
+                       **latency_summary(ts)))
         for k in (10, 100):
-            t_k = timeit(
-                lambda: jax.block_until_ready(index.search(qs, k=k)))
+            ts = timeit_samples(
+                lambda: jax.block_until_ready(index.search(qs, k=k)),
+                repeat=5)
+            t_k = percentile(ts, 0.50)
             out.append(row(f"fig3/query/fresh_device_k{k}/{bk}", t_k,
-                           per_query_us=t_k / N_QUERIES * 1e6))
+                           per_query_us=t_k / N_QUERIES * 1e6,
+                           **latency_summary(ts)))
     return out
 
 
@@ -107,10 +114,12 @@ def fig5_dataset_scaling() -> List[dict]:
             qs = jnp.asarray(query_workload(walks, N_QUERIES, 0.01))
             for bk in BACKENDS:
                 index = FreshIndex.build(raw, leaf_capacity=64, backend=bk)
-                t_q = timeit(
+                ts = timeit_samples(
                     lambda: jax.block_until_ready(index.search(qs)))
+                t_q = percentile(ts, 0.50)
                 out.append(row(f"fig5/{tag}/n{n}/query/{bk}", t_q,
-                               per_query_us=t_q / N_QUERIES * 1e6))
+                               per_query_us=t_q / N_QUERIES * 1e6,
+                               **latency_summary(ts)))
     return out
 
 

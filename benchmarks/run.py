@@ -30,6 +30,9 @@ def main() -> None:
                          "(BENCH_fresh.json)")
     ap.add_argument("--quick", action="store_true",
                     help="CI smoke scale: fewer series/queries")
+    ap.add_argument("--serve-quick", action="store_true",
+                    help="also drive the QueryEngine with a Poisson "
+                         "arrival stream (serve/* rows: p50/p99 + QPS)")
     args = ap.parse_args()
 
     from . import fresh_bench
@@ -44,7 +47,13 @@ def main() -> None:
     t0 = time.time()
     failures = 0
     rows = []
-    for fn in fresh_bench.ALL:
+    benches = list(fresh_bench.ALL)
+    if args.serve_quick:
+        from . import serve_bench
+        if args.quick:
+            serve_bench.set_quick()
+        benches += serve_bench.ALL
+    for fn in benches:
         tag = fn.__name__.split("_")[0]
         if only and tag not in only:
             continue

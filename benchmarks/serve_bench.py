@@ -1,0 +1,99 @@
+"""Serving-layer benchmark: a Poisson open-loop arrival stream driven
+through `FreshIndex.engine()` (`benchmarks/run.py --serve-quick`).
+
+Measures what the figures cannot: steady-state serving behaviour —
+per-query p50/p99 latency under micro-batching, achieved QPS, plan-cache
+hit rate (zero re-traces after warmup is the design claim), padding
+overhead, and the one-off cold cost of AOT-compiling the bucket plans.
+Rows land in BENCH_fresh.json next to the figure rows (`serve/...`).
+
+Open-loop means arrivals do NOT wait for completions (the classic
+coordinated-omission trap): submission times are scheduled ahead from an
+exponential inter-arrival draw and latency is measured from the
+*scheduled* arrival, so a stalled engine shows up as a p99 spike instead
+of silently throttling the offered load.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.api import FreshIndex, IndexConfig
+from repro.data.synthetic import query_workload, random_walk
+from repro.serve import EngineConfig
+
+from .common import latency_summary, row
+
+N_SERIES = 4_000
+N_QUERIES = 200          # arrival stream length
+TARGET_QPS = 400.0
+MAX_BATCH = 16
+K = 10
+
+
+def set_quick() -> None:
+    """Same CI knob as fresh_bench: shrink the stream, keep the shape."""
+    global N_SERIES, N_QUERIES
+    N_SERIES = 2_000
+    N_QUERIES = 120
+
+
+def serve_poisson() -> List[dict]:
+    walks = random_walk(N_SERIES, 256, seed=41)
+    queries = query_workload(walks, 64, noise_sigma=0.05, seed=42)
+    index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+    out = []
+
+    eng = index.engine(EngineConfig(max_batch=MAX_BATCH, workers=1,
+                                    linger_ms=1.0, warm_ks=(K,)))
+    try:
+        # cold cost: AOT-compiling every (bucket, k=K) plan up front —
+        # the trace+compile work a facade serving loop would pay inline,
+        # spread invisibly over its first requests
+        t0 = time.perf_counter()
+        eng.warmup(ks=(K,))
+        t_warm = time.perf_counter() - t0
+        n_plans = eng.stats()["plan_cache"]["size"]
+        out.append(row("serve/warmup_aot_compile", t_warm,
+                       f"plans={n_plans} k={K} "
+                       f"buckets=pow2..{MAX_BATCH}"))
+
+        rng = np.random.default_rng(43)
+        gaps = rng.exponential(1.0 / TARGET_QPS, N_QUERIES)
+        qidx = rng.integers(0, queries.shape[0], N_QUERIES)
+
+        # futures stamp completed_at on time.monotonic(); schedule there too
+        t_start = time.monotonic()
+        sched = t_start
+        futs = []
+        for g, qi in zip(gaps, qidx):
+            sched += g
+            now = time.monotonic()
+            if sched > now:
+                time.sleep(sched - now)
+            futs.append((sched, eng.submit(queries[qi], k=K)))
+        lat = []
+        for sched, f in futs:
+            f.result(timeout=120)
+            lat.append(f.completed_at - sched)
+        wall = time.monotonic() - t_start
+        st = eng.stats()
+        pc = st["plan_cache"]
+        out.append(row(
+            "serve/poisson/steady", wall,
+            f"offered={TARGET_QPS:.0f}qps stream={N_QUERIES}",
+            qps=round(N_QUERIES / wall, 1),
+            **latency_summary(lat),
+            rounds_per_query=round(st["rounds_per_query"], 2),
+            plan_hits=pc["hits"], plan_misses=pc["misses"],
+            padded_slots=st["batches"]["padded_slots"],
+            dispatched=st["batches"]["dispatched"]))
+    finally:
+        eng.close()
+    return out
+
+
+ALL = [serve_poisson]

@@ -1,0 +1,59 @@
+"""Serving quickstart: the QueryEngine in 40 lines.
+
+Builds an index, AOT-warms the per-bucket search plans, serves a stream
+of micro-batched k-NN submits (zero re-traces in steady state), then
+inserts a batch mid-stream to show Jiffy-style snapshot consistency: the
+in-flight future answers on the pre-insert snapshot while the next one
+sees the new series.
+
+    PYTHONPATH=src python examples/serve_engine.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.api import FreshIndex, IndexConfig
+from repro.serve import EngineConfig
+from repro.data.synthetic import query_workload, random_walk
+
+N, L, K = 20_000, 256, 10
+
+print(f"building a FreSh index over {N} series ...")
+walks = random_walk(N, L, seed=0)
+queries = query_workload(walks, 64, noise_sigma=0.05, seed=1)
+index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+
+with index.engine(EngineConfig(max_batch=16, workers=1,
+                               linger_ms=1.0)) as engine:
+    print("AOT-compiling the bucket plans (warmup) ...")
+    t0 = time.time()
+    engine.warmup(ks=(K,))
+    print(f"  {engine.stats()['plan_cache']['size']} plans "
+          f"in {time.time()-t0:.2f}s")
+
+    print("serving 100 submits through the micro-batcher ...")
+    futs = [engine.submit(queries[i % 64], k=K) for i in range(100)]
+    results = [f.result(timeout=120) for f in futs]
+    st = engine.stats()
+    print(f"  p50={st['latency_ms']['p50']:.2f}ms "
+          f"p99={st['latency_ms']['p99']:.2f}ms "
+          f"qps={st['qps']:.0f} "
+          f"plan hits/misses={st['plan_cache']['hits']}"
+          f"/{st['plan_cache']['misses']} "
+          f"rounds/query={st['rounds_per_query']:.1f}")
+    assert st["plan_cache"]["misses"] == st["plan_cache"]["size"], \
+        "steady state must not re-trace"
+
+    print("concurrent insert: snapshot consistency ...")
+    inflight = engine.submit(queries[:8], k=1)       # epoch 0
+    engine.add(random_walk(500, L, seed=2))          # publish epoch 1
+    later = engine.submit(queries[:8], k=1)          # sees the new series
+    d_old, i_old = inflight.result(timeout=120)
+    d_new, i_new = later.result(timeout=120)
+    assert np.all(i_old < N), "in-flight answered on the pre-add snapshot"
+    print(f"  epoch={engine.epoch}: in-flight ids stayed < {N} (its "
+          f"submit-time snapshot); the later submit searched all "
+          f"{index.n_series} series")
+
+print("OK — micro-batched serving, AOT plans, snapshot-consistent adds.")

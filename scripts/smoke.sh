@@ -2,13 +2,16 @@
 # End-to-end smoke: build -> k-NN search -> add/compact -> save/load via
 # the FreshIndex facade, on whatever backend jax finds (CPU in CI), then
 # a 2-figure benchmark subset (fig3 query + fig5 scaling, both kernel
-# backends) at --quick scale, emitting the machine-readable
-# BENCH_fresh.json perf record.
+# backends) PLUS the serving leg (--serve-quick: QueryEngine driven by a
+# Poisson arrival stream) at --quick scale, emitting the machine-readable
+# BENCH_fresh.json perf record with p50/p99 latency + QPS rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python examples/quickstart.py
-python -m benchmarks.run --only fig3,fig5 --quick --json BENCH_fresh.json
+python examples/serve_engine.py
+python -m benchmarks.run --only fig3,fig5,serve --quick --serve-quick \
+    --json BENCH_fresh.json
 python - <<'EOF'
 import json
 rows = json.load(open("BENCH_fresh.json"))["rows"]
@@ -16,6 +19,12 @@ for fig, bk in (("fig3", "ref"), ("fig3", "pallas"),
                 ("fig5", "ref"), ("fig5", "pallas")):
     assert any(r["name"].startswith(fig) and r["name"].endswith("/" + bk)
                and "per_query_us" in r for r in rows), (fig, bk)
-print(f"BENCH_fresh.json OK: {len(rows)} rows, "
-      "both backends present for fig3+fig5")
+serve = [r for r in rows if r["name"].startswith("serve/poisson")]
+assert serve, "no serve/poisson rows in BENCH_fresh.json"
+for r in serve:
+    for key in ("p50_us", "p99_us", "qps"):
+        assert key in r, (r["name"], key)
+assert any(r["name"] == "serve/warmup_aot_compile" for r in rows)
+print(f"BENCH_fresh.json OK: {len(rows)} rows, both backends present "
+      "for fig3+fig5, serve p50/p99/QPS rows present")
 EOF

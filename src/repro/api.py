@@ -40,10 +40,20 @@ Migration table (old free functions -> facade):
     save_checkpoint(dir, step, idx)       index.save(dir)
     load_checkpoint(dir, like)            FreshIndex.load(dir)
     (no incremental insert)               index.add(batch); index.compact()
+    index.search in a serving loop        engine = index.engine()
+      (re-traces per (Q, k) shape)          fut = engine.submit(q, k=10)
+                                            dist, ids = fut.result()
+    (no defined add/search overlap)       engine.add(batch)  — snapshot-
+                                            consistent: in-flight queries
+                                            answer on their submit epoch
     ====================================  ================================
 
 The old functions remain importable from `repro.core` and are the engine
-under this facade; new code should not call them directly.
+under this facade; calling `search` / `make_sharded_search` directly now
+emits a DeprecationWarning pointing here.  For steady-state serving use
+`index.engine(EngineConfig(...))` (`repro.serve`): micro-batched submits,
+AOT-compiled per-bucket plans (zero re-traces after warmup), epoch
+snapshots for concurrent inserts.
 
 Incremental adds follow Jiffy's batch-update idea (lock-free skip list
 with batch updates, arXiv:2102.01044): recent series live in an unsorted
@@ -66,8 +76,8 @@ import numpy as np
 from repro.checkpoint.store import load_arrays, save_checkpoint
 from repro.core import isax
 from repro.core.index import FlatIndex, build_index, index_stats, pad_leaves
-from repro.core.search import (make_sharded_search, search as _search,
-                               search_bruteforce, shard_index)
+from repro.core.search import (build_sharded_search, merge_delta_topk,
+                               run_search, shard_index, squeeze_k)
 
 _BOUNDS = ("prefix", "symbox", "paabox")
 _BACKENDS = ("ref", "pallas")
@@ -150,7 +160,7 @@ class FreshIndex:
         # the device-resident index.
         self._n_base = int(jnp.sum(idx.valid))
         self._delta: list = []                  # pending unsorted batches
-        self._delta_cat: Optional[np.ndarray] = None    # concat cache
+        self._delta_cat = None                  # jnp concat cache
         self._mesh = None
         self._mesh_axis = "data"
         self._sharded_fns: dict = {}            # (k, round_leaves, ...) -> fn
@@ -245,7 +255,7 @@ class FreshIndex:
                    backend)
             fn = self._sharded_fns.get(key)
             if fn is None:
-                fn = make_sharded_search(
+                fn = build_sharded_search(
                     self._mesh, axis=self._mesh_axis, k=k,
                     round_leaves=round_leaves, sync_every=sync_every,
                     max_rounds=max_rounds, znorm=self.config.znorm,
@@ -254,37 +264,49 @@ class FreshIndex:
                 self._sharded_fns[key] = fn
             d, i = fn(self._idx, q)
         else:
-            d, i = _search(self._idx, q, k=k, round_leaves=round_leaves,
-                           znorm=self.config.znorm, max_rounds=max_rounds,
-                           pq_budget=pq_budget, backend=backend,
-                           config=self.config)
+            d, i = run_search(self._idx, q, k=k, round_leaves=round_leaves,
+                              znorm=self.config.znorm,
+                              max_rounds=max_rounds, pq_budget=pq_budget,
+                              backend=backend, config=self.config)
         if not self._delta:
             return d, i
-        return self._merge_delta(q, d, i, k)
+        # fold the exact delta scan into the core answer.  The core
+        # search program stays cached across add() calls; only the small
+        # merge re-jits when the delta row count changes.  (The serving
+        # layer instead AOT-compiles the fused snapshot_search once per
+        # published epoch — same math, different compile amortization.)
+        d2 = d[:, None] if k == 1 else d
+        i2 = i[:, None] if k == 1 else i
+        md, mi = merge_delta_topk(self.delta_cat, q, d2, i2, k=k,
+                                  n_base=self._n_base,
+                                  znorm=self.config.znorm)
+        return squeeze_k(md, mi, k)
 
-    def _merge_delta(self, q, d, i, k: int):
-        """Exact scan of the unsorted delta, folded into the main top-k.
-
-        The concatenated delta is cached between add() calls; note the
-        brute-force scan re-jits whenever the delta's row count changes,
-        so keep deltas small relative to compact() frequency."""
+    @property
+    def delta_cat(self) -> Optional[jnp.ndarray]:
+        """The pending delta as one (m, L) device array (None when empty);
+        concatenation is cached between add() calls."""
+        if not self._delta:
+            return None
         if self._delta_cat is None:
-            self._delta_cat = np.concatenate(self._delta, axis=0)
-        delta = self._delta_cat
-        kd = min(k, delta.shape[0])
-        dd, di = search_bruteforce(jnp.asarray(delta), q, k=kd,
-                                   znorm=self.config.znorm)
-        base = self._n_base
-        d2, i2 = jnp.atleast_2d(d.T).T, jnp.atleast_2d(i.T).T
-        dd2, di2 = jnp.atleast_2d(dd.T).T, jnp.atleast_2d(di.T).T
-        alld = jnp.concatenate([d2, dd2], axis=1)
-        alli = jnp.concatenate([i2, di2 + base], axis=1)
-        neg, pos = jax.lax.top_k(-alld, k)
-        md = -neg
-        mi = jnp.take_along_axis(alli, pos, axis=1)
-        if k == 1:
-            return md[:, 0], mi[:, 0]
-        return md, mi
+            self._delta_cat = jnp.asarray(
+                np.concatenate(self._delta, axis=0))
+        return self._delta_cat
+
+    # ------------------------------------------------------------------ #
+    # serving
+    # ------------------------------------------------------------------ #
+    def engine(self, config: Optional["EngineConfig"] = None,
+               **overrides) -> "QueryEngine":
+        """A serving-layer QueryEngine over this index: micro-batched
+        `submit(q, k=...)` futures, AOT-compiled per-bucket search plans
+        (steady state never re-traces), and snapshot-consistent concurrent
+        add().  `overrides` are EngineConfig fields, mirroring build()."""
+        from repro.serve import EngineConfig, QueryEngine
+        cfg = config or EngineConfig()
+        if overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        return QueryEngine(self, cfg)
 
     # ------------------------------------------------------------------ #
     # incremental updates (Jiffy-style batch delta)

@@ -36,8 +36,10 @@ from .index import (FlatIndex, build_index, build_index_host,  # noqa: F401
                     index_stats, pad_leaves)
 from .refresh import (CounterObject, Injectors, RefreshExecutor,  # noqa: F401
                       RefreshRun, WorkerCrash)
-from .search import (make_sharded_search, prepare_queries,  # noqa: F401
-                     search, search_bruteforce, shard_index)
+from .search import (build_sharded_search, make_sharded_search,  # noqa: F401
+                     merge_delta_topk, prepare_queries, run_search,
+                     search, search_bruteforce, search_plan,
+                     shard_index, snapshot_search)
 from .traverse import (ArrayTraverse, Executor, SequentialExecutor,  # noqa: F401
                        StageStats, TraverseObject,
                        check_traversing_property)

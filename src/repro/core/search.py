@@ -1,4 +1,22 @@
-"""Exact 1-NN query answering over the flat FreSh index (paper Section III/V).
+"""Exact k-NN query answering over the flat FreSh index (paper Section III/V).
+
+Layering (PR 3): the module separates the PURE search computation from
+knob resolution and dispatch so the facade and the serving layer share
+one code path —
+
+  search_plan_impl   the pure plan: fully-resolved knobs, (Q, k) outputs
+                     plus the refinement-round count; traceable, no jit
+  search_plan        jax.jit(search_plan_impl) — what FreshIndex.search
+                     dispatches through and what serve.PlanCache
+                     AOT-compiles per (bucket, k) with .lower().compile()
+  snapshot_search    one fused program over a (core, delta) epoch
+                     snapshot: plan + exact delta scan + top-k merge
+  run_search         knob resolution (explicit arg > IndexConfig >
+                     default) + the historical k == 1 squeeze; the
+                     facade folds a pending delta in via merge_delta_topk
+  search / make_sharded_search
+                     DEPRECATED free-function shims (DeprecationWarning
+                     pointing at the repro.api migration table)
 
 The four traverse-object stages map to:
 
@@ -39,6 +57,7 @@ Refresh manages between its two modes.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Optional, Tuple
 
 import jax
@@ -184,42 +203,47 @@ def _refine_round(q, q_sq, series, sq_norms, ids, alive, bsf_d, bsf_e,
                                bsf_d, bsf_e, leaf_capacity=M, k=k)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "round_leaves", "znorm",
-                                             "max_rounds", "backend",
-                                             "pq_budget", "config"))
-def search(idx: FlatIndex, queries: jnp.ndarray, *,
-           k: int = 1, round_leaves: Optional[int] = None,
-           znorm: bool = True, max_rounds: Optional[int] = None,
-           backend: Optional[str] = None, pq_budget: Optional[int] = None,
-           config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Exact k-NN for a batch of queries.
+def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
+                     k: int = 1, round_leaves: int = 8, znorm: bool = True,
+                     max_rounds: Optional[int] = None, backend: str = "ref",
+                     pq_budget: Optional[int] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The PURE search plan: exact k-NN with every knob fully resolved.
 
-    Returns (dist, original_id) of shape (Q,) when k == 1 (the historical
-    1-NN interface) and (Q, k) ascending-by-distance otherwise.  The BSF
-    scalar of the paper generalizes to a per-query top-k buffer: each
-    refinement round's real distances are folded in with jax.lax.top_k and
-    the PQ termination condition compares the next unrefined lower bound
-    against the k-th best-so-far (the buffer's worst member).
+    This is the one computation both `FreshIndex.search` and the serving
+    layer (`repro.serve`) execute — the facade traces it through the
+    jitted `search_plan`, the serving PlanCache AOT-compiles the very same
+    jaxpr per (batch-bucket, k) with `.lower().compile()`, so the two are
+    bit-identical on the same snapshot.  No knob resolution, no squeezing,
+    no dispatch happens here; callers pass concrete values.
 
-    backend / round_leaves / pq_budget default to None and resolve from
-    `config` (an IndexConfig — what FreshIndex.search passes) when given,
-    falling back to 'ref' / 8 / uncapped.  `pq_budget` caps the number of
-    leaves admitted to the priority queue: like `max_rounds`, a budget too
-    small for the termination condition to trigger makes distances upper
-    bounds instead of exact.
+    Returns (dist, original_id, rounds): dist/id are (Q, k) ascending by
+    distance (no k == 1 squeeze — see `run_search`), rounds is the scalar
+    number of refinement rounds the while_loop executed (the paper's
+    DeleteMin count; the serving layer surfaces it as rounds-per-query).
+
+    The BSF scalar of the paper generalizes to a per-query top-k buffer:
+    each refinement round's real distances are folded in with
+    jax.lax.top_k and the PQ termination condition compares the next
+    unrefined lower bound against the k-th best-so-far (the buffer's
+    worst member).  `pq_budget` caps the number of leaves admitted to the
+    priority queue: like `max_rounds`, a budget too small for the
+    termination condition to trigger makes distances upper bounds instead
+    of exact.
     """
+    if backend not in _BACKENDS:
+        raise ValueError(f"backend must be one of {_BACKENDS}, "
+                         f"got {backend!r}")
     L = idx.series.shape[1]
     Q = queries.shape[0]
-    K = _resolve_knob(round_leaves, config, "round_leaves", 8)
-    bk = _resolve_backend(backend, config)
-    pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
+    K = round_leaves
     M = idx.leaf_capacity
     n_leaves = idx.n_leaves
 
     q, q_paa = prepare_queries(queries, znorm, index=idx)
     q_sq = jnp.sum(q * q, axis=-1)
 
-    lb = leaf_lower_bounds(idx, q_paa, L, bk)          # (Q, n_leaves)
+    lb = leaf_lower_bounds(idx, q_paa, L, backend)     # (Q, n_leaves)
 
     n_rounds_cap = _rounds_cap(n_leaves, K, max_rounds, pq_budget)
     order, sorted_lb = _pq_order(lb, K, n_rounds_cap, pq_budget)
@@ -239,12 +263,12 @@ def search(idx: FlatIndex, queries: jnp.ndarray, *,
         alive = (lbs < bsf_d[:, -1:])                    # (Q, K)
         bsf_d, bsf_e = _refine_round(q, q_sq, idx.series, idx.sq_norms,
                                      ids, alive, bsf_d, bsf_e,
-                                     M=M, k=k, backend=bk)
+                                     M=M, k=k, backend=backend)
         return cursor + K, bsf_d, bsf_e
 
     state = (jnp.int32(0), jnp.full((Q, k), BIG),
              jnp.zeros((Q, k), jnp.int32))
-    _, bsf_d, bsf_e = jax.lax.while_loop(cond, body, state)
+    cursor, bsf_d, bsf_e = jax.lax.while_loop(cond, body, state)
 
     # the top-k set is exact; the matmul-form distance loses ~1e-3 absolute
     # to f32 cancellation (||q||^2+||x||^2-2qx with ||.||^2 ~ L).  Recompute
@@ -257,23 +281,20 @@ def search(idx: FlatIndex, queries: jnp.ndarray, *,
     resort = jnp.argsort(d, axis=1)
     d = jnp.sqrt(jnp.take_along_axis(d, resort, axis=1))
     ids = jnp.take_along_axis(ids, resort, axis=1)
-    if k == 1:
-        return d[:, 0], ids[:, 0]
-    return d, ids
+    return d, ids, cursor // K
 
 
-@functools.partial(jax.jit, static_argnames=("k", "znorm"))
-def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
-                      *, k: int = 1, znorm: bool = True
-                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Top-k oracle: exact scan over all series (matmul form).
+search_plan = functools.partial(
+    jax.jit, static_argnames=("k", "round_leaves", "znorm", "max_rounds",
+                              "backend", "pq_budget"))(search_plan_impl)
+search_plan.__doc__ = search_plan_impl.__doc__
 
-    Candidate selection uses the same matmul-form distances as the index
-    search; reported distances are recomputed in direct form.  Returns
-    shapes (Q,) for k == 1, (Q, k) ascending otherwise.  k and znorm are
-    keyword-only: the old signature had znorm third, and a positional k
-    would silently reinterpret those call sites.
-    """
+
+def _bruteforce_topk(raw: jnp.ndarray, queries: jnp.ndarray,
+                     *, k: int, znorm: bool
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(Q, k) exact scan over all series (matmul-form selection, direct-form
+    reported distances) — the traceable body of `search_bruteforce`."""
     x = isax.znormalize(raw).astype(jnp.float32) if znorm \
         else raw.astype(jnp.float32)
     q = isax.znormalize(queries).astype(jnp.float32) if znorm \
@@ -286,9 +307,132 @@ def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
     resort = jnp.argsort(d_exact, axis=1)               # see search(): exact
     d = jnp.sqrt(jnp.take_along_axis(d_exact, resort, axis=1))
     i = jnp.take_along_axis(i.astype(jnp.int32), resort, axis=1)
+    return d, i
+
+
+def _merge_topk(d_a, i_a, d_b, i_b, k: int):
+    """Fold two (Q, *) candidate sets into the (Q, k) best, ties to set a."""
+    alld = jnp.concatenate([d_a, d_b], axis=1)
+    alli = jnp.concatenate([i_a, i_b], axis=1)
+    neg, pos = jax.lax.top_k(-alld, k)
+    return -neg, jnp.take_along_axis(alli, pos, axis=1)
+
+
+def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
+                         queries: jnp.ndarray, *, k: int, n_base: int,
+                         round_leaves: int = 8, znorm: bool = True,
+                         max_rounds: Optional[int] = None,
+                         backend: str = "ref",
+                         pq_budget: Optional[int] = None
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Search plan over a (core index, delta buffer) epoch snapshot.
+
+    The Jiffy-style snapshot the serving layer publishes on add(): the
+    pruned core index answers via `search_plan_impl`, the unsorted (m, L)
+    delta is scanned EXACTLY, and the two candidate sets merge into one
+    (Q, k) result whose delta ids continue after the `n_base` core series.
+    One fused program, AOT-compiled once per published epoch by
+    serve.PlanCache.  (The facade instead keeps its cached core program
+    and re-jits only `merge_delta_topk` — cheaper for add-heavy one-shot
+    use, where every add would otherwise recompile the whole plan.)
+    """
+    d, i, rounds = search_plan_impl(
+        idx, queries, k=k, round_leaves=round_leaves, znorm=znorm,
+        max_rounds=max_rounds, backend=backend, pq_budget=pq_budget)
+    kd = min(k, delta.shape[0])
+    dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm)
+    md, mi = _merge_topk(d, i, dd, di + n_base, k)
+    return md, mi, rounds
+
+
+snapshot_search = functools.partial(
+    jax.jit, static_argnames=("k", "n_base", "round_leaves", "znorm",
+                              "max_rounds", "backend",
+                              "pq_budget"))(snapshot_search_impl)
+snapshot_search.__doc__ = snapshot_search_impl.__doc__
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_base", "znorm"))
+def merge_delta_topk(delta: jnp.ndarray, queries: jnp.ndarray,
+                     d: jnp.ndarray, i: jnp.ndarray, *, k: int,
+                     n_base: int, znorm: bool = True
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fold an exact delta scan into already-computed (Q, k) main-index
+    results — the sharded facade path, where the core answer comes from a
+    separate shard_map program and only the merge runs here."""
+    kd = min(k, delta.shape[0])
+    dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm)
+    return _merge_topk(d, i, dd, di + n_base, k)
+
+
+def squeeze_k(d: jnp.ndarray, i: jnp.ndarray, k: int):
+    """The historical 1-NN interface: (Q, 1) -> (Q,) when k == 1."""
     if k == 1:
         return d[:, 0], i[:, 0]
     return d, i
+
+
+def run_search(idx: FlatIndex, queries: jnp.ndarray, *,
+               k: int = 1, round_leaves: Optional[int] = None,
+               znorm: bool = True, max_rounds: Optional[int] = None,
+               backend: Optional[str] = None,
+               pq_budget: Optional[int] = None,
+               config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Knob resolution + dispatch over the jitted `search_plan` — the
+    facade's entry point (no deprecation warning; `search` is the warning
+    shim around this).  backend / round_leaves / pq_budget default to None
+    and resolve from `config` (an IndexConfig — what FreshIndex.search
+    passes), falling back to 'ref' / 8 / uncapped.  Returns (Q,) arrays
+    for k == 1, (Q, k) ascending otherwise."""
+    K = _resolve_knob(round_leaves, config, "round_leaves", 8)
+    bk = _resolve_backend(backend, config)
+    pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
+    d, i, _ = search_plan(idx, queries, k=k, round_leaves=K, znorm=znorm,
+                          max_rounds=max_rounds, backend=bk,
+                          pq_budget=pq_budget)
+    return squeeze_k(d, i, k)
+
+
+def _warn_deprecated_free_function(old: str, new: str) -> None:
+    warnings.warn(
+        f"calling repro.core.search.{old} directly is deprecated; use "
+        f"{new} instead (see the migration table in repro.api and the "
+        f"README)", DeprecationWarning, stacklevel=3)
+
+
+def search(idx: FlatIndex, queries: jnp.ndarray, *,
+           k: int = 1, round_leaves: Optional[int] = None,
+           znorm: bool = True, max_rounds: Optional[int] = None,
+           backend: Optional[str] = None, pq_budget: Optional[int] = None,
+           config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """DEPRECATED free-function spelling of exact k-NN.
+
+    Kept as a compatibility shim over `run_search` (knob resolution) +
+    `search_plan` (the pure plan).  New code: `FreshIndex.search(q, k=...)`
+    for one-shot batches, `FreshIndex.engine()` for serving loops.
+    """
+    _warn_deprecated_free_function(
+        "search", "FreshIndex.search(q, k=...) or FreshIndex.engine()")
+    return run_search(idx, queries, k=k, round_leaves=round_leaves,
+                      znorm=znorm, max_rounds=max_rounds, backend=backend,
+                      pq_budget=pq_budget, config=config)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "znorm"))
+def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
+                      *, k: int = 1, znorm: bool = True
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Top-k oracle: exact scan over all series (matmul form).
+
+    Candidate selection uses the same matmul-form distances as the index
+    search; reported distances are recomputed in direct form.  Returns
+    shapes (Q,) for k == 1, (Q, k) ascending otherwise.  k and znorm are
+    keyword-only: the old signature had znorm third, and a positional k
+    would silently reinterpret those call sites.  NOT deprecated: this is
+    the testing oracle the migration table keeps.
+    """
+    d, i = _bruteforce_topk(raw, queries, k=k, znorm=znorm)
+    return squeeze_k(d, i, k)
 
 
 # ===========================================================================
@@ -312,12 +456,12 @@ def shard_index(idx: FlatIndex, mesh: Mesh, axis: str = "data") -> FlatIndex:
     )
 
 
-def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
-                        round_leaves: Optional[int] = None,
-                        sync_every: int = 1,
-                        max_rounds: Optional[int] = None, znorm: bool = True,
-                        backend: Optional[str] = None,
-                        pq_budget: Optional[int] = None, config=None):
+def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
+                         round_leaves: Optional[int] = None,
+                         sync_every: int = 1,
+                         max_rounds: Optional[int] = None, znorm: bool = True,
+                         backend: Optional[str] = None,
+                         pq_budget: Optional[int] = None, config=None):
     """Builds a jitted sharded k-NN search(idx, queries) for the given mesh.
 
     Each device: local lower bounds + local partial-selection PQ + local
@@ -427,3 +571,15 @@ def make_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
                   idx.leaf_hi, q, q_paa, q_sq)
 
     return sharded_search
+
+
+def make_sharded_search(mesh: Mesh, **kwargs):
+    """DEPRECATED free-function spelling of the sharded search builder.
+
+    Compatibility shim over `build_sharded_search`; new code should call
+    `FreshIndex.shard(mesh)` and then `index.search(q, k=...)`.
+    """
+    _warn_deprecated_free_function(
+        "make_sharded_search",
+        "FreshIndex.shard(mesh) then index.search(q, k=...)")
+    return build_sharded_search(mesh, **kwargs)

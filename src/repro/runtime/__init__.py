@@ -1,1 +1,28 @@
-"""Distributed runtime: sharding planner, fault tolerance, elasticity."""
+"""Distributed runtime: work journal + helping, elasticity, sharding plan.
+
+One import surface over the three runtime modules, so the serving layer
+(`repro.serve` registers every dispatched batch as a journal part) and
+users write `from repro.runtime import WorkJournal` instead of deep
+module paths:
+
+    journal   — WorkJournal / PartState: persistent done-flags with the
+                paper's backoff-then-help rule (T_avg, Section V-A)
+    elastic   — ElasticController / StragglerMonitor / plan_mesh_for:
+                re-mesh on pod loss, EWMA straggler flagging
+    sharding  — ShardingPlan / make_plan / constrain: logical-axis ->
+                mesh-axis placement for the model stack
+"""
+
+from .elastic import (ElasticController, MeshSpec,  # noqa: F401
+                      StragglerMonitor, plan_mesh_for)
+from .journal import PartState, WorkJournal  # noqa: F401
+from .sharding import (ShardingPlan, active_plan, batch_axes_for,  # noqa: F401
+                       constrain, make_plan, seq_attn_specs,
+                       tree_param_shardings)
+
+__all__ = [
+    "ElasticController", "MeshSpec", "StragglerMonitor", "plan_mesh_for",
+    "PartState", "WorkJournal",
+    "ShardingPlan", "active_plan", "batch_axes_for", "constrain",
+    "make_plan", "seq_attn_specs", "tree_param_shardings",
+]

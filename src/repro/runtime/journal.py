@@ -44,18 +44,73 @@ class PartState:
 
 class WorkJournal:
     """Per-stage chunk journal.  Single-writer-per-part semantics with
-    atomic whole-file persistence (rename)."""
+    atomic whole-file persistence (rename).
+
+    Part ids are GLOBAL and stable: a streaming producer (the serving
+    layer registers one part per dispatched batch) can prune_done() the
+    completed prefix so the resident window — and every scan — stays
+    bounded by the in-flight work, while ids keep counting up and the
+    cumulative stats survive pruning."""
 
     def __init__(self, path: Optional[str], n_parts: int,
                  backoff_factor: float = 2.0):
         self.path = path
-        self.n_parts = n_parts
+        self.n_parts = n_parts                  # total parts ever created
         self.backoff_factor = backoff_factor
         self.parts: List[PartState] = [PartState() for _ in range(n_parts)]
+        self._base = 0                          # ids below this are pruned
+        self._pruned_helped = 0                 # stats carried past pruning
+        self._pruned_attempts = 0
         self._t_avg = 0.0
         self._t_cnt = 0
         if path and os.path.exists(path):
             self._load()
+
+    # ---------------------------------------------------- dynamic growth
+    def add_part(self) -> int:
+        """Append one part to an open-ended journal and return its id.
+
+        Fixed workloads (an epoch of chunks) size the journal up front;
+        streaming producers grow it one part per unit of work.  Construct
+        with n_parts=0 for a purely dynamic journal (reloads then adopt
+        the persisted part count)."""
+        self.parts.append(PartState())
+        self.n_parts = self._base + len(self.parts)
+        self._persist()
+        return self.n_parts - 1
+
+    def part(self, pid: int) -> PartState:
+        """The state of global part id `pid` (must not be pruned away)."""
+        if pid < self._base:
+            raise IndexError(
+                f"part {pid} was pruned (done); window starts at "
+                f"{self._base} — query is_done() for completion state")
+        return self.parts[pid - self._base]
+
+    def is_done(self, pid: int) -> bool:
+        """Completion state that survives pruning: only DONE parts are
+        ever pruned, so a pruned id is done by definition.  Helpers that
+        lost a race to a faster executor must use this, not part()."""
+        if pid < self._base:
+            return True
+        return self.parts[pid - self._base].done
+
+    def prune_done(self) -> int:
+        """Drop the longest DONE prefix of the window; returns how many.
+
+        Ids stay global, cumulative stats are preserved — only the
+        per-part state of long-finished work is released, keeping
+        acquire()/unfinished() scans O(in-flight) on an endless stream."""
+        n = 0
+        while n < len(self.parts) and self.parts[n].done:
+            self._pruned_helped += self.parts[n].helped
+            self._pruned_attempts += self.parts[n].attempts
+            n += 1
+        if n:
+            del self.parts[:n]
+            self._base += n
+            self._persist()
+        return n
 
     # ------------------------------------------------------------ owner
     def acquire(self, worker: int) -> Optional[int]:
@@ -66,11 +121,11 @@ class WorkJournal:
                 p.acquired_at = time.time()
                 p.attempts += 1
                 self._persist()
-                return i
+                return self._base + i
         return None
 
     def mark_done(self, part: int) -> None:
-        p = self.parts[part]
+        p = self.part(part)
         if not p.done:
             p.done = True
             p.done_at = time.time()
@@ -95,11 +150,11 @@ class WorkJournal:
             if p.done:
                 continue
             if p.owner < 0 or (now - p.acquired_at) > ddl:
-                out.append(i)
+                out.append(self._base + i)
         return out
 
     def steal(self, part: int, helper: int) -> None:
-        p = self.parts[part]
+        p = self.part(part)
         p.owner = helper
         p.acquired_at = time.time()
         p.attempts += 1
@@ -110,14 +165,18 @@ class WorkJournal:
         return all(p.done for p in self.parts)
 
     def unfinished(self) -> List[int]:
-        return [i for i, p in enumerate(self.parts) if not p.done]
+        return [self._base + i
+                for i, p in enumerate(self.parts) if not p.done]
 
     def stats(self) -> dict:
         return {
             "n_parts": self.n_parts,
-            "done": sum(p.done for p in self.parts),
-            "helped": sum(p.helped for p in self.parts),
-            "attempts": sum(p.attempts for p in self.parts),
+            "pruned": self._base,
+            "done": self._base + sum(p.done for p in self.parts),
+            "helped": self._pruned_helped + sum(p.helped
+                                                for p in self.parts),
+            "attempts": self._pruned_attempts + sum(p.attempts
+                                                    for p in self.parts),
             "t_avg": self._t_avg,
         }
 
@@ -125,7 +184,9 @@ class WorkJournal:
     def _persist(self) -> None:
         if not self.path:
             return
-        data = {"n_parts": self.n_parts,
+        data = {"n_parts": self.n_parts, "base": self._base,
+                "pruned_helped": self._pruned_helped,
+                "pruned_attempts": self._pruned_attempts,
                 "t_avg": self._t_avg, "t_cnt": self._t_cnt,
                 "parts": [vars(p) for p in self.parts]}
         d = os.path.dirname(self.path) or "."
@@ -138,9 +199,14 @@ class WorkJournal:
     def _load(self) -> None:
         with open(self.path) as f:
             data = json.load(f)
+        if self.n_parts == 0:                 # dynamic journal: adopt file
+            self.n_parts = data["n_parts"]
         assert data["n_parts"] == self.n_parts, \
             "journal/workload mismatch (elastic re-partition not supported " \
             "mid-stage; finish or clear the stage first)"
+        self._base = data.get("base", 0)
+        self._pruned_helped = data.get("pruned_helped", 0)
+        self._pruned_attempts = data.get("pruned_attempts", 0)
         self._t_avg = data.get("t_avg", 0.0)
         self._t_cnt = data.get("t_cnt", 0)
         self.parts = [PartState(**p) for p in data["parts"]]

@@ -1,0 +1,31 @@
+"""Serving layer: sessions, micro-batching, AOT-compiled search plans,
+snapshot-consistent concurrent inserts.
+
+    from repro.api import FreshIndex
+    from repro.serve import EngineConfig
+
+    index = FreshIndex.build(series)
+    with index.engine(EngineConfig(max_batch=32, workers=1)) as engine:
+        engine.warmup(ks=(1, 10))          # AOT-compile every bucket
+        fut = engine.submit(q, k=10)       # returns immediately
+        dist, ids = fut.result()           # == index.search(q, k=10)
+        engine.add(batch)                  # new epoch; in-flight queries
+                                           # keep their snapshot
+        print(engine.stats())              # p50/p99, epoch lag, hit rate
+
+Module map: `engine` (QueryEngine/futures/epoch snapshots), `batcher`
+(shape-bucketed padding), `plan_cache` (jit lower/compile AOT plans).
+The compute itself lives in `repro.core.search` — the engine executes
+the exact same `search_plan` / `snapshot_search` programs the
+`FreshIndex` facade dispatches through.
+"""
+
+from .batcher import Batch, MicroBatcher, Pending, bucket_for, shape_buckets
+from .engine import EngineConfig, QueryEngine, SearchFuture, Snapshot
+from .plan_cache import CompiledPlan, Knobs, PlanCache
+
+__all__ = [
+    "Batch", "MicroBatcher", "Pending", "bucket_for", "shape_buckets",
+    "EngineConfig", "QueryEngine", "SearchFuture", "Snapshot",
+    "CompiledPlan", "Knobs", "PlanCache",
+]

@@ -1,0 +1,124 @@
+"""Micro-batcher: pending queries -> padded, shape-bucketed batches.
+
+XLA executables are shape-monomorphic, so a serving layer that dispatched
+every submit() at its natural (Q, k) would compile an unbounded family of
+programs.  Instead, pending queries are grouped by (epoch, k) — a batch
+can only run against ONE snapshot and one top-k width — concatenated in
+arrival order, chunked at `max_batch`, and each chunk is padded up to the
+smallest power-of-two bucket that holds it.  The PlanCache then only ever
+sees the fixed bucket set {1, 2, 4, ..., max_batch}, one executable each.
+
+Padding replicates the chunk's last real query row: real data z-normalizes
+cleanly (an all-zeros pad row would hit the zero-variance path), the
+padded rows' results are simply never read back, and the wasted slots are
+accounted in `QueryEngine.stats()["batches"]["padded_slots"]` so the
+bucket-overhead / plan-count trade is measurable (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def shape_buckets(max_batch: int) -> Tuple[int, ...]:
+    """Powers of two up to (and always including) max_batch."""
+    out: List[int] = []
+    b = 1
+    while b < max_batch:
+        out.append(b)
+        b *= 2
+    out.append(max_batch)
+    return tuple(out)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket holding n rows (callers chunk to max_batch first)."""
+    for b in buckets:
+        if b >= n:
+            return b
+    raise ValueError(f"{n} rows exceed the largest bucket {buckets[-1]}")
+
+
+@dataclasses.dataclass
+class Pending:
+    """One submit() call waiting to be batched."""
+    queries: np.ndarray                 # (m, L) float32
+    k: int
+    epoch: int
+    future: object                      # SearchFuture
+    submitted_at: float
+
+
+@dataclasses.dataclass
+class Batch:
+    """One padded dispatch unit bound to a single epoch snapshot.
+
+    `segments` maps batch rows back to the submitting futures:
+    (future, dst_row_in_batch, src_row_in_future, n_rows).  The query
+    matrix stays host-side (np) so a journal helper can re-execute the
+    batch even after a donated device buffer was consumed."""
+    queries: np.ndarray                 # (bucket_q, L) padded
+    k: int
+    epoch: int
+    n_real: int
+    segments: List[Tuple[object, int, int, int]]
+    formed_at: float
+    part_id: int = -1
+
+    @property
+    def padded_slots(self) -> int:
+        return self.queries.shape[0] - self.n_real
+
+
+class MicroBatcher:
+    """Stateless batch former over a drained pending list."""
+
+    def __init__(self, max_batch: int,
+                 buckets: Optional[Sequence[int]] = None):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.max_batch = max_batch
+        self.buckets = tuple(buckets) if buckets else shape_buckets(max_batch)
+
+    def form(self, pending: Sequence[Pending]) -> List[Batch]:
+        """Group by (epoch, k) in arrival order, chunk, pad to buckets."""
+        groups: Dict[Tuple[int, int], List[Pending]] = {}
+        for p in pending:
+            groups.setdefault((p.epoch, p.k), []).append(p)
+
+        now = time.monotonic()
+        batches: List[Batch] = []
+        for (epoch, k), items in groups.items():
+            rows: List[np.ndarray] = []
+            segments: List[Tuple[object, int, int, int]] = []
+            n = 0
+
+            def close():
+                nonlocal rows, segments, n
+                if not n:
+                    return
+                bucket = bucket_for(n, self.buckets)
+                if bucket > n:                   # pad with the last real row
+                    rows.append(np.repeat(rows[-1][-1:], bucket - n, axis=0))
+                batches.append(Batch(
+                    queries=np.concatenate(rows, axis=0), k=k, epoch=epoch,
+                    n_real=n, segments=segments, formed_at=now))
+                rows, segments, n = [], [], 0
+
+            for p in items:
+                src = 0
+                m = p.queries.shape[0]
+                while src < m:
+                    take = min(self.max_batch - n, m - src)
+                    segments.append((p.future, n, src, take))
+                    rows.append(p.queries[src:src + take])
+                    n += take
+                    src += take
+                    if n == self.max_batch:
+                        close()
+            close()
+        return batches

@@ -1,0 +1,546 @@
+"""QueryEngine: the serving-layer API over a FreshIndex.
+
+    engine = index.engine(EngineConfig(max_batch=32, workers=1))
+    fut = engine.submit(q, k=10)          # single query or small batch
+    dist, ids = fut.result()              # shaped like FreshIndex.search
+
+The paper's whole point is an index that keeps answering queries while
+writers make progress; Jiffy (arXiv:2102.01044) shows the API shape —
+batch updates plus snapshot reads that never block each other.  This
+module is that shape for the device-plane index:
+
+* submit() enqueues and returns a SearchFuture; the micro-batcher
+  (`serve.batcher`) pads pending queries into a fixed set of shape
+  buckets and dispatches them through AOT-compiled executables
+  (`serve.plan_cache`), so steady-state serving never re-traces.
+* add() publishes a new immutable epoch SNAPSHOT (compacted core + delta,
+  Jiffy-style).  Every query is bound to the epoch current at submit
+  time: an in-flight batch finishes on the snapshot it started with — a
+  post-publish submit sees the new series.  Writers never block readers,
+  readers never block writers; the defined semantics `FreshIndex.add`
+  racing `FreshIndex.search` lacked.
+* dispatched batches are registered in a `repro.runtime.WorkJournal`
+  part; if the worker executing a batch dies mid-flight, any other
+  worker — or a caller blocked in result(), or flush() — HELPS by
+  re-executing the orphaned part (search is pure, so at-least-once
+  execution is safe; futures fill idempotently).  This is the paper's
+  expeditive/standard helping transplanted to the serving plane.
+* stats() exposes queue depth, p50/p99 latency, rounds-per-query, epoch
+  lag, plan-cache hit rates and padding overhead.
+
+Threading: `workers=0` (default) is synchronous — batches dispatch on
+flush() or inside result(); `workers=N` starts N daemon threads that
+linger `linger_ms` to let buckets fill, then dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.refresh import WorkerCrash
+from repro.runtime import WorkJournal
+
+from .batcher import Batch, MicroBatcher, Pending, shape_buckets
+from .plan_cache import Knobs, PlanCache
+
+_BACKENDS = (None, "ref", "pallas")
+
+# Journal owner id used by helping callers (flush / a blocked result()).
+# Must be >= 0: WorkJournal treats owner < 0 as "unowned", so a negative
+# helper id would leave helped parts re-acquirable by live workers.
+HELPER_ID = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Every serving knob in one frozen place (mirrors IndexConfig).
+
+    max_batch       largest dispatch bucket; buckets are the powers of two
+                    up to it (shape_buckets)
+    linger_ms       async workers wait this long for a bucket to fill
+    workers         background dispatch threads (0 = synchronous mode)
+    donate          donate the padded query buffer to XLA (None = auto:
+                    on for tpu/gpu, off for cpu — see PlanCache)
+    warm_ks         k values warmup() precompiles plans for
+    help_after_ms   how long result() waits on async workers before it
+                    starts helping (journal steal of orphaned batches)
+    latency_window  completed-query latencies kept for p50/p99
+    journal_path    optional on-disk WorkJournal (crash-durable helping);
+                    None keeps the journal in memory
+    round_leaves / pq_budget / max_rounds / backend
+                    per-engine search-knob overrides; None defers to the
+                    index's IndexConfig (max_rounds: exact search)
+    """
+    max_batch: int = 64
+    linger_ms: float = 2.0
+    workers: int = 0
+    donate: Optional[bool] = None
+    warm_ks: Tuple[int, ...] = (1, 10)
+    help_after_ms: float = 50.0
+    latency_window: int = 4096
+    journal_path: Optional[str] = None
+    round_leaves: Optional[int] = None
+    pq_budget: Optional[int] = None
+    max_rounds: Optional[int] = None
+    backend: Optional[str] = None
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.workers < 0:
+            raise ValueError("workers must be >= 0")
+        if self.linger_ms < 0 or self.help_after_ms < 0:
+            raise ValueError("linger_ms / help_after_ms must be >= 0")
+        if self.latency_window < 1:
+            raise ValueError("latency_window must be >= 1")
+        if self.backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, "
+                             f"got {self.backend!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Snapshot:
+    """One immutable published epoch: compacted core + unsorted delta.
+
+    The FlatIndex arrays and the materialized delta are device arrays that
+    are never mutated in place — add() publishes a NEW snapshot and
+    compact() swaps in a NEW core, so a batch holding this object answers
+    exactly on the data visible at its submit epoch, forever."""
+    epoch: int
+    core: object                       # FlatIndex
+    delta: Optional[jnp.ndarray]       # (m, L) or None
+    n_base: int
+    n_total: int
+    series_len: int
+
+    @property
+    def plan_sig(self) -> tuple:
+        """Everything static about a compiled plan for this snapshot."""
+        s = self.core.series
+        return (tuple(s.shape), str(s.dtype), int(self.core.n_leaves),
+                self.n_base,
+                None if self.delta is None else int(self.delta.shape[0]))
+
+
+class SearchFuture:
+    """Handle for one submit(): fills as its batch(es) complete.
+
+    Filling is idempotent per row (a journal helper may re-execute a
+    batch a crashed worker had already partially delivered), and one
+    future may span several dispatch buckets when a submit is larger than
+    max_batch."""
+
+    def __init__(self, engine: "QueryEngine", n_rows: int, k: int,
+                 epoch: int, submitted_at: float):
+        self._engine = engine
+        self.k = k
+        self.epoch = epoch
+        self.submitted_at = submitted_at
+        self.completed_at: Optional[float] = None
+        self._d = np.empty((n_rows, k), np.float32)
+        self._i = np.empty((n_rows, k), np.int32)
+        self._filled = np.zeros((n_rows,), bool)
+        self._lock = threading.Lock()
+        self._event = threading.Event()
+
+    def _fill(self, src: int, d_rows: np.ndarray, i_rows: np.ndarray,
+              now: float) -> bool:
+        """Deliver rows [src, src+n).  True exactly once: on completion."""
+        with self._lock:
+            n = d_rows.shape[0]
+            self._d[src:src + n] = d_rows
+            self._i[src:src + n] = i_rows
+            self._filled[src:src + n] = True
+            if self._filled.all() and not self._event.is_set():
+                self.completed_at = now
+                self._event.set()
+                return True
+        return False
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """(dist, ids), shaped exactly like FreshIndex.search: (Q, k),
+        with the k dimension squeezed when k == 1.  Blocks; in sync mode
+        (workers=0) this drives the dispatch itself, in async mode it
+        waits `help_after_ms` then starts helping via the journal."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        grace = self._engine.config.help_after_ms / 1e3
+        if not self._event.is_set():
+            if self._engine.has_live_workers():
+                self._event.wait(grace)
+            while not self._event.is_set():
+                self._engine._make_progress()
+                if self._event.wait(0.005):
+                    break
+                if deadline is not None and time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"search result not ready within {timeout}s "
+                        f"({int(self._filled.sum())}/{len(self._filled)} "
+                        f"rows filled)")
+        if self.k == 1:
+            return self._d[:, 0], self._i[:, 0]
+        return self._d, self._i
+
+
+class QueryEngine:
+    """See module docstring.  Construct via `FreshIndex.engine()`."""
+
+    def __init__(self, index, config: Optional[EngineConfig] = None):
+        cfg = config or EngineConfig()
+        if getattr(index, "_mesh", None) is not None:
+            raise ValueError(
+                "QueryEngine serves single-host indexes; a sharded "
+                "FreshIndex already owns per-mesh compiled searches — "
+                "call index.search directly")
+        self._index = index
+        self.config = cfg
+        icfg = index.config
+        self._knobs = Knobs(
+            round_leaves=(cfg.round_leaves if cfg.round_leaves is not None
+                          else icfg.round_leaves),
+            znorm=icfg.znorm,
+            max_rounds=cfg.max_rounds,
+            backend=cfg.backend if cfg.backend is not None else icfg.backend,
+            pq_budget=(cfg.pq_budget if cfg.pq_budget is not None
+                       else icfg.pq_budget))
+        self.plans = PlanCache(donate=cfg.donate)
+        self._batcher = MicroBatcher(cfg.max_batch)
+        self._cv = threading.Condition(threading.RLock())
+        self._journal = WorkJournal(cfg.journal_path, n_parts=0)
+        self._batches: dict = {}            # part_id -> Batch (unfinished)
+        self._pending: list = []            # [Pending]
+        self._epoch = 0
+        self._snapshots = {0: self._capture(0)}
+        self._closed = False
+        # stats
+        self._latencies: deque = deque(maxlen=cfg.latency_window)
+        self._rounds_sum = 0.0
+        self._rounds_n = 0
+        self._completed = 0
+        self._dispatched = 0
+        self._padded_slots = 0
+        self._first_submit: Optional[float] = None
+        self._crashed_workers = 0
+        self._crash_hook = None             # test injection: fn(wid, batch)
+        self._workers = [
+            threading.Thread(target=self._worker_loop, args=(i,),
+                             name=f"fresh-serve-{i}", daemon=True)
+            for i in range(cfg.workers)]
+        for t in self._workers:
+            t.start()
+
+    # ------------------------------------------------------------------ #
+    # snapshots (Jiffy-style epochs)
+    # ------------------------------------------------------------------ #
+    def _capture(self, epoch: int) -> Snapshot:
+        ix = self._index
+        return Snapshot(epoch=epoch, core=ix.index, delta=ix.delta_cat,
+                        n_base=ix._n_base, n_total=ix.n_series,
+                        series_len=ix.series_len)
+
+    def _publish(self) -> None:
+        with self._cv:
+            self._epoch += 1
+            self._snapshots[self._epoch] = self._capture(self._epoch)
+            self._cv.notify_all()
+
+    @property
+    def epoch(self) -> int:
+        return self._epoch
+
+    def add(self, batch) -> "QueryEngine":
+        """Append series and publish a new epoch snapshot.  In-flight
+        queries keep answering on their submit-time snapshot; queries
+        submitted after this call see the new series."""
+        with self._cv:
+            self._index.add(batch)
+            self._publish()
+        return self
+
+    def compact(self) -> "QueryEngine":
+        """Merge the delta into the core (bulk rebuild) and publish.
+        Compacted epochs compile delta-free plans — steady-state cost
+        returns to the core-only program."""
+        with self._cv:
+            self._index.compact()
+            self._publish()
+        return self
+
+    def refresh(self) -> "QueryEngine":
+        """Publish a snapshot of out-of-band index mutations (direct
+        index.add()/compact() calls made without going through the
+        engine)."""
+        self._publish()
+        return self
+
+    # ------------------------------------------------------------------ #
+    # query path
+    # ------------------------------------------------------------------ #
+    def submit(self, queries, k: int = 1) -> SearchFuture:
+        """Enqueue one query (L,) or a small batch (m, L); returns a
+        future.  Validation mirrors FreshIndex.search."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim == 1:
+            q = q[None]
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            snap = self._snapshots[self._epoch]
+            if q.ndim != 2 or q.shape[0] < 1 \
+                    or q.shape[1] != snap.series_len:
+                raise ValueError(
+                    f"queries must be (m >= 1, {snap.series_len}), got "
+                    f"shape {np.shape(queries)}")
+            if k < 1:
+                raise ValueError(f"k must be >= 1, got {k}")
+            if k > snap.n_total:
+                raise ValueError(f"k={k} exceeds the {snap.n_total} "
+                                 f"indexed series")
+            now = time.monotonic()
+            fut = SearchFuture(self, q.shape[0], k, self._epoch, now)
+            self._pending.append(Pending(q, k, self._epoch, fut, now))
+            if self._first_submit is None:
+                self._first_submit = now
+            self._cv.notify_all()
+        return fut
+
+    def flush(self) -> "QueryEngine":
+        """Dispatch everything now: form pending into batches, then run
+        every unfinished journal part — including orphaned batches whose
+        worker died (helping)."""
+        self._form_and_register()
+        while True:
+            pid = self._next_part(worker=HELPER_ID, force_help=True)
+            if pid is None:
+                return self
+            self._execute_part(pid, worker=HELPER_ID)
+
+    def warmup(self, ks: Optional[Sequence[int]] = None,
+               buckets: Optional[Sequence[int]] = None) -> "QueryEngine":
+        """Precompile plans for the current snapshot so first requests pay
+        zero trace/compile.  Defaults: config.warm_ks x all buckets."""
+        ks = tuple(ks) if ks is not None else self.config.warm_ks
+        buckets = (tuple(buckets) if buckets is not None
+                   else self._batcher.buckets)
+        with self._cv:
+            snap = self._snapshots[self._epoch]
+        for k in ks:
+            if k > snap.n_total:
+                continue
+            for b in buckets:
+                self.plans.get(snap, b, k, self._knobs)
+        return self
+
+    # ------------------------------------------------------------------ #
+    # dispatch internals
+    # ------------------------------------------------------------------ #
+    def _form_and_register(self) -> int:
+        """Drain pending into journal-registered batches; returns count."""
+        with self._cv:
+            if not self._pending:
+                return 0
+            pending, self._pending = self._pending, []
+            batches = self._batcher.form(pending)
+            for b in batches:
+                b.part_id = self._journal.add_part()
+                self._batches[b.part_id] = b
+                self._padded_slots += b.padded_slots
+            return len(batches)
+
+    def _next_part(self, worker: int, force_help: bool = False
+                   ) -> Optional[int]:
+        """Acquire the next unowned part, else steal an orphan.
+
+        Stealing honours the paper's backoff rule (help only after the
+        owner exceeds the measured-T_avg deadline) unless the owner
+        thread is provably dead or `force_help` (flush) is set."""
+        with self._cv:
+            pid = self._journal.acquire(worker)
+            if pid is not None:
+                return pid
+            now = time.time()
+            ddl = self._journal.backoff_deadline()
+            for pid in self._journal.unfinished():
+                p = self._journal.part(pid)
+                if p.owner == worker:
+                    continue
+                owner_dead = (0 <= p.owner < len(self._workers)
+                              and not self._workers[p.owner].is_alive())
+                if force_help or owner_dead or (now - p.acquired_at) > ddl:
+                    self._journal.steal(pid, worker)
+                    return pid
+            return None
+
+    def _execute_part(self, pid: int, worker: int) -> None:
+        """Run one batch through its snapshot's compiled plan and deliver
+        rows to the futures.  Pure + idempotent: a helper re-executing an
+        orphan recomputes identical rows."""
+        with self._cv:
+            batch = self._batches.get(pid)
+            if batch is None or self._journal.is_done(pid):
+                return
+            snap = self._snapshots[batch.epoch]
+        if self._crash_hook is not None:
+            self._crash_hook(worker, batch)      # may raise WorkerCrash
+        plan = self.plans.get(snap, batch.queries.shape[0], batch.k,
+                              self._knobs)
+        d, i, rounds = plan.run(snap, jnp.asarray(batch.queries))
+        d = np.asarray(d)
+        i = np.asarray(i)
+        rounds = int(rounds)
+        now = time.monotonic()
+        with self._cv:
+            if self._journal.is_done(pid):       # a racer beat us (and may
+                return                           # have pruned the part)
+            self._journal.mark_done(pid)
+            self._dispatched += 1
+            self._rounds_sum += rounds * batch.n_real
+            self._rounds_n += batch.n_real
+            for fut, dst, src, n in batch.segments:
+                if fut._fill(src, d[dst:dst + n], i[dst:dst + n], now):
+                    self._latencies.append(now - fut.submitted_at)
+                    self._completed += 1
+            del self._batches[pid]
+            # release the done prefix so journal scans and memory stay
+            # O(in-flight batches) on an endless request stream
+            self._journal.prune_done()
+            self._gc_snapshots()
+            self._cv.notify_all()
+
+    def _gc_snapshots(self) -> None:
+        live = {self._epoch}
+        live.update(p.epoch for p in self._pending)
+        live.update(b.epoch for b in self._batches.values())
+        for e in [e for e in self._snapshots if e not in live]:
+            del self._snapshots[e]
+
+    def has_live_workers(self) -> bool:
+        return any(t.is_alive() for t in self._workers)
+
+    def _make_progress(self) -> None:
+        """One helping step for a blocked result() caller."""
+        if not self.has_live_workers():
+            self.flush()
+            return
+        # workers alive: only pick up genuinely orphaned/expired work
+        self._form_and_register()
+        pid = self._next_part(worker=HELPER_ID)
+        if pid is not None:
+            self._execute_part(pid, worker=HELPER_ID)
+
+    def _worker_loop(self, wid: int) -> None:
+        linger = self.config.linger_ms / 1e3
+        try:
+            while True:
+                with self._cv:
+                    while (not self._pending and not self._closed
+                           and not self._journal.unfinished()):
+                        self._cv.wait(timeout=0.05)
+                    if (self._closed and not self._pending
+                            and not self._journal.unfinished()):
+                        return
+                    if self._pending and linger > 0:
+                        deadline = time.monotonic() + linger
+                        while (sum(p.queries.shape[0]
+                                   for p in self._pending)
+                               < self.config.max_batch):
+                            left = deadline - time.monotonic()
+                            if left <= 0:
+                                break
+                            self._cv.wait(timeout=left)
+                self._form_and_register()
+                while True:
+                    pid = self._next_part(wid)
+                    if pid is None:
+                        break
+                    self._execute_part(pid, wid)
+        except WorkerCrash:
+            with self._cv:
+                self._crashed_workers += 1
+                self._cv.notify_all()
+
+    # ------------------------------------------------------------------ #
+    # lifecycle / stats
+    # ------------------------------------------------------------------ #
+    def close(self, drain: bool = True) -> None:
+        """Stop the engine; `drain` first completes everything queued."""
+        if drain and not self._closed:
+            self.flush()
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        for t in self._workers:
+            t.join(timeout=10)
+
+    def __enter__(self) -> "QueryEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close(drain=exc[0] is None)
+
+    def stats(self) -> dict:
+        """Serving telemetry: queue depth, latency percentiles (ms),
+        rounds-per-query, epoch lag, plan-cache and batching counters."""
+        with self._cv:
+            lat = sorted(self._latencies)
+            inflight = len(self._batches)
+            epochs = ([p.epoch for p in self._pending]
+                      + [b.epoch for b in self._batches.values()])
+            oldest = min(epochs) if epochs else self._epoch
+            elapsed = (time.monotonic() - self._first_submit
+                       if self._first_submit is not None else 0.0)
+            js = self._journal.stats()
+            return {
+                "epoch": self._epoch,
+                "epoch_lag": self._epoch - oldest,
+                "queue_depth": len(self._pending),
+                "queued_rows": sum(p.queries.shape[0]
+                                   for p in self._pending),
+                "inflight_batches": inflight,
+                "completed": self._completed,
+                "qps": (self._completed / elapsed if elapsed > 0 else 0.0),
+                "latency_ms": {
+                    "n": len(lat),
+                    "p50": _pctl(lat, 0.50) * 1e3,
+                    "p99": _pctl(lat, 0.99) * 1e3,
+                    "mean": (sum(lat) / len(lat) * 1e3 if lat else 0.0),
+                },
+                "rounds_per_query": (self._rounds_sum / self._rounds_n
+                                     if self._rounds_n else 0.0),
+                "plan_cache": self.plans.stats(),
+                "batches": {
+                    "dispatched": self._dispatched,
+                    "padded_slots": self._padded_slots,
+                    "helped": js["helped"],
+                    "parts": js["n_parts"],
+                },
+                "workers": {"configured": self.config.workers,
+                            "live": sum(t.is_alive()
+                                        for t in self._workers),
+                            "crashed": self._crashed_workers},
+            }
+
+    def __repr__(self) -> str:
+        return (f"QueryEngine(epoch={self._epoch}, "
+                f"buckets={self._batcher.buckets}, "
+                f"workers={self.config.workers}, "
+                f"backend={self._knobs.backend!r})")
+
+
+def _pctl(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile of an ascending list (0.0 when empty)."""
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, max(0, int(p * len(sorted_vals))))
+    return sorted_vals[idx]

@@ -1,0 +1,148 @@
+"""PlanCache: AOT-compiled search executables for steady-state serving.
+
+The facade's `FreshIndex.search` leans on `jax.jit`'s trace cache: every
+new (Q, k) shape pays a fresh trace + compile *inline on the caller*.  A
+serving loop cannot afford that — the whole point of micro-batching into
+a fixed set of shape buckets is that the executable for every bucket can
+be built ONCE (`jax.jit(...).lower(...).compile()`) and steady-state
+dispatch becomes a pure execute: no tracing, no cache probing beyond one
+dict lookup here, hit/miss counters to prove it (tests/test_serve.py
+asserts zero re-traces after warmup).
+
+Plans are keyed on (bucket_Q, k, knobs, snapshot signature).  The
+snapshot signature covers every static property of the compiled program:
+core array shapes + storage dtype, the delta row count, and n_base (the
+delta id offset is baked in as a static).  Publishing a new epoch
+(add/compact) therefore compiles at most once per (bucket, k) for that
+epoch's shape — and an add-then-compact cycle that returns to a previous
+shape reuses the old executable with the new arrays, because the arrays
+are runtime arguments.
+
+Donation: with `donate=True` the padded query batch is donated to XLA so
+the hot path reuses its buffer for outputs (the batcher builds a fresh
+device array per dispatch anyway).  Default is auto: on for tpu/gpu, off
+for cpu — where XLA does not implement donation AND where reusing the
+exact jitted `search_plan` / `snapshot_search` objects the facade calls
+keeps engine results bit-identical to `FreshIndex.search` by
+construction (same compiled program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.search import (search_plan, search_plan_impl,
+                               snapshot_search, snapshot_search_impl)
+
+_PLAN_STATICS = ("k", "round_leaves", "znorm", "max_rounds", "backend",
+                 "pq_budget")
+_SNAP_STATICS = _PLAN_STATICS + ("n_base",)
+
+
+@dataclasses.dataclass(frozen=True)
+class Knobs:
+    """The fully-resolved search knobs one engine serves with (resolved
+    once at engine construction from EngineConfig -> IndexConfig)."""
+    round_leaves: int = 8
+    znorm: bool = True
+    max_rounds: Optional[int] = None
+    backend: str = "ref"
+    pq_budget: Optional[int] = None
+
+
+class CompiledPlan:
+    """One AOT-compiled executable: fixed (bucket_Q, k, knobs, snapshot
+    shape).  `run(snapshot, queries)` -> (dist (Q, k), ids (Q, k), rounds)."""
+
+    __slots__ = ("_exe", "has_delta", "bucket_q", "k", "calls")
+
+    def __init__(self, exe, has_delta: bool, bucket_q: int, k: int):
+        self._exe = exe
+        self.has_delta = has_delta
+        self.bucket_q = bucket_q
+        self.k = k
+        self.calls = 0
+
+    def run(self, snapshot, queries: jnp.ndarray):
+        self.calls += 1
+        if self.has_delta:
+            return self._exe(snapshot.core, snapshot.delta, queries)
+        return self._exe(snapshot.core, queries)
+
+
+class PlanCache:
+    """(bucket_Q, k, knobs, snapshot_sig) -> CompiledPlan, with counters."""
+
+    def __init__(self, donate: Optional[bool] = None):
+        if donate is None:
+            donate = jax.default_backend() not in ("cpu",)
+        self.donate = bool(donate)
+        self.hits = 0
+        self.misses = 0
+        self._plans: Dict[Tuple, CompiledPlan] = {}
+        self._donating_jits: Dict[bool, object] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------ #
+    def _jitted(self, has_delta: bool):
+        """The jit object plans lower through.  Non-donating plans reuse
+        the exact module-level jits the facade dispatches through — same
+        program, bit-identical results; donating plans get a twin jit of
+        the same pure impl with the query buffer donated."""
+        if not self.donate:
+            return snapshot_search if has_delta else search_plan
+        fn = self._donating_jits.get(has_delta)
+        if fn is None:
+            if has_delta:
+                fn = jax.jit(snapshot_search_impl,
+                             static_argnames=_SNAP_STATICS,
+                             donate_argnums=(2,))
+            else:
+                fn = jax.jit(search_plan_impl,
+                             static_argnames=_PLAN_STATICS,
+                             donate_argnums=(1,))
+            self._donating_jits[has_delta] = fn
+        return fn
+
+    def get(self, snapshot, bucket_q: int, k: int,
+            knobs: Knobs) -> CompiledPlan:
+        """The compiled executable for this bucket, compiling on miss."""
+        key = (bucket_q, k, knobs, snapshot.plan_sig)
+        with self._lock:
+            plan = self._plans.get(key)
+            if plan is not None:
+                self.hits += 1
+                return plan
+        plan = self._compile(snapshot, bucket_q, k, knobs)
+        with self._lock:
+            # two threads may race-compile the same key; keep the first
+            # so CompiledPlan.calls stays meaningful, count one miss each
+            self.misses += 1
+            return self._plans.setdefault(key, plan)
+
+    def _compile(self, snapshot, bucket_q: int, k: int,
+                 knobs: Knobs) -> CompiledPlan:
+        qs = jax.ShapeDtypeStruct((bucket_q, snapshot.series_len),
+                                  jnp.float32)
+        kw = dict(k=k, round_leaves=knobs.round_leaves, znorm=knobs.znorm,
+                  max_rounds=knobs.max_rounds, backend=knobs.backend,
+                  pq_budget=knobs.pq_budget)
+        has_delta = snapshot.delta is not None
+        if has_delta:
+            lowered = self._jitted(True).lower(
+                snapshot.core, snapshot.delta, qs,
+                n_base=snapshot.n_base, **kw)
+        else:
+            lowered = self._jitted(False).lower(snapshot.core, qs, **kw)
+        return CompiledPlan(lowered.compile(), has_delta, bucket_q, k)
+
+    # ------------------------------------------------------------------ #
+    def stats(self) -> dict:
+        with self._lock:
+            return {"hits": self.hits, "misses": self.misses,
+                    "size": len(self._plans), "donate": self.donate}

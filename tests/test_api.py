@@ -115,6 +115,33 @@ def test_compact_without_delta_is_noop(index):
     assert index.index is before
 
 
+def test_concurrent_add_search_snapshot_consistency(walks, queries):
+    """The defined semantics of add() racing search(): an in-flight engine
+    batch answers on the pre-add snapshot (== brute-force oracle over the
+    old data), a post-publish batch sees the new series.  The facade
+    itself stays immediate-visibility: FreshIndex.search after add()
+    includes the delta."""
+    from repro.data.synthetic import random_walk
+    base, extra = walks[:512], random_walk(64, walks.shape[1], seed=24)
+    ix = FreshIndex.build(base, IndexConfig(leaf_capacity=32))
+    q = jnp.asarray(queries[:6])
+    with ix.engine(max_batch=8) as eng:
+        inflight = eng.submit(queries[:6], k=5)     # bound to epoch 0
+        eng.add(extra)                              # publish epoch 1
+        later = eng.submit(queries[:6], k=5)
+        eng.flush()
+        d_old, i_old = inflight.result(timeout=60)
+        d_new, i_new = later.result(timeout=60)
+    db, ib = search_bruteforce(jnp.asarray(base), q, k=5)
+    np.testing.assert_array_equal(i_old, np.asarray(ib))
+    both = jnp.asarray(np.concatenate([base, extra]))
+    db2, ib2 = search_bruteforce(both, q, k=5)
+    np.testing.assert_array_equal(i_new, np.asarray(ib2))
+    # the facade sees the delta immediately (unchanged contract)
+    d_f, i_f = ix.search(q, k=5)
+    np.testing.assert_array_equal(np.asarray(i_f), np.asarray(ib2))
+
+
 # --------------------------------------------------------------------- #
 # save / load
 # --------------------------------------------------------------------- #

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.api import FreshIndex, IndexConfig
-from repro.core import build_index, search, search_bruteforce
+from repro.core import build_index, search, search_bruteforce, search_plan
 from repro.data.synthetic import query_workload, random_walk
 
 
@@ -107,8 +107,10 @@ def test_pallas_path_never_materializes_the_gather():
     q = jnp.asarray(query_workload(walks, 4, noise_sigma=0.05, seed=28))
 
     def lowered(backend):
-        return search.lower(idx, q, k=5, round_leaves=4,
-                            backend=backend).as_text()
+        # search_plan is the jitted pure plan (the deprecated `search`
+        # shim is a host-side wrapper and no longer .lower()s)
+        return search_plan.lower(idx, q, k=5, round_leaves=4,
+                                 backend=backend).as_text()
 
     gather_shape = "tensor<4x128x64xf32>"
     assert gather_shape in lowered("ref")        # control: ref materializes

@@ -1,0 +1,275 @@
+"""The serving layer (repro.serve): AOT plan cache (zero re-traces after
+warmup — the acceptance criterion), submit() bit-identity with
+FreshIndex.search on both kernel backends, micro-batch padding, epoch
+snapshot consistency under concurrent add(), journal-backed helping when
+a worker dies, and the stats surface."""
+
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FreshIndex, IndexConfig
+from repro.core import search_bruteforce
+from repro.core.refresh import WorkerCrash
+from repro.data.synthetic import query_workload, random_walk
+from repro.serve import (EngineConfig, MicroBatcher, Pending, bucket_for,
+                         shape_buckets)
+
+
+@pytest.fixture(scope="module")
+def small():
+    walks = random_walk(512, 128, seed=31)
+    queries = query_workload(walks, 16, noise_sigma=0.05, seed=32)
+    return walks, queries
+
+
+@pytest.fixture(scope="module")
+def index(small):
+    walks, _ = small
+    return FreshIndex.build(walks, IndexConfig(leaf_capacity=32))
+
+
+# --------------------------------------------------------------------- #
+# plan cache: steady-state serving never re-traces
+# --------------------------------------------------------------------- #
+def test_zero_retraces_after_warmup(index, small):
+    _, queries = small
+    with index.engine(EngineConfig(max_batch=8)) as eng:
+        eng.warmup(ks=(1, 5), buckets=(1, 2, 4, 8))
+        warm = eng.stats()["plan_cache"]
+        assert warm["misses"] == 8 and warm["size"] == 8
+        futs = [eng.submit(queries[i % 16], k=k)
+                for i in range(12) for k in (1, 5)]
+        eng.flush()
+        for f in futs:
+            f.result(timeout=60)
+        st = eng.stats()["plan_cache"]
+        # every dispatch hit a precompiled executable: miss count frozen
+        assert st["misses"] == warm["misses"]
+        assert st["hits"] > 0
+
+
+def test_epoch_publish_compiles_once_then_steady(index, small):
+    _, queries = small
+    with index.engine(EngineConfig(max_batch=4)) as eng:
+        eng.submit(queries[:4], k=3).result(timeout=60)
+        m0 = eng.stats()["plan_cache"]["misses"]
+        eng.add(random_walk(8, 128, seed=33))    # new epoch -> new plan sig
+        eng.submit(queries[:4], k=3).result(timeout=60)
+        m1 = eng.stats()["plan_cache"]["misses"]
+        assert m1 == m0 + 1                       # one compile for the epoch
+        eng.submit(queries[:4], k=3).result(timeout=60)
+        assert eng.stats()["plan_cache"]["misses"] == m1   # steady again
+        eng.compact()
+
+
+# --------------------------------------------------------------------- #
+# bit-identity with the facade (the shared search_plan jaxpr)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("k", [1, 5, 10])
+def test_submit_bit_identical_to_facade(small, backend, k):
+    walks, queries = small
+    ix = FreshIndex.build(walks[:256], IndexConfig(leaf_capacity=32,
+                                                   backend=backend))
+    q = queries[:4]                      # Q=4 == its bucket: same program
+    with ix.engine(EngineConfig(max_batch=4)) as eng:
+        d, i = eng.submit(q, k=k).result(timeout=120)
+    df, if_ = ix.search(jnp.asarray(q), k=k)
+    np.testing.assert_array_equal(i, np.asarray(if_))
+    np.testing.assert_array_equal(d, np.asarray(df))
+
+
+def test_submit_single_query_shapes(index, small):
+    _, queries = small
+    with index.engine() as eng:
+        d1, i1 = eng.submit(queries[0], k=1).result(timeout=60)
+        assert d1.shape == (1,) and i1.shape == (1,)
+        d5, i5 = eng.submit(queries[0], k=5).result(timeout=60)
+        assert d5.shape == (1, 5) and i5.shape == (1, 5)
+
+
+# --------------------------------------------------------------------- #
+# micro-batcher: bucketing + padding correctness
+# --------------------------------------------------------------------- #
+def test_shape_buckets_and_bucket_for():
+    assert shape_buckets(8) == (1, 2, 4, 8)
+    assert shape_buckets(12) == (1, 2, 4, 8, 12)
+    assert bucket_for(3, (1, 2, 4, 8)) == 4
+    with pytest.raises(ValueError):
+        bucket_for(9, (1, 2, 4, 8))
+
+
+def test_batcher_groups_pads_and_chunks():
+    rng = np.random.default_rng(0)
+    mk = lambda m: rng.standard_normal((m, 16)).astype(np.float32)
+    pend = [Pending(mk(3), 5, 0, object(), 0.0),
+            Pending(mk(2), 5, 0, object(), 0.0),   # same (epoch, k): merged
+            Pending(mk(1), 1, 0, object(), 0.0),   # different k
+            Pending(mk(2), 5, 1, object(), 0.0)]   # different epoch
+    batches = MicroBatcher(8).form(pend)
+    assert len(batches) == 3
+    by = {(b.epoch, b.k): b for b in batches}
+    merged = by[(0, 5)]
+    assert merged.n_real == 5 and merged.queries.shape == (8, 16)
+    assert merged.padded_slots == 3
+    assert [s[1:] for s in merged.segments] == [(0, 0, 3), (3, 0, 2)]
+    # oversized submit chunks at max_batch across several batches
+    big = MicroBatcher(4).form([Pending(mk(10), 1, 0, object(), 0.0)])
+    assert [b.queries.shape[0] for b in big] == [4, 4, 2]
+    assert sum(b.n_real for b in big) == 10
+
+
+def test_padded_batch_results_match_oracle(small):
+    """Q=5 pads to bucket 8; the pad rows must never leak into results."""
+    walks, queries = small
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=32))
+    q = queries[:5]
+    with ix.engine(EngineConfig(max_batch=8)) as eng:
+        d, i = eng.submit(q, k=5).result(timeout=60)
+        assert eng.stats()["batches"]["padded_slots"] == 3
+    db, ib = search_bruteforce(jnp.asarray(walks), jnp.asarray(q), k=5)
+    np.testing.assert_array_equal(i, np.asarray(ib))
+    np.testing.assert_allclose(d, np.asarray(db), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# snapshot consistency under concurrent add() (Jiffy semantics)
+# --------------------------------------------------------------------- #
+def test_inflight_batch_answers_on_preadd_snapshot(small):
+    walks, queries = small
+    base = walks[:256]
+    extra = random_walk(32, 128, seed=34)
+    ix = FreshIndex.build(base, IndexConfig(leaf_capacity=32))
+    q = jnp.asarray(queries[:6])
+    with ix.engine(EngineConfig(max_batch=8)) as eng:
+        f_pre = eng.submit(queries[:6], k=5)      # in flight at epoch 0
+        eng.add(extra)                            # publish epoch 1
+        f_post = eng.submit(queries[:6], k=5)
+        eng.flush()
+        d_pre, i_pre = f_pre.result(timeout=60)
+        d_post, i_post = f_post.result(timeout=60)
+    db, ib = search_bruteforce(jnp.asarray(base), q, k=5)
+    np.testing.assert_array_equal(i_pre, np.asarray(ib))
+    np.testing.assert_allclose(d_pre, np.asarray(db), rtol=1e-5, atol=1e-5)
+    both = np.concatenate([base, extra])
+    db2, ib2 = search_bruteforce(jnp.asarray(both), q, k=5)
+    np.testing.assert_array_equal(i_post, np.asarray(ib2))
+    np.testing.assert_allclose(d_post, np.asarray(db2), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_compact_publishes_and_serves_exactly(small):
+    walks, queries = small
+    base, extra = walks[:256], random_walk(32, 128, seed=35)
+    ix = FreshIndex.build(base, IndexConfig(leaf_capacity=32))
+    q = jnp.asarray(queries[:6])
+    with ix.engine(EngineConfig(max_batch=8)) as eng:
+        eng.add(extra).compact()
+        assert eng.epoch == 2 and ix.n_pending == 0
+        d, i = eng.submit(queries[:6], k=5).result(timeout=60)
+    both = np.concatenate([base, extra])
+    db, ib = search_bruteforce(jnp.asarray(both), q, k=5)
+    np.testing.assert_array_equal(i, np.asarray(ib))
+
+
+# --------------------------------------------------------------------- #
+# journal-backed helping: orphaned batches complete after a worker dies
+# --------------------------------------------------------------------- #
+def test_orphaned_batch_is_helped_after_worker_crash(index, small):
+    _, queries = small
+    eng = index.engine(EngineConfig(max_batch=8, workers=1, linger_ms=1.0,
+                                    help_after_ms=20.0))
+    try:
+        crashed = threading.Event()
+
+        def hook(wid, batch):
+            if wid >= 0 and not crashed.is_set():
+                crashed.set()
+                raise WorkerCrash()
+
+        eng._crash_hook = hook
+        fut = eng.submit(queries[:3], k=3)
+        assert crashed.wait(30), "worker never acquired the batch"
+        d, i = fut.result(timeout=60)     # caller helps via the journal
+        df, if_ = index.search(jnp.asarray(queries[:3]), k=3)
+        np.testing.assert_array_equal(i, np.asarray(if_))
+        st = eng.stats()
+        assert st["workers"]["crashed"] == 1
+        assert st["batches"]["helped"] >= 1
+    finally:
+        eng.close()
+
+
+def test_journal_window_stays_bounded(index, small):
+    """Done parts prune away: an endless stream must not grow the journal
+    window (ids stay global, cumulative stats survive)."""
+    _, queries = small
+    with index.engine(EngineConfig(max_batch=4)) as eng:
+        for i in range(6):
+            eng.submit(queries[i % 16], k=1).result(timeout=60)
+        j = eng._journal
+        assert j.stats()["n_parts"] == 6          # ids kept counting
+        assert len(j.parts) == 0                  # window fully pruned
+        assert j.stats()["done"] == 6
+
+
+def test_async_workers_serve_without_flush(index, small):
+    _, queries = small
+    with index.engine(EngineConfig(max_batch=8, workers=2,
+                                   linger_ms=0.5)) as eng:
+        futs = [eng.submit(queries[i], k=3) for i in range(8)]
+        for f in futs:
+            d, i = f.result(timeout=60)
+            assert d.shape == (1, 3)
+        assert eng.stats()["completed"] == 8
+
+
+# --------------------------------------------------------------------- #
+# stats + validation surface
+# --------------------------------------------------------------------- #
+def test_stats_surface(index, small):
+    _, queries = small
+    with index.engine(EngineConfig(max_batch=4)) as eng:
+        eng.submit(queries[:4], k=5).result(timeout=60)
+        st = eng.stats()
+        assert st["queue_depth"] == 0 and st["epoch_lag"] == 0
+        assert st["completed"] == 1 and st["qps"] > 0
+        assert st["latency_ms"]["p50"] > 0
+        assert st["latency_ms"]["p99"] >= st["latency_ms"]["p50"]
+        assert st["rounds_per_query"] >= 1
+        f = eng.submit(queries[:2], k=1)          # queued, not dispatched
+        assert eng.stats()["queue_depth"] == 1
+        f.result(timeout=60)
+
+
+def test_engine_validation(index, small):
+    _, queries = small
+    with index.engine() as eng:
+        with pytest.raises(ValueError, match="k must be"):
+            eng.submit(queries[0], k=0)
+        with pytest.raises(ValueError, match="exceeds"):
+            eng.submit(queries[0], k=10 ** 9)
+        with pytest.raises(ValueError, match="queries must be"):
+            eng.submit(np.zeros((2, 17), np.float32))
+        with pytest.raises(ValueError, match="queries must be"):
+            eng.submit(np.zeros((0, 128), np.float32))   # empty batch
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(queries[0])
+    with pytest.raises(ValueError, match="backend"):
+        EngineConfig(backend="cuda")
+    with pytest.raises(ValueError, match="max_batch"):
+        EngineConfig(max_batch=0)
+
+
+def test_engine_rejects_sharded_index(index):
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    walks = random_walk(64, 128, seed=36)
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=32)).shard(mesh)
+    with pytest.raises(ValueError, match="sharded"):
+        ix.engine()
