@@ -33,6 +33,10 @@ def main() -> None:
     ap.add_argument("--serve-quick", action="store_true",
                     help="also drive the QueryEngine with a Poisson "
                          "arrival stream (serve/* rows: p50/p99 + QPS)")
+    ap.add_argument("--build-quick", action="store_true",
+                    help="also run the IndexBuilder pipeline bench "
+                         "(build/* rows: single-shot vs builder vs "
+                         "crash-injected, compact merge vs rebuild)")
     args = ap.parse_args()
 
     from . import fresh_bench
@@ -53,6 +57,11 @@ def main() -> None:
         if args.quick:
             serve_bench.set_quick()
         benches += serve_bench.ALL
+    if args.build_quick:
+        from . import build_bench
+        if args.quick:
+            build_bench.set_quick()
+        benches += build_bench.ALL
     for fn in benches:
         tag = fn.__name__.split("_")[0]
         if only and tag not in only:

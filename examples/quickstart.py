@@ -46,11 +46,26 @@ err = np.max(np.abs(np.asarray(dist) - np.asarray(bf_dist)))
 print(f"  id match: {match*100:.1f}%  max |dist err|: {err:.2e}")
 assert err < 1e-3
 
+print("streaming multi-worker build (IndexBuilder, 4 lock-free workers) ...")
+t0 = time.time()
+b = FreshIndex.builder(IndexConfig(leaf_capacity=64), workers=4,
+                       part_rows=N // 16)
+for lo in range(0, 32_768, 8_192):        # feed a prefix in 4 chunks
+    b.feed(walks[lo:lo + 8_192])
+streamed = b.finalize()
+jax.block_until_ready(streamed.index.series)
+oneshot = FreshIndex.build(walks[:32_768], IndexConfig(leaf_capacity=64))
+assert np.array_equal(np.asarray(streamed.index.perm),
+                      np.asarray(oneshot.index.perm))
+helped = sum(p["helped_parts"] for p in b.report()["phases"].values())
+print(f"  built {streamed.n_series} series in {time.time()-t0:.2f}s, "
+      f"bit-identical to one-shot (helped parts: {helped})")
+
 print("incremental add (Jiffy-style delta) -> compact ...")
 fresh_batch = random_walk(1_000, L, seed=2)
 index.add(fresh_batch)                    # searchable immediately
 d2, i2 = index.search(queries, k=1)
-index.compact()                           # merge delta via bulk rebuild
+index.compact()                           # incremental sorted-run merge
 d3, i3 = index.search(queries, k=1)
 assert np.array_equal(np.asarray(i2), np.asarray(i3))
 print(f"  {index.stats()['n_series']} series after compact, answers stable")

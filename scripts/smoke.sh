@@ -1,17 +1,28 @@
 #!/usr/bin/env bash
 # End-to-end smoke: build -> k-NN search -> add/compact -> save/load via
-# the FreshIndex facade, on whatever backend jax finds (CPU in CI), then
+# the FreshIndex facade, on whatever backend jax finds (CPU in CI), a
+# DeprecationWarning-as-error pytest leg over the index test files, then
 # a 2-figure benchmark subset (fig3 query + fig5 scaling, both kernel
 # backends) PLUS the serving leg (--serve-quick: QueryEngine driven by a
-# Poisson arrival stream) at --quick scale, emitting the machine-readable
+# Poisson arrival stream) AND the build-pipeline leg (--build-quick:
+# IndexBuilder single-shot vs multi-worker vs crash-injected, compact
+# merge vs rebuild) at --quick scale, emitting the machine-readable
 # BENCH_fresh.json perf record with p50/p99 latency + QPS rows.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python examples/quickstart.py
 python examples/serve_engine.py
-python -m benchmarks.run --only fig3,fig5,serve --quick --serve-quick \
-    --json BENCH_fresh.json
+
+# DeprecationWarning-clean leg: the data-series-index test files (the
+# former shim call sites) must pass with deprecations promoted to errors
+# — only pytest.warns-guarded shim-coverage calls may emit them.
+python -W error::DeprecationWarning -m pytest -q -x \
+    tests/test_api.py tests/test_builder.py tests/test_index_search.py \
+    tests/test_system.py
+
+python -m benchmarks.run --only fig3,fig5,serve,build --quick \
+    --serve-quick --build-quick --json BENCH_fresh.json
 python - <<'EOF'
 import json
 rows = json.load(open("BENCH_fresh.json"))["rows"]
@@ -25,6 +36,18 @@ for r in serve:
     for key in ("p50_us", "p99_us", "qps"):
         assert key in r, (r["name"], key)
 assert any(r["name"] == "serve/warmup_aot_compile" for r in rows)
-print(f"BENCH_fresh.json OK: {len(rows)} rows, both backends present "
-      "for fig3+fig5, serve p50/p99/QPS rows present")
+# build pipeline rows: single-shot vs builder vs crash-injected, plus
+# compact incremental-merge vs full-rebuild (merge must win)
+by_name = {r["name"]: r for r in rows}
+for name in ("build/oneshot_fused", "build/pipeline/seq",
+             "build/pipeline/w4", "build/pipeline/w4_crash",
+             "build/compact/merge", "build/compact/rebuild"):
+    assert name in by_name, f"missing {name} row"
+assert "bit_identical=1" in by_name["build/pipeline/w4_crash"]["derived"]
+merge = by_name["build/compact/merge"]["us_per_call"]
+rebuild = by_name["build/compact/rebuild"]["us_per_call"]
+assert merge < rebuild, (merge, rebuild)
+print(f"BENCH_fresh.json OK: {len(rows)} rows; fig3+fig5 both backends, "
+      f"serve p50/p99/QPS, build pipeline+compact rows present "
+      f"(merge {rebuild/merge:.2f}x faster than rebuild)")
 EOF

@@ -17,8 +17,13 @@ Quickstart::
                                                  bound="paabox"))
     dist, ids = index.search(queries, k=10)              # exact k-NN
 
+    b = FreshIndex.builder(cfg, workers=4)               # streaming /
+    for chunk in stream:                                 # lock-free
+        b.feed(chunk)                                    # multi-worker
+    index = b.finalize()                                 # build pipeline
+
     index.add(new_batch)          # delta-buffered, searchable immediately
-    index.compact()               # merge the delta via rebuild
+    index.compact()               # incremental sorted-run merge
 
     index.shard(mesh)             # leaves block-sharded over mesh axis
     index.save("ckpt/")           # config + arrays
@@ -31,6 +36,12 @@ Migration table (old free functions -> facade):
     ====================================  ================================
     build_index(x, leaf_capacity=...)     FreshIndex.build(x, IndexConfig(
                                               leaf_capacity=...))
+    build_index over a stream / with      b = FreshIndex.builder(cfg,
+      lock-free workers (no equivalent)       workers=4); b.feed(chunk);
+                                              ...; b.finalize()
+    build_index_host(x, executor)         IndexBuilder(cfg,
+      (host demo forest, not queryable)       executor=executor) — same
+                                              Refresh phases, real index
     search(idx, q)                        index.search(q)           (1-NN)
     search(idx, q, max_rounds=r)          index.search(q, max_rounds=r)
     (no k-NN equivalent)                  index.search(q, k=10)
@@ -58,10 +69,14 @@ snapshots for concurrent inserts.
 Incremental adds follow Jiffy's batch-update idea (lock-free skip list
 with batch updates, arXiv:2102.01044): recent series live in an unsorted
 delta buffer that every query scans EXACTLY (brute force) alongside the
-pruned main index, and `compact()` merges the delta into the main index in
-one bulk rebuild — the expeditive/standard analogue of Jiffy's batch
-merge.  Search results are therefore always exact, with or without a
-pending delta.
+pruned main index, and `compact()` merges the delta into the main index
+with one INCREMENTAL sorted-run merge (`core.builder.merge_sorted_delta`)
+that consumes the stored core arrays as-is — Jiffy's batch merge.  What
+the merge eliminates versus the old bulk rebuild: re-normalization,
+re-summarization, the global re-sort (the core run is binary-searched,
+never re-sorted) and half-precision re-rounding; the array bytes still
+transit the host once per compact.  Search results are therefore always
+exact, with or without a pending delta.
 """
 
 from __future__ import annotations
@@ -69,13 +84,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.store import load_arrays, save_checkpoint
 from repro.core import isax
-from repro.core.index import FlatIndex, build_index, index_stats, pad_leaves
+from repro.core.builder import IndexBuilder, merge_sorted_delta
+from repro.core.index import (FlatIndex, build_index, index_stats,
+                              pad_leaves)
 from repro.core.search import (build_sharded_search, merge_delta_topk,
                                run_search, shard_index, squeeze_k)
 
@@ -154,10 +170,10 @@ class FreshIndex:
     def __init__(self, idx: FlatIndex, config: IndexConfig):
         self._idx = idx
         self.config = config
-        # No host copy of the dataset is retained: compact() reconstructs
-        # the (normalized) series from the index arrays on demand via
-        # _reconstruct_data(), so the facade adds O(1) memory on top of
-        # the device-resident index.
+        # No host copy of the dataset is retained: compact() merges the
+        # delta against the STORED index arrays in place (incremental
+        # sorted-run merge, core.builder.merge_sorted_delta), so the
+        # facade adds O(1) memory on top of the device-resident index.
         self._n_base = int(jnp.sum(idx.valid))
         self._delta: list = []                  # pending unsorted batches
         self._delta_cat = None                  # jnp concat cache
@@ -176,20 +192,47 @@ class FreshIndex:
         `overrides` are IndexConfig fields, so the two spellings
         `build(x, IndexConfig(leaf_capacity=32))` and
         `build(x, leaf_capacity=32)` are equivalent.
+
+        Dispatches to the fused single-program `build_index` jit — the
+        fastest one-shot path.  The `IndexBuilder` phase pipeline
+        (streaming feed, lock-free multi-worker builds via
+        `FreshIndex.builder`, incremental compaction) produces
+        bit-identical arrays, proven by tests/test_builder.py::
+        test_pipeline_matches_fused_build, so the two entry points are
+        interchangeable; an empty (0, L) bootstrap build goes through
+        the builder (the fused program needs at least one row).
         """
         cfg = config or IndexConfig()
         if overrides:
             cfg = dataclasses.replace(cfg, **overrides)
-        raw = jnp.asarray(data)
-        if raw.ndim != 2:
-            raise ValueError(f"data must be (n, L), got shape {raw.shape}")
-        cfg.validate_series_len(raw.shape[1])
-        idx = build_index(raw, segments=cfg.segments,
+        data = np.asarray(data)
+        if data.ndim != 2:
+            raise ValueError(f"data must be (n, L), got shape {data.shape}")
+        if data.shape[0] == 0:
+            return cls.builder(cfg).feed(data).finalize()
+        cfg.validate_series_len(data.shape[1])
+        idx = build_index(jnp.asarray(data), segments=cfg.segments,
                           bits=cfg.bits, leaf_capacity=cfg.leaf_capacity,
                           znorm=cfg.znorm, bound=cfg.bound,
                           backend=cfg.backend)
-        idx = _cast_storage(idx, cfg.dtype)
+        if cfg.dtype != "float32":
+            dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float16
+            idx = idx._replace(series=idx.series.astype(dt))
         return cls(idx, cfg)
+
+    @classmethod
+    def builder(cls, config: Optional[IndexConfig] = None,
+                **builder_kwargs) -> IndexBuilder:
+        """An `IndexBuilder` for streaming / multi-worker construction::
+
+            b = FreshIndex.builder(cfg, workers=4)
+            for chunk in stream:
+                b.feed(chunk)
+            index = b.finalize()
+
+        `builder_kwargs` pass through (workers, part_rows, injectors,
+        executor) — see `repro.core.builder.IndexBuilder`."""
+        return IndexBuilder(config, **builder_kwargs)
 
     # ------------------------------------------------------------------ #
     # introspection
@@ -315,7 +358,10 @@ class FreshIndex:
         """Append a batch of series to the delta buffer.  O(1), no
         rebuild; the batch is immediately visible to search() via an exact
         delta scan.  Ids continue after the existing series."""
-        b = np.asarray(batch, np.float32)
+        # np.array (not asarray): the delta buffer must own its rows — a
+        # caller reusing its batch buffer between add()s would otherwise
+        # silently rewrite pending series before search/compact reads them
+        b = np.array(batch, np.float32)
         if b.ndim == 1:
             b = b[None]
         if b.ndim != 2 or b.shape[1] != self.series_len:
@@ -326,31 +372,47 @@ class FreshIndex:
         return self
 
     def compact(self) -> "FreshIndex":
-        """Merge the delta buffer into the main index with one bulk
-        rebuild (Jiffy's batch merge).  With float32 storage (the
-        default), results after compact() are identical to a fresh build
-        over the concatenated data: the base series are reconstructed
-        from the index arrays (already normalized when config.znorm), the
-        delta is normalized to match, and the rebuild runs with
-        znorm=False, so no series is ever normalized twice.  With half
-        storage (bfloat16/float16) the rebuild necessarily starts from
-        the rounded stored series — each compact re-rounds through the
-        storage dtype, trading exact fresh-build equivalence for the 2x
-        memory the config asked for."""
+        """Merge the delta buffer into the main index with ONE incremental
+        sorted-run merge (`core.builder.merge_sorted_delta`, Jiffy's batch
+        merge).  The stored core arrays are consumed AS-IS — series, PAA,
+        iSAX words, squared norms and ids of already-indexed rows are
+        bit-preserved: no reconstruction into original order, no
+        re-normalization, no re-summarization, no re-sort (the delta run
+        is binary-searched into the sorted core) — and only the delta is
+        normalized + summarized (once, float32) and cast to the storage
+        dtype (once).  With
+        float32 storage the result is bit-identical to a fresh build over
+        the concatenated data; with half storage (bfloat16/float16) each
+        series is rounded exactly once, at its first compact, so repeated
+        compacts are drift-free: compact∘compact == compact."""
+        return self.commit_compact(self.prepare_compact())
+
+    def prepare_compact(self):
+        """Compute the compacted core WITHOUT mutating this index — the
+        heavy merge can then run outside a serving lock (QueryEngine.add
+        does this for auto-compaction).  Returns an opaque token for
+        commit_compact(), or None when there is no pending delta."""
         if not self._delta:
-            return self
-        cfg = self.config
-        base = self._reconstruct_data()
+            return None
         delta = np.concatenate(self._delta, axis=0)
-        if cfg.znorm:
-            delta = np.asarray(
-                isax.znormalize(jnp.asarray(delta, jnp.float32)), np.float32)
-        data = jnp.asarray(np.concatenate([base, delta], axis=0))
-        idx = build_index(data, segments=cfg.segments, bits=cfg.bits,
-                          leaf_capacity=cfg.leaf_capacity, znorm=False,
-                          bound=cfg.bound, backend=cfg.backend)
-        self._idx = _cast_storage(idx, cfg.dtype)
-        self._n_base = int(data.shape[0])
+        merged = merge_sorted_delta(self._idx, delta, self.config)
+        return (merged, delta.shape[0], len(self._delta))
+
+    def commit_compact(self, token) -> "FreshIndex":
+        """Install a prepare_compact() result (O(1) pointer swap plus a
+        possible re-shard).  The caller must guarantee no add() raced the
+        preparation — the engine serializes writers; a raced commit
+        raises instead of dropping the newer series."""
+        if token is None:
+            return self
+        merged, n_rows, n_batches = token
+        if (len(self._delta) != n_batches
+                or sum(b.shape[0] for b in self._delta) != n_rows):
+            raise RuntimeError(
+                "delta changed between prepare_compact and commit_compact; "
+                "serialize writers around the prepare/commit pair")
+        self._idx = merged
+        self._n_base += n_rows
         self._delta = []
         self._delta_cat = None
         if self._mesh is not None:
@@ -414,23 +476,3 @@ class FreshIndex:
             out._delta = [np.asarray(delta, np.float32)]
         return out
 
-    def _reconstruct_data(self) -> np.ndarray:
-        """Series in original id order, recovered from the leaf-ordered
-        index arrays via the stored permutation (padding rows dropped)."""
-        series = np.asarray(jax.device_get(self._idx.series), np.float32)
-        perm = np.asarray(jax.device_get(self._idx.perm))
-        valid = perm >= 0
-        out = np.zeros((int(valid.sum()), series.shape[1]), np.float32)
-        out[perm[valid]] = series[valid]
-        return out
-
-
-def _cast_storage(idx: FlatIndex, dtype: str) -> FlatIndex:
-    """Cast the bulk series matrix to the configured storage dtype.
-    f32 is the exact default; half formats trade exactness of the final
-    refinement distances for 2x HBM capacity (search math stays f32 via
-    preferred_element_type)."""
-    if dtype == "float32":
-        return idx
-    dt = jnp.bfloat16 if dtype == "bfloat16" else jnp.float16
-    return idx._replace(series=idx.series.astype(dt))

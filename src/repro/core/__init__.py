@@ -25,15 +25,19 @@ Host control plane (faithful to the paper's shared-memory algorithms):
 Device data plane (TPU-native adaptation — see DESIGN.md §2):
     isax       — PAA / iSAX / distance math
     index      — flat bucketed index build (BC + TP stages)
+    builder    — IndexBuilder: the Refresh-driven phase pipeline behind
+                 FreshIndex.build (streaming feed, lock-free multi-worker
+                 builds, incremental compaction via merge_sorted_delta)
     search     — exact k-NN pruning + refinement (PS + RS stages)
     dtw        — DTW similarity (Section II generality claim): banded DTW
                  + LB_Keogh envelope bound + exact DTW 1-NN search
 """
 
 from . import isax  # noqa: F401
+from .builder import IndexBuilder, merge_sorted_delta  # noqa: F401
 from .dtw import lb_keogh, dtw_band, search_dtw  # noqa: F401
 from .index import (FlatIndex, build_index, build_index_host,  # noqa: F401
-                    index_stats, pad_leaves)
+                    index_stats, leaf_stats_blocks, pad_leaves)
 from .refresh import (CounterObject, Injectors, RefreshExecutor,  # noqa: F401
                       RefreshRun, WorkerCrash)
 from .search import (build_sharded_search, make_sharded_search,  # noqa: F401
@@ -42,4 +46,4 @@ from .search import (build_sharded_search, make_sharded_search,  # noqa: F401
                      shard_index, snapshot_search)
 from .traverse import (ArrayTraverse, Executor, SequentialExecutor,  # noqa: F401
                        StageStats, TraverseObject,
-                       check_traversing_property)
+                       check_traversing_property, traverse_complete)

@@ -85,6 +85,29 @@ def leaf_regions(lo_sym: jnp.ndarray, hi_sym: jnp.ndarray,
     raise ValueError(f"unknown bound {bound!r}")
 
 
+def leaf_stats_blocks(pw: jnp.ndarray, ww: jnp.ndarray, vmask: jnp.ndarray,
+                      *, bits: int, bound: str):
+    """Per-leaf summaries from leaf-blocked sorted entries.
+
+    pw: (n_leaves, M, w) PAA, ww: (n_leaves, M, w) symbols, vmask:
+    (n_leaves, M, 1) validity.  Returns (leaf_lo, leaf_hi, leaf_valid)
+    with fully-padded leaves carrying empty regions at +inf.  The one
+    per-leaf-stats computation both the fused `build_index` program and
+    `IndexBuilder`'s leaf_stats phase execute, so the two paths cannot
+    drift."""
+    big = jnp.asarray(jnp.inf, pw.dtype)
+    lo_paa = jnp.min(jnp.where(vmask, pw, big), axis=1)
+    hi_paa = jnp.max(jnp.where(vmask, pw, -big), axis=1)
+    lo_sym = jnp.min(jnp.where(vmask, ww, (1 << bits) - 1),
+                     axis=1).astype(jnp.uint8)
+    hi_sym = jnp.max(jnp.where(vmask, ww, 0), axis=1).astype(jnp.uint8)
+    leaf_valid = jnp.any(vmask[..., 0], axis=1)
+    lo, hi = leaf_regions(lo_sym, hi_sym, lo_paa, hi_paa, bound, bits)
+    lo = jnp.where(leaf_valid[:, None], lo, big)
+    hi = jnp.where(leaf_valid[:, None], hi, big)
+    return lo, hi, leaf_valid
+
+
 @functools.partial(jax.jit, static_argnames=("segments", "bits",
                                              "leaf_capacity", "znorm",
                                              "bound", "backend"))
@@ -96,7 +119,7 @@ def build_index(raw: jnp.ndarray,
                 znorm: bool = True,
                 bound: str = "prefix",
                 backend: str = "ref") -> FlatIndex:
-    """Bulk index construction (buffer-creation + tree-population stages).
+    """Bulk index construction as ONE fused device program.
 
     raw: (n, L) float series.  n is padded up to a leaf multiple.
     The global sort is the only step with cross-shard dataflow (an all-to-all
@@ -105,6 +128,13 @@ def build_index(raw: jnp.ndarray,
 
     backend 'pallas' runs the summarization stage through the fused Pallas
     kernel (Mosaic on TPU, interpret elsewhere); 'ref' is pure jnp.
+
+    This is the maximal-throughput single-shot path.  The SUPPORTED build
+    API is `core.builder.IndexBuilder` (what `FreshIndex.build` uses): the
+    same math decomposed into Refresh-driven phases, so builds stream,
+    run on multiple lock-free workers, and merge incrementally — see the
+    phase-equivalence tests in tests/test_builder.py proving the two
+    paths produce bit-identical indexes.
     """
     n, L = raw.shape
     x = isax.znormalize(raw) if znorm else raw
@@ -138,17 +168,9 @@ def build_index(raw: jnp.ndarray,
     ww = w.reshape(n_leaves, leaf_capacity, segments)
     vmask = valid.reshape(n_leaves, leaf_capacity, 1)
 
-    big = jnp.asarray(jnp.inf, p.dtype)
-    lo_paa = jnp.min(jnp.where(vmask, pw, big), axis=1)
-    hi_paa = jnp.max(jnp.where(vmask, pw, -big), axis=1)
-    lo_sym = jnp.min(jnp.where(vmask, ww, (1 << bits) - 1), axis=1).astype(jnp.uint8)
-    hi_sym = jnp.max(jnp.where(vmask, ww, 0), axis=1).astype(jnp.uint8)
-    leaf_valid = jnp.any(vmask[..., 0], axis=1)
-
-    lo, hi = leaf_regions(lo_sym, hi_sym, lo_paa, hi_paa, bound, bits)
     # fully-padded leaves: empty region at +inf so their lb is +inf
-    lo = jnp.where(leaf_valid[:, None], lo, big)
-    hi = jnp.where(leaf_valid[:, None], hi, big)
+    lo, hi, leaf_valid = leaf_stats_blocks(pw, ww, vmask, bits=bits,
+                                           bound=bound)
 
     sq_norms = jnp.sum(x * x, axis=-1)
     # padded rows must never win a min: push their norms (hence distances) up

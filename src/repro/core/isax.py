@@ -182,6 +182,62 @@ def interleaved_key(words: jnp.ndarray, bits: int = SAX_BITS) -> jnp.ndarray:
     return jnp.stack(lanes, axis=-1)  # (..., n_lanes)
 
 
+def interleaved_key_np(words: np.ndarray, bits: int = SAX_BITS) -> np.ndarray:
+    """Numpy mirror of `interleaved_key` for the host-side build pipeline.
+
+    `IndexBuilder`'s route/sort/merge phases compare keys on the host
+    (numpy stable sorts are the merge primitive), so the key computation
+    must not round-trip through the device per part.  Integer math only —
+    bit-identical to the jnp version (asserted by tests/test_builder.py::
+    test_interleaved_key_np_matches_jnp).
+    Returns int32 lanes; lexicographic lane comparison == full-key
+    comparison, exactly as in `interleaved_key`.
+    """
+    words = np.asarray(words)
+    w = words.shape[-1]
+    total = w * bits
+    planes = np.empty(words.shape[:-1] + (total,), np.int32)
+    i = 0
+    for b in range(bits - 1, -1, -1):          # MSB plane first
+        for s in range(w):
+            planes[..., i] = (words[..., s].astype(np.int32) >> b) & 1
+            i += 1
+    lanes = []
+    for lane_start in range(0, total, 31):
+        chunk = planes[..., lane_start:lane_start + 31]
+        width = chunk.shape[-1]
+        weights = (np.int32(1) << np.arange(width - 1, -1, -1,
+                                            dtype=np.int32))
+        lanes.append(np.sum(chunk * weights, axis=-1, dtype=np.int32))
+    return np.stack(lanes, axis=-1)
+
+
+def lexsort_keys(keys: np.ndarray) -> np.ndarray:
+    """Stable ascending order of multi-lane keys (primary lane first).
+
+    numpy's lexsort takes its PRIMARY key last; ties break by position
+    (stable), which is what makes run merging order-equivalent to one
+    global stable sort.  keys: (n, n_lanes) -> (n,) permutation.
+    """
+    return np.lexsort(tuple(keys[:, i]
+                            for i in range(keys.shape[1] - 1, -1, -1)))
+
+
+def pack_keys_bytes(keys: np.ndarray) -> np.ndarray:
+    """Pack (n, n_lanes) int32 key lanes into (n,) fixed-width byte
+    strings whose memcmp order EQUALS the lexicographic lane order.
+
+    Lanes are non-negative (31 bits used), so big-endian uint32 bytes
+    compare like the integers, and concatenating the lanes' bytes
+    compares like the lane tuple.  This gives the merge path a SCALAR
+    comparable key: np.searchsorted over packed core keys is a true
+    binary search, so merging a delta run into the sorted core is
+    O(m log n) instead of a full O((n+m) log (n+m)) re-sort.
+    """
+    be = np.ascontiguousarray(keys.astype(">u4"))
+    return be.view(f"S{4 * keys.shape[1]}").reshape(-1)
+
+
 # ---------------------------------------------------------------------------
 # Distances
 # ---------------------------------------------------------------------------

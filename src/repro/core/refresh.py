@@ -97,6 +97,35 @@ class Injectors:
     delay: Optional[Callable[[int, int, int], float]] = None
     crash: Optional[Callable[[int, int, int], bool]] = None
 
+    @classmethod
+    def crashing(cls, worker_ids, after: int = 0) -> "Injectors":
+        """Crash each listed worker permanently at its `after`-th payload
+        application (0 = before it processes anything).  The per-worker
+        counters are only ever touched by their own thread, so no lock is
+        needed.  The canonical Fig. 8 injector, reused by the builder
+        tests and `benchmarks/build_bench.py`."""
+        ids = frozenset(worker_ids)
+        counts: dict = {}
+        def crash(tid: int, level: int, idx: int) -> bool:
+            if tid not in ids:
+                return False
+            c = counts.get(tid, 0)
+            counts[tid] = c + 1
+            return c >= after
+        return cls(crash=crash)
+
+    @classmethod
+    def delaying(cls, seconds: float, worker_ids=None,
+                 every: int = 1) -> "Injectors":
+        """Sleep `seconds` before every `every`-th element, on all workers
+        or just `worker_ids` — the Fig. 7 straggler injector."""
+        ids = None if worker_ids is None else frozenset(worker_ids)
+        def delay(tid: int, level: int, idx: int) -> float:
+            if ids is not None and tid not in ids:
+                return 0.0
+            return seconds if (idx % max(1, every)) == 0 else 0.0
+        return cls(delay=delay)
+
 
 class _Level:
     """One recursion level: parts with done flags, help flags, a counter."""

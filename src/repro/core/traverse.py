@@ -125,3 +125,32 @@ def check_traversing_property(n_elements: int,
     """True iff f was applied at least once on every distinct element."""
     seen = set(applied)
     return all(i in seen for i in range(n_elements))
+
+
+def traverse_complete(executor: Executor, n_parts: int,
+                      payload: Callable[[int], None]
+                      ) -> Optional[StageStats]:
+    """Drive `payload` over part ids [0, n_parts) through `executor`,
+    then GUARANTEE completion.
+
+    Refresh's progress property holds while at least one worker keeps
+    taking steps; if a crash injector kills every worker, parts can be
+    left unfinished.  The caller is always a live "worker" though, so
+    after the executor returns we re-apply any part whose done flag never
+    set — the same at-least-once helping rule the executors use, extended
+    to the calling thread.  Payloads must therefore be idempotent (write
+    deterministic values into disjoint output slots), which is exactly
+    the contract `IndexBuilder`'s phase payloads keep.
+
+    Returns the executor's StageStats when it records one (RefreshRun),
+    else None (SequentialExecutor).
+    """
+    done = [False] * n_parts
+    def apply(p: int) -> None:
+        payload(p)
+        done[p] = True
+    executor.run(range(n_parts), apply)
+    for p in range(n_parts):
+        if not done[p]:
+            apply(p)
+    return getattr(executor, "last_stats", None)

@@ -75,6 +75,13 @@ class EngineConfig:
     latency_window  completed-query latencies kept for p50/p99
     journal_path    optional on-disk WorkJournal (crash-durable helping);
                     None keeps the journal in memory
+    auto_compact_rows
+                    when set, add() compacts the index as soon as the
+                    pending delta reaches this many rows — an incremental
+                    sorted-run merge (core.builder.merge_sorted_delta)
+                    that consumes the stored core arrays as-is, published
+                    as a delta-free epoch so steady-state plans return to
+                    the core-only program.  None = only explicit compact()
     round_leaves / pq_budget / max_rounds / backend
                     per-engine search-knob overrides; None defers to the
                     index's IndexConfig (max_rounds: exact search)
@@ -87,6 +94,7 @@ class EngineConfig:
     help_after_ms: float = 50.0
     latency_window: int = 4096
     journal_path: Optional[str] = None
+    auto_compact_rows: Optional[int] = None
     round_leaves: Optional[int] = None
     pq_budget: Optional[int] = None
     max_rounds: Optional[int] = None
@@ -95,6 +103,8 @@ class EngineConfig:
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.auto_compact_rows is not None and self.auto_compact_rows < 1:
+            raise ValueError("auto_compact_rows must be >= 1 or None")
         if self.workers < 0:
             raise ValueError("workers must be >= 0")
         if self.linger_ms < 0 or self.help_after_ms < 0:
@@ -217,6 +227,10 @@ class QueryEngine:
         self.plans = PlanCache(donate=cfg.donate)
         self._batcher = MicroBatcher(cfg.max_batch)
         self._cv = threading.Condition(threading.RLock())
+        # serializes index WRITERS (add/compact/refresh) so the heavy
+        # compaction merge can run outside _cv without racing another
+        # writer; readers keep going under _cv the whole time
+        self._wlock = threading.Lock()
         self._journal = WorkJournal(cfg.journal_path, n_parts=0)
         self._batches: dict = {}            # part_id -> Batch (unfinished)
         self._pending: list = []            # [Pending]
@@ -230,6 +244,7 @@ class QueryEngine:
         self._completed = 0
         self._dispatched = 0
         self._padded_slots = 0
+        self._compactions = 0
         self._first_submit: Optional[float] = None
         self._crashed_workers = 0
         self._crash_hook = None             # test injection: fn(wid, batch)
@@ -262,26 +277,52 @@ class QueryEngine:
     def add(self, batch) -> "QueryEngine":
         """Append series and publish a new epoch snapshot.  In-flight
         queries keep answering on their submit-time snapshot; queries
-        submitted after this call see the new series."""
-        with self._cv:
-            self._index.add(batch)
-            self._publish()
+        submitted after this call see the new series.  When
+        `auto_compact_rows` is set and the pending delta reaches it, the
+        delta is folded into the core first (incremental sorted-run
+        merge) and the published epoch is delta-free.  The merge itself
+        runs OUTSIDE the engine condition variable (writers serialize on
+        a separate lock), so concurrent submit()/result() never stall
+        behind a compaction."""
+        cap = self.config.auto_compact_rows
+        with self._wlock:
+            with self._cv:
+                self._index.add(batch)
+                if cap is None or self._index.n_pending < cap:
+                    self._publish()
+                    return self
+            self._compact_locked()
         return self
 
     def compact(self) -> "QueryEngine":
-        """Merge the delta into the core (bulk rebuild) and publish.
+        """Merge the delta into the core (incremental sorted-run merge —
+        the stored core arrays are consumed as-is) and publish.
         Compacted epochs compile delta-free plans — steady-state cost
         returns to the core-only program."""
-        with self._cv:
-            self._index.compact()
-            self._publish()
+        with self._wlock:
+            self._compact_locked()
         return self
+
+    def _compact_locked(self) -> None:
+        """Heavy merge outside _cv, O(1) commit + publish under it.
+        Caller holds _wlock (no writer can race prepare -> commit).  The
+        commit really is O(1) here: __init__ rejects sharded indexes, so
+        commit_compact's re-shard branch cannot trigger under _cv."""
+        token = self._index.prepare_compact()
+        with self._cv:
+            self._index.commit_compact(token)
+            if token is not None:
+                self._compactions += 1
+            self._publish()
 
     def refresh(self) -> "QueryEngine":
         """Publish a snapshot of out-of-band index mutations (direct
         index.add()/compact() calls made without going through the
-        engine)."""
-        self._publish()
+        engine).  Takes the writer lock like every other writer entry
+        point, so a refresh cannot interleave with an in-flight
+        prepare/commit compaction."""
+        with self._wlock:
+            self._publish()
         return self
 
     # ------------------------------------------------------------------ #
@@ -504,6 +545,7 @@ class QueryEngine:
             return {
                 "epoch": self._epoch,
                 "epoch_lag": self._epoch - oldest,
+                "compactions": self._compactions,
                 "queue_depth": len(self._pending),
                 "queued_rows": sum(p.queries.shape[0]
                                    for p in self._pending),

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (build_index, index_stats, search, search_bruteforce)
+from repro.core import (build_index, index_stats, run_search,
+                        search_bruteforce)
 from repro.core.index import leaf_regions
 from repro.core import isax
 
@@ -26,7 +27,7 @@ def test_index_shapes_and_stats(built, walks):
 def test_exact_search_matches_bruteforce(built, queries):
     raw, idx = built
     q = jnp.asarray(queries)
-    d, i = search(idx, q)
+    d, i = run_search(idx, q)
     db, ib = search_bruteforce(raw, q)
     np.testing.assert_allclose(np.asarray(d), np.asarray(db),
                                rtol=1e-4, atol=1e-4)
@@ -42,7 +43,7 @@ def test_every_leaf_bound_is_sound(walks, queries, bound):
     raw = jnp.asarray(walks[:512])
     idx = build_index(raw, leaf_capacity=32, bound=bound)
     q = jnp.asarray(queries[:8])
-    d, i = search(idx, q)
+    d, i = run_search(idx, q)
     db, ib = search_bruteforce(raw, q)
     np.testing.assert_allclose(np.asarray(d), np.asarray(db),
                                rtol=1e-4, atol=1e-4)
@@ -73,8 +74,8 @@ def test_search_with_max_rounds_is_upper_bound(built, queries):
     """Capped refinement is approximate but never better than exact."""
     raw, idx = built
     q = jnp.asarray(queries[:8])
-    d_exact, _ = search(idx, q)
-    d_cap, _ = search(idx, q, max_rounds=1)
+    d_exact, _ = run_search(idx, q)
+    d_cap, _ = run_search(idx, q, max_rounds=1)
     assert np.all(np.asarray(d_cap) >= np.asarray(d_exact) - 1e-5)
 
 
@@ -88,9 +89,28 @@ def test_build_is_deterministic(walks):
 def test_search_single_query_batch(built):
     raw, idx = built
     q = jnp.asarray(np.asarray(raw[3:4]))  # a collection member: dist 0
-    d, i = search(idx, q)
+    d, i = run_search(idx, q)
     assert float(d[0]) < 1e-3
     assert int(i[0]) == 3
+
+
+def test_deprecated_free_functions_still_work_but_warn(built, queries):
+    """The migration-table shims: same answers as run_search, but loudly
+    deprecated.  pytest.warns captures the warning, so the suite stays
+    clean under -W error::DeprecationWarning (the smoke.sh leg)."""
+    import jax
+    from repro.core import search as deprecated_search
+    from repro.core import make_sharded_search as deprecated_mss
+    raw, idx = built
+    q = jnp.asarray(queries[:4])
+    with pytest.warns(DeprecationWarning, match="FreshIndex.search"):
+        d, i = deprecated_search(idx, q)
+    d0, i0 = run_search(idx, q)
+    np.testing.assert_array_equal(np.asarray(i), np.asarray(i0))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d0))
+    mesh = jax.make_mesh((1,), ("data",))
+    with pytest.warns(DeprecationWarning, match="FreshIndex.shard"):
+        deprecated_mss(mesh)
 
 
 def test_padded_index_reports_exact_distances():
@@ -100,7 +120,7 @@ def test_padded_index_reports_exact_distances():
     w = random_walk(1000, 256, seed=13)          # 1000 % 64 != 0
     q = query_workload(w, 8, noise_sigma=0.05, seed=14)
     idx = build_index(jnp.asarray(w), leaf_capacity=64)
-    d, i = search(idx, jnp.asarray(q))
+    d, i = run_search(idx, jnp.asarray(q))
     db, ib = search_bruteforce(jnp.asarray(w), jnp.asarray(q))
     np.testing.assert_array_equal(np.asarray(i), np.asarray(ib))
     np.testing.assert_allclose(np.asarray(d), np.asarray(db), atol=1e-5)

@@ -10,7 +10,8 @@ import numpy as np
 import pytest
 
 from repro.api import FreshIndex, IndexConfig
-from repro.core import build_index, search, search_bruteforce, search_plan
+from repro.core import (build_index, run_search, search_bruteforce,
+                        search_plan)
 from repro.data.synthetic import query_workload, random_walk
 
 
@@ -26,8 +27,8 @@ def padded_built():
 def test_pallas_matches_ref_and_bruteforce(padded_built, k):
     walks, idx = padded_built
     q = jnp.asarray(query_workload(walks, 6, noise_sigma=0.05, seed=22))
-    dr, ir = search(idx, q, k=k, backend="ref")
-    dp, ip = search(idx, q, k=k, backend="pallas")
+    dr, ir = run_search(idx, q, k=k, backend="ref")
+    dp, ip = run_search(idx, q, k=k, backend="pallas")
     db, ib = search_bruteforce(jnp.asarray(walks), q, k=k)
     np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
     np.testing.assert_array_equal(np.asarray(ip), np.asarray(ib))
@@ -45,8 +46,8 @@ def test_pallas_odd_query_and_round_shapes(padded_built, Q):
     PQ tail."""
     walks, idx = padded_built
     q = jnp.asarray(query_workload(walks, Q, noise_sigma=0.02, seed=23))
-    dr, ir = search(idx, q, k=3, round_leaves=5, backend="ref")
-    dp, ip = search(idx, q, k=3, round_leaves=5, backend="pallas")
+    dr, ir = run_search(idx, q, k=3, round_leaves=5, backend="ref")
+    dp, ip = run_search(idx, q, k=3, round_leaves=5, backend="pallas")
     np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
     np.testing.assert_array_equal(np.asarray(dp), np.asarray(dr))
 
@@ -57,7 +58,7 @@ def test_pallas_all_pruned_rounds(padded_built):
     (pl.when skip) must still terminate with the exact answer."""
     walks, idx = padded_built
     q = jnp.asarray(walks[7:10])
-    dp, ip = search(idx, q, k=1, backend="pallas")
+    dp, ip = run_search(idx, q, k=1, backend="pallas")
     np.testing.assert_array_equal(np.asarray(ip), np.asarray([7, 8, 9]))
     assert np.all(np.asarray(dp) < 1e-3)
 

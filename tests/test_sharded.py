@@ -83,17 +83,17 @@ def test_sharded_pallas_backend_matches_oracle():
 def test_sharded_search_matches_single_device():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
-    from repro.core import build_index, search, make_sharded_search, \\
+    from repro.core import build_index, run_search, build_sharded_search, \\
         shard_index
     from repro.data.synthetic import random_walk, query_workload
     walks = random_walk(2048, 256, seed=1)
     qs = query_workload(walks, 12, noise_sigma=0.05, seed=2)
     raw = jnp.asarray(walks)
     idx = build_index(raw, leaf_capacity=64)
-    d0, i0 = search(idx, jnp.asarray(qs))
+    d0, i0 = run_search(idx, jnp.asarray(qs))
     mesh = jax.make_mesh((8,), ("data",))
     sidx = shard_index(idx, mesh)
-    fn = make_sharded_search(mesh, sync_every=2)
+    fn = build_sharded_search(mesh, sync_every=2)
     d1, i1 = fn(sidx, jnp.asarray(qs))
     np.testing.assert_allclose(np.asarray(d0), np.asarray(d1),
                                rtol=1e-4, atol=1e-4)

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (build_index, build_index_host, search,
+from repro.core import (build_index, build_index_host, run_search,
                         search_bruteforce)
 from repro.core.refresh import Injectors, RefreshExecutor
 from repro.core.traverse import SequentialExecutor
@@ -51,7 +51,7 @@ def test_device_pipeline_exact_vs_bruteforce(small, queries):
     raw = jnp.asarray(small)
     idx = build_index(raw, leaf_capacity=32)
     q = jnp.asarray(queries[:16])
-    d, i = search(idx, q)
+    d, i = run_search(idx, q)
     db, ib = search_bruteforce(raw, q)
     np.testing.assert_allclose(np.asarray(d), np.asarray(db), rtol=1e-4,
                                atol=1e-4)
@@ -66,7 +66,7 @@ def test_query_difficulty_prunes_less(small):
     means = []
     for sigma in (0.01, 0.05, 0.1):
         qs = query_workload(small, 16, noise_sigma=sigma, seed=5)
-        d, _ = search(idx, jnp.asarray(qs))
+        d, _ = run_search(idx, jnp.asarray(qs))
         means.append(float(jnp.mean(d)))
     assert means[0] <= means[1] <= means[2], means
 
