@@ -5,7 +5,20 @@ Measures what the figures cannot: steady-state serving behaviour —
 per-query p50/p99 latency under micro-batching, achieved QPS, plan-cache
 hit rate (zero re-traces after warmup is the design claim), padding
 overhead, and the one-off cold cost of AOT-compiling the bucket plans.
-Rows land in BENCH_fresh.json next to the figure rows (`serve/...`).
+Rows land in BENCH_fresh.json next to the figure rows (`serve/poisson/
+steady`, `serve/warmup_aot_compile`).
+
+Two legs share one Poisson driver:
+
+* local   — the engine over an unsharded index (in-process);
+* sharded — the SAME stream through an engine over `index.shard(mesh)`
+  on a forced 2-device host CPU mesh.  jax pins the device count at
+  first init, so this leg runs in a SUBPROCESS (`python -m
+  benchmarks.serve_bench --sharded-child`) with
+  XLA_FLAGS=--xla_force_host_platform_device_count=2 and hands its rows
+  back as JSON on stdout (`serve/sharded/warmup_aot_compile`,
+  `serve/sharded/poisson/steady`).  Read EXPERIMENTS.md §Serving for
+  why sharded CPU QPS is a property check, not a speedup claim.
 
 Open-loop means arrivals do NOT wait for completions (the classic
 coordinated-omission trap): submission times are scheduled ahead from an
@@ -16,6 +29,10 @@ of silently throttling the offered load.
 
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 from typing import List
 
@@ -32,68 +49,140 @@ N_QUERIES = 200          # arrival stream length
 TARGET_QPS = 400.0
 MAX_BATCH = 16
 K = 10
+QUICK = False
+SHARDED_DEVICES = 2
+_CHILD_MARK = "SHARDED_ROWS_JSON:"
 
 
 def set_quick() -> None:
     """Same CI knob as fresh_bench: shrink the stream, keep the shape."""
-    global N_SERIES, N_QUERIES
+    global N_SERIES, N_QUERIES, QUICK
     N_SERIES = 2_000
     N_QUERIES = 120
+    QUICK = True
+
+
+def _drive_poisson(eng, queries: np.ndarray, prefix: str,
+                   extra_derived: str = "") -> List[dict]:
+    """Warmup + Poisson stream through an already-built engine; returns
+    the `<prefix>/warmup_aot_compile` and `<prefix>/poisson/steady`
+    rows.  One driver for the local and sharded legs so their rows stay
+    comparable column for column."""
+    out = []
+    # cold cost: AOT-compiling every (bucket, k=K) plan up front — the
+    # trace+compile work a facade serving loop would pay inline, spread
+    # invisibly over its first requests
+    t0 = time.perf_counter()
+    eng.warmup(ks=(K,))
+    t_warm = time.perf_counter() - t0
+    n_plans = eng.stats()["plan_cache"]["size"]
+    out.append(row(f"{prefix}/warmup_aot_compile", t_warm,
+                   f"plans={n_plans} k={K} buckets=pow2..{MAX_BATCH}"
+                   + (f" {extra_derived}" if extra_derived else "")))
+
+    rng = np.random.default_rng(43)
+    gaps = rng.exponential(1.0 / TARGET_QPS, N_QUERIES)
+    qidx = rng.integers(0, queries.shape[0], N_QUERIES)
+
+    # futures stamp completed_at on time.monotonic(); schedule there too
+    t_start = time.monotonic()
+    sched = t_start
+    futs = []
+    for g, qi in zip(gaps, qidx):
+        sched += g
+        now = time.monotonic()
+        if sched > now:
+            time.sleep(sched - now)
+        futs.append((sched, eng.submit(queries[qi], k=K)))
+    lat = []
+    for sched, f in futs:
+        f.result(timeout=300)
+        lat.append(f.completed_at - sched)
+    wall = time.monotonic() - t_start
+    st = eng.stats()
+    pc = st["plan_cache"]
+    out.append(row(
+        f"{prefix}/poisson/steady", wall,
+        f"offered={TARGET_QPS:.0f}qps stream={N_QUERIES}"
+        + (f" {extra_derived}" if extra_derived else ""),
+        qps=round(N_QUERIES / wall, 1),
+        **latency_summary(lat),
+        rounds_per_query=round(st["rounds_per_query"], 2),
+        plan_hits=pc["hits"], plan_misses=pc["misses"],
+        padded_slots=st["batches"]["padded_slots"],
+        dispatched=st["batches"]["dispatched"]))
+    return out
 
 
 def serve_poisson() -> List[dict]:
     walks = random_walk(N_SERIES, 256, seed=41)
     queries = query_workload(walks, 64, noise_sigma=0.05, seed=42)
     index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
-    out = []
-
     eng = index.engine(EngineConfig(max_batch=MAX_BATCH, workers=1,
                                     linger_ms=1.0, warm_ks=(K,)))
     try:
-        # cold cost: AOT-compiling every (bucket, k=K) plan up front —
-        # the trace+compile work a facade serving loop would pay inline,
-        # spread invisibly over its first requests
-        t0 = time.perf_counter()
-        eng.warmup(ks=(K,))
-        t_warm = time.perf_counter() - t0
-        n_plans = eng.stats()["plan_cache"]["size"]
-        out.append(row("serve/warmup_aot_compile", t_warm,
-                       f"plans={n_plans} k={K} "
-                       f"buckets=pow2..{MAX_BATCH}"))
-
-        rng = np.random.default_rng(43)
-        gaps = rng.exponential(1.0 / TARGET_QPS, N_QUERIES)
-        qidx = rng.integers(0, queries.shape[0], N_QUERIES)
-
-        # futures stamp completed_at on time.monotonic(); schedule there too
-        t_start = time.monotonic()
-        sched = t_start
-        futs = []
-        for g, qi in zip(gaps, qidx):
-            sched += g
-            now = time.monotonic()
-            if sched > now:
-                time.sleep(sched - now)
-            futs.append((sched, eng.submit(queries[qi], k=K)))
-        lat = []
-        for sched, f in futs:
-            f.result(timeout=120)
-            lat.append(f.completed_at - sched)
-        wall = time.monotonic() - t_start
-        st = eng.stats()
-        pc = st["plan_cache"]
-        out.append(row(
-            "serve/poisson/steady", wall,
-            f"offered={TARGET_QPS:.0f}qps stream={N_QUERIES}",
-            qps=round(N_QUERIES / wall, 1),
-            **latency_summary(lat),
-            rounds_per_query=round(st["rounds_per_query"], 2),
-            plan_hits=pc["hits"], plan_misses=pc["misses"],
-            padded_slots=st["batches"]["padded_slots"],
-            dispatched=st["batches"]["dispatched"]))
+        return _drive_poisson(eng, queries, "serve")
     finally:
         eng.close()
-    return out
 
 
-ALL = [serve_poisson]
+def _sharded_child() -> None:
+    """Body of the forced-2-device subprocess: sharded engine over the
+    same workload; prints rows as one marked JSON line."""
+    import jax
+    walks = random_walk(N_SERIES, 256, seed=41)
+    queries = query_workload(walks, 64, noise_sigma=0.05, seed=42)
+    index = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+    n_dev = len(jax.devices())
+    mesh = jax.make_mesh((n_dev,), ("data",))
+    index.shard(mesh)
+    eng = index.engine(EngineConfig(max_batch=MAX_BATCH, workers=1,
+                                    linger_ms=1.0, warm_ks=(K,),
+                                    sync_every=2))
+    try:
+        rows = _drive_poisson(eng, queries, "serve/sharded",
+                              extra_derived=f"mesh=data:{n_dev}")
+    finally:
+        eng.close()
+    print(_CHILD_MARK + json.dumps(rows), flush=True)
+
+
+def serve_sharded() -> List[dict]:
+    """Spawn the sharded leg under a forced multi-device host platform
+    (the parent process keeps its single device — jax pins the count at
+    first init) and adopt its rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{SHARDED_DEVICES}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    src = os.path.join(root, "src")
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    args = [sys.executable, "-m", "benchmarks.serve_bench",
+            "--sharded-child"]
+    if QUICK:
+        args.append("--quick")
+    r = subprocess.run(args, capture_output=True, text=True, env=env,
+                       cwd=root, timeout=1800)
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"sharded serve child failed:\nSTDOUT:\n{r.stdout}\n"
+            f"STDERR:\n{r.stderr}")
+    for line in r.stdout.splitlines():
+        if line.startswith(_CHILD_MARK):
+            return json.loads(line[len(_CHILD_MARK):])
+    raise RuntimeError(f"sharded serve child emitted no rows:\n{r.stdout}")
+
+
+ALL = [serve_poisson, serve_sharded]
+
+
+if __name__ == "__main__":
+    if "--quick" in sys.argv:
+        set_quick()
+    if "--sharded-child" in sys.argv:
+        _sharded_child()
+    else:
+        for fn in ALL:
+            for r in fn():
+                print(r)

@@ -3,23 +3,72 @@
 # the FreshIndex facade, on whatever backend jax finds (CPU in CI), a
 # DeprecationWarning-as-error pytest leg over the index test files, then
 # a 2-figure benchmark subset (fig3 query + fig5 scaling, both kernel
-# backends) PLUS the serving leg (--serve-quick: QueryEngine driven by a
+# backends) PLUS the serving legs (--serve-quick: local QueryEngine and
+# the SHARDED engine on a forced 2-device host mesh, both driven by a
 # Poisson arrival stream) AND the build-pipeline leg (--build-quick:
 # IndexBuilder single-shot vs multi-worker vs crash-injected, compact
 # merge vs rebuild) at --quick scale, emitting the machine-readable
 # BENCH_fresh.json perf record with p50/p99 latency + QPS rows.
+#
+#   scripts/smoke.sh                  full smoke
+#   scripts/smoke.sh --sharded-serve  only the sharded serving leg:
+#                                     2-device example + serve/sharded/*
+#                                     row validation of the committed
+#                                     BENCH_fresh.json
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+SHARDED_ONLY=0
+for a in "$@"; do
+    case "$a" in
+        --sharded-serve) SHARDED_ONLY=1 ;;
+        *) echo "unknown flag: $a" >&2; exit 2 ;;
+    esac
+done
+
+run_sharded_example() {
+    # 2-device CPU host mesh: the sharded engine example end to end
+    # (AOT mesh plans, mesh-wide epochs, helping, elastic recovery)
+    XLA_FLAGS=--xla_force_host_platform_device_count=2 \
+        python examples/serve_sharded.py
+}
+
+validate_sharded_rows() {
+    python - <<'EOF'
+import json
+rows = json.load(open("BENCH_fresh.json"))["rows"]
+sharded = [r for r in rows if r["name"].startswith("serve/sharded/")]
+names = {r["name"] for r in sharded}
+assert "serve/sharded/warmup_aot_compile" in names, names
+assert "serve/sharded/poisson/steady" in names, names
+steady = next(r for r in sharded
+              if r["name"] == "serve/sharded/poisson/steady")
+for key in ("p50_us", "p99_us", "qps", "plan_hits", "plan_misses"):
+    assert key in steady, ("serve/sharded/poisson/steady", key)
+assert "mesh=data:2" in steady["derived"], steady["derived"]
+print("serve/sharded/* rows OK "
+      f"(qps={steady['qps']}, p50={steady['p50_us']}us, "
+      f"misses={steady['plan_misses']})")
+EOF
+}
+
+if [ "$SHARDED_ONLY" = 1 ]; then
+    run_sharded_example
+    validate_sharded_rows
+    exit 0
+fi
+
 python examples/quickstart.py
 python examples/serve_engine.py
+run_sharded_example
 
 # DeprecationWarning-clean leg: the data-series-index test files (the
 # former shim call sites) must pass with deprecations promoted to errors
 # — only pytest.warns-guarded shim-coverage calls may emit them.
 python -W error::DeprecationWarning -m pytest -q -x \
     tests/test_api.py tests/test_builder.py tests/test_index_search.py \
-    tests/test_system.py
+    tests/test_docs.py tests/test_system.py
 
 python -m benchmarks.run --only fig3,fig5,serve,build --quick \
     --serve-quick --build-quick --json BENCH_fresh.json
@@ -51,3 +100,4 @@ print(f"BENCH_fresh.json OK: {len(rows)} rows; fig3+fig5 both backends, "
       f"serve p50/p99/QPS, build pipeline+compact rows present "
       f"(merge {rebuild/merge:.2f}x faster than rebuild)")
 EOF
+validate_sharded_rows

@@ -57,6 +57,12 @@ Migration table (old free functions -> facade):
     (no defined add/search overlap)       engine.add(batch)  — snapshot-
                                             consistent: in-flight queries
                                             answer on their submit epoch
+    make_sharded_search in a serving      index.shard(mesh).engine() —
+      loop (re-traces, no epochs)           per-(bucket, k, mesh) AOT
+                                            plans, mesh-wide epochs
+    (no shard failure story)              engine.recover(ckpt_dir) —
+                                            reload checkpoint arrays,
+                                            re-mesh over survivors
     ====================================  ================================
 
 The old functions remain importable from `repro.core` and are the engine
@@ -94,6 +100,7 @@ from repro.core.index import (FlatIndex, build_index, index_stats,
                               pad_leaves)
 from repro.core.search import (build_sharded_search, merge_delta_topk,
                                run_search, shard_index, squeeze_k)
+from repro.runtime.sharding import mesh_sig
 
 _BOUNDS = ("prefix", "symbox", "paabox")
 _BACKENDS = ("ref", "pallas")
@@ -150,16 +157,21 @@ class IndexConfig:
             raise ValueError("pq_budget must be >= 1 or None")
 
     def validate_series_len(self, L: int) -> None:
+        """Raise ValueError unless series length L divides into
+        `segments` equal PAA frames (the iSAX word requirement)."""
         if L % self.segments != 0:
             raise ValueError(
                 f"series length {L} is not divisible by segments="
                 f"{self.segments}; pick a divisor or pad the series")
 
     def to_dict(self) -> dict:
+        """Plain-dict form of every field (what checkpoints persist)."""
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: dict) -> "IndexConfig":
+        """Rebuild a config from `to_dict()` output; unknown keys in `d`
+        are ignored so old checkpoints load under newer configs."""
         known = {f.name for f in dataclasses.fields(cls)}
         return cls(**{k: v for k, v in d.items() if k in known})
 
@@ -187,11 +199,19 @@ class FreshIndex:
     @classmethod
     def build(cls, data, config: Optional[IndexConfig] = None,
               **overrides) -> "FreshIndex":
-        """Bulk-build an index over (n, L) series.
+        """Bulk-build an index over `data`, an (n, L) float array.
 
-        `overrides` are IndexConfig fields, so the two spellings
-        `build(x, IndexConfig(leaf_capacity=32))` and
-        `build(x, leaf_capacity=32)` are equivalent.
+        Args:
+            data: (n, L) series matrix; n == 0 is the legal bootstrap.
+            config: IndexConfig (None = defaults).
+            **overrides: IndexConfig fields, so the two spellings
+                `build(x, IndexConfig(leaf_capacity=32))` and
+                `build(x, leaf_capacity=32)` are equivalent.
+        Returns:
+            A new FreshIndex over a freshly built FlatIndex.
+        Raises:
+            ValueError: data is not 2-D, or L fails
+                `config.validate_series_len`.
 
         Dispatches to the fused single-program `build_index` jit — the
         fastest one-shot path.  The `IndexBuilder` phase pipeline
@@ -201,6 +221,9 @@ class FreshIndex:
         test_pipeline_matches_fused_build, so the two entry points are
         interchangeable; an empty (0, L) bootstrap build goes through
         the builder (the fused program needs at least one row).
+
+        Concurrency: pure construction — no shared state until the
+        returned index is handed to readers.
         """
         cfg = config or IndexConfig()
         if overrides:
@@ -230,8 +253,18 @@ class FreshIndex:
                 b.feed(chunk)
             index = b.finalize()
 
-        `builder_kwargs` pass through (workers, part_rows, injectors,
-        executor) — see `repro.core.builder.IndexBuilder`."""
+        Args:
+            config: IndexConfig for the built index (None = defaults).
+            **builder_kwargs: pass through (workers, part_rows,
+                injectors, executor) — see
+                `repro.core.builder.IndexBuilder`.
+        Returns:
+            A fresh single-use IndexBuilder.
+
+        Concurrency: the builder spawns its own lock-free Refresh
+        workers when `workers >= 2`; feed()/finalize() themselves are
+        single-caller (see IndexBuilder).
+        """
         return IndexBuilder(config, **builder_kwargs)
 
     # ------------------------------------------------------------------ #
@@ -244,17 +277,37 @@ class FreshIndex:
 
     @property
     def n_series(self) -> int:
+        """Total searchable series: compacted core + pending delta."""
         return self._n_base + self.n_pending
 
     @property
     def n_pending(self) -> int:
+        """Rows sitting in the uncompacted delta buffer."""
         return sum(b.shape[0] for b in self._delta)
 
     @property
     def series_len(self) -> int:
+        """Length L of every indexed series (and of valid queries)."""
         return self._idx.series.shape[1]
 
+    @property
+    def mesh(self):
+        """The jax Mesh this index is sharded over; None when unsharded."""
+        return self._mesh
+
+    @property
+    def mesh_axis(self) -> str:
+        """Mesh axis name the leaves are block-sharded over ('data' by
+        default; meaningful only while `mesh` is not None)."""
+        return self._mesh_axis
+
     def stats(self) -> dict:
+        """Host-side summary (leaf count/fill, pending rows, sharded?).
+
+        Concurrency: read-only; may observe a concurrent writer's
+        intermediate delta count — serialize externally if you need a
+        consistent cut (the serving engine does).
+        """
         st = index_stats(self._idx)
         st["n_pending"] = self.n_pending
         st["sharded"] = self._mesh is not None
@@ -273,14 +326,29 @@ class FreshIndex:
                pq_budget: Optional[int] = None,
                backend: Optional[str] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Exact k-NN.  Returns (dist, ids): shape (Q,) for k == 1,
-        (Q, k) ascending by distance otherwise.  Any pending delta buffer
-        is scanned exactly and merged into the result, so adds are visible
-        to queries immediately, before compact().  `max_rounds` caps the
-        refinement loop (approximate search; distances become upper
-        bounds).  round_leaves / pq_budget / the kernel backend default
-        from this index's IndexConfig (pass explicit values to override
-        per call)."""
+        """Exact k-NN over `queries` ((L,) or (Q, L) float array).
+
+        Returns:
+            (dist, ids): shape (Q,) for k == 1, (Q, k) ascending by
+            distance otherwise.  Any pending delta buffer is scanned
+            exactly and merged in, so adds are visible immediately,
+            before compact().
+        Raises:
+            ValueError: query length != series_len, k < 1, or k exceeds
+                n_series.
+
+        `max_rounds` caps the refinement loop (approximate search:
+        distances become upper bounds).  round_leaves / pq_budget / the
+        kernel backend default from this index's IndexConfig (pass
+        explicit values to override per call).  On a sharded index
+        `sync_every` sets the expeditive/standard all-reduce cadence and
+        `sync_every` participates in the per-mesh compiled-search cache
+        key (unsharded searches ignore it).
+
+        Concurrency: a reader.  Safe against other readers; racing a
+        writer (add/compact) has NO defined ordering on this facade —
+        use `engine()` for snapshot-consistent concurrent add/search.
+        """
         q = jnp.asarray(queries, jnp.float32)
         if q.ndim == 1:
             q = q[None]
@@ -294,8 +362,11 @@ class FreshIndex:
             raise ValueError(f"k={k} exceeds the {self.n_series} indexed "
                              f"series")
         if self._mesh is not None:
+            # the mesh placement is part of the key (not just cleared on
+            # shard()): a compiled shard_map search can never be replayed
+            # against arrays living on a different placement
             key = (k, round_leaves, sync_every, max_rounds, pq_budget,
-                   backend)
+                   backend, mesh_sig(self._mesh))
             fn = self._sharded_fns.get(key)
             if fn is None:
                 fn = build_sharded_search(
@@ -343,8 +414,21 @@ class FreshIndex:
                **overrides) -> "QueryEngine":
         """A serving-layer QueryEngine over this index: micro-batched
         `submit(q, k=...)` futures, AOT-compiled per-bucket search plans
-        (steady state never re-traces), and snapshot-consistent concurrent
-        add().  `overrides` are EngineConfig fields, mirroring build()."""
+        (steady state never re-traces), and snapshot-consistent
+        concurrent add().  Serves local AND sharded indexes — a sharded
+        index gets per-(bucket, k, mesh placement) plans, mesh-wide
+        epoch snapshots and elastic `recover()` (see docs/SERVING.md).
+
+        Args:
+            config: EngineConfig (None = defaults).
+            **overrides: EngineConfig fields, mirroring build().
+        Returns:
+            A started QueryEngine bound to this index.
+
+        Concurrency: the engine serializes all writers to this index
+        through its own locks; do not mutate the index out-of-band
+        while an engine serves it (or call `engine.refresh()` after).
+        """
         from repro.serve import EngineConfig, QueryEngine
         cfg = config or EngineConfig()
         if overrides:
@@ -355,9 +439,17 @@ class FreshIndex:
     # incremental updates (Jiffy-style batch delta)
     # ------------------------------------------------------------------ #
     def add(self, batch) -> "FreshIndex":
-        """Append a batch of series to the delta buffer.  O(1), no
-        rebuild; the batch is immediately visible to search() via an exact
-        delta scan.  Ids continue after the existing series."""
+        """Append `batch` ((L,) or (m, L)) to the delta buffer.  O(1),
+        no rebuild; the rows are immediately visible to search() via an
+        exact delta scan.  Ids continue after the existing series.
+
+        Raises:
+            ValueError: batch shape does not match (m, series_len).
+
+        Concurrency: a writer.  Not safe against concurrent readers or
+        writers on this facade — the engine's add() wraps it in the
+        writer lock and publishes an epoch instead.
+        """
         # np.array (not asarray): the delta buffer must own its rows — a
         # caller reusing its batch buffer between add()s would otherwise
         # silently rewrite pending series before search/compact reads them
@@ -384,25 +476,51 @@ class FreshIndex:
         float32 storage the result is bit-identical to a fresh build over
         the concatenated data; with half storage (bfloat16/float16) each
         series is rounded exactly once, at its first compact, so repeated
-        compacts are drift-free: compact∘compact == compact."""
+        compacts are drift-free: compact∘compact == compact.
+
+        Concurrency: a writer (prepare + commit back to back).  Not safe
+        against concurrent use of this facade; the engine splits the
+        pair so the heavy merge runs outside its reader lock.
+        """
         return self.commit_compact(self.prepare_compact())
 
     def prepare_compact(self):
         """Compute the compacted core WITHOUT mutating this index — the
         heavy merge can then run outside a serving lock (QueryEngine.add
         does this for auto-compaction).  Returns an opaque token for
-        commit_compact(), or None when there is no pending delta."""
+        commit_compact(), or None when there is no pending delta.
+
+        Concurrency: read-only preparation; the caller must prevent any
+        writer from changing the delta between prepare and commit (the
+        engine holds its writer lock across the pair).
+        """
         if not self._delta:
             return None
         delta = np.concatenate(self._delta, axis=0)
         merged = merge_sorted_delta(self._idx, delta, self.config)
+        if self._mesh is not None:
+            # pre-place the merged core over the current mesh HERE, in
+            # the heavy phase: commit_compact's re-shard then finds the
+            # arrays already carrying the target sharding and its
+            # device_puts are no-ops, keeping the commit cheap under a
+            # serving lock (readers never stall behind the placement)
+            n_dev = self._mesh.shape[self._mesh_axis]
+            merged = shard_index(pad_leaves(merged, n_dev), self._mesh,
+                                 axis=self._mesh_axis)
         return (merged, delta.shape[0], len(self._delta))
 
     def commit_compact(self, token) -> "FreshIndex":
-        """Install a prepare_compact() result (O(1) pointer swap plus a
-        possible re-shard).  The caller must guarantee no add() raced the
-        preparation — the engine serializes writers; a raced commit
-        raises instead of dropping the newer series."""
+        """Install a prepare_compact() result `token` (O(1) pointer swap
+        plus, for sharded indexes, the re-shard device_puts).
+
+        Raises:
+            RuntimeError: the delta changed since the token was prepared
+                (a raced add) — raised instead of dropping newer series.
+
+        Concurrency: a writer; the caller must serialize the
+        prepare/commit pair against every other writer (the engine's
+        writer lock does).
+        """
         if token is None:
             return self
         merged, n_rows, n_batches = token
@@ -425,9 +543,15 @@ class FreshIndex:
     # sharding
     # ------------------------------------------------------------------ #
     def shard(self, mesh, axis: str = "data") -> "FreshIndex":
-        """Block-shard the leaves (and their entries) over a mesh axis and
-        route subsequent search() calls through the sharded expeditive/
-        standard path."""
+        """Block-shard the leaves (and their entries) over the `axis`
+        axis of `mesh`, padding to a whole number of leaves per device,
+        and route subsequent search() calls through the sharded
+        expeditive/standard path.  Returns self.
+
+        Concurrency: a writer (replaces the placed arrays and drops the
+        compiled-search cache); serialize like add/compact.  A serving
+        engine re-places through recover(), never this method directly.
+        """
         n_dev = mesh.shape[axis]
         self._idx = shard_index(pad_leaves(self._idx, n_dev), mesh, axis=axis)
         self._mesh = mesh
@@ -439,8 +563,15 @@ class FreshIndex:
     # persistence
     # ------------------------------------------------------------------ #
     def save(self, directory: str, step: int = 0) -> str:
-        """Persist config + index arrays (+ any pending delta).  The saved
-        checkpoint restores with load() without a rebuild."""
+        """Persist config + index arrays (+ any pending delta) into
+        `directory` at checkpoint `step`.  Returns the checkpoint path;
+        restore with load() (new object) or reload() (in place), no
+        rebuild.
+
+        Concurrency: a reader of the index state; serialize against
+        writers for a consistent cut (the engine's writer lock, or
+        quiesce adds).
+        """
         L = self.series_len
         delta = (np.concatenate(self._delta, axis=0) if self._delta
                  else np.zeros((0, L), np.float32))
@@ -452,8 +583,16 @@ class FreshIndex:
 
     @classmethod
     def load(cls, directory: str, step: Optional[int] = None) -> "FreshIndex":
-        """Restore a save()d index: config + arrays, no rebuild.  The
-        restored index is unsharded; call shard(mesh) to re-place it."""
+        """Restore a save()d index from `directory` at `step` (None =
+        latest): config + arrays, no rebuild.  The restored index is
+        unsharded; call shard(mesh) to re-place it.
+
+        Raises:
+            ValueError: not a FreshIndex checkpoint, or the manifest's
+                series count disagrees with the arrays (corruption).
+
+        Concurrency: pure construction of a fresh object.
+        """
         arrays, manifest = load_arrays(directory, step=step)
         extra = manifest.get("extra", {})
         if extra.get("format") != "fresh-index-v1":
@@ -475,4 +614,44 @@ class FreshIndex:
         if delta is not None and delta.shape[0]:
             out._delta = [np.asarray(delta, np.float32)]
         return out
+
+    def reload(self, directory: str, step: Optional[int] = None
+               ) -> "FreshIndex":
+        """Swap THIS object's arrays for a save()d checkpoint, in place.
+
+        The elastic-recovery primitive: a serving engine holds one
+        `FreshIndex` for its whole lifetime, so recovering a lost shard
+        must restore arrays into the existing object rather than build a
+        new one (`QueryEngine.recover` routes here).  The restored state
+        is exactly `FreshIndex.load(directory, step)`: core arrays, any
+        checkpointed delta, unsharded — call `shard(mesh)` afterwards to
+        re-place it.
+
+        Args:
+            directory: checkpoint directory written by `save()`.
+            step: checkpoint step to restore (None = latest).
+        Returns:
+            self, restored and unsharded.
+        Raises:
+            ValueError: not a FreshIndex checkpoint, or its IndexConfig
+                disagrees with this index's (a checkpoint from a different
+                config would silently change search semantics mid-serve).
+
+        Concurrency: NOT safe against concurrent readers of this object;
+        callers must serialize it like any other writer (the engine takes
+        its writer lock and republishes an epoch around it).
+        """
+        loaded = FreshIndex.load(directory, step=step)
+        if loaded.config != self.config:
+            raise ValueError(
+                f"checkpoint config {loaded.config} does not match this "
+                f"index's {self.config}; refusing to reload across "
+                f"configs")
+        self._idx = loaded._idx
+        self._n_base = loaded._n_base
+        self._delta = loaded._delta
+        self._delta_cat = None
+        self._mesh = None
+        self._sharded_fns = {}
+        return self
 

@@ -40,10 +40,11 @@ from .index import (FlatIndex, build_index, build_index_host,  # noqa: F401
                     index_stats, leaf_stats_blocks, pad_leaves)
 from .refresh import (CounterObject, Injectors, RefreshExecutor,  # noqa: F401
                       RefreshRun, WorkerCrash)
-from .search import (build_sharded_search, make_sharded_search,  # noqa: F401
-                     merge_delta_topk, prepare_queries, run_search,
-                     search, search_bruteforce, search_plan,
-                     shard_index, snapshot_search)
+from .search import (build_sharded_plan, build_sharded_search,  # noqa: F401
+                     make_sharded_search, merge_delta_topk,
+                     prepare_queries, run_search, search,
+                     search_bruteforce, search_plan, shard_index,
+                     snapshot_search)
 from .traverse import (ArrayTraverse, Executor, SequentialExecutor,  # noqa: F401
                        StageStats, TraverseObject,
                        check_traversing_property, traverse_complete)

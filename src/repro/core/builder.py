@@ -261,12 +261,25 @@ class IndexBuilder:
     # ------------------------------------------------------------------ #
     @property
     def n_fed(self) -> int:
+        """Total rows fed so far (processed blocks + buffered tail)."""
         return self._n + self._tail_rows
 
     def feed(self, chunk) -> "IndexBuilder":
-        """Ingest (m, L) series.  Complete `part_rows`-sized blocks are
-        summarized/keyed/sorted EAGERLY (streaming build); the remainder
-        buffers until the next feed or finalize()."""
+        """Ingest `chunk`, an (m, L) or (L,) series array; returns self.
+        Complete `part_rows`-sized blocks are summarized/keyed/sorted
+        EAGERLY (streaming build); the remainder buffers until the next
+        feed or finalize().
+
+        Raises:
+            ValueError: chunk is not 1/2-D or its series length
+                disagrees with earlier feeds (or the config).
+            RuntimeError: called after finalize().
+
+        Concurrency: single feeder — call from one thread; the phase
+        work itself fans out to the lock-free Refresh workers, and the
+        caller's chunk buffer may be reused after feed() returns (the
+        builder copies what outlives the call).
+        """
         if self._finalized:
             raise RuntimeError("feed() after finalize()")
         c = np.asarray(chunk, np.float32)
@@ -300,11 +313,20 @@ class IndexBuilder:
         return self
 
     def finalize(self):
-        """Run the remaining phases and return a FreshIndex.
+        """Run the remaining phases and return the finished FreshIndex.
 
         Flushes the ragged tail block, merges the per-block sorted runs
         (log2 pairwise levels), computes per-leaf stats and materializes
-        the FlatIndex — every phase through the configured executor."""
+        the FlatIndex — every phase through the configured executor.
+
+        Raises:
+            RuntimeError: finalize() was already called (single-use).
+            ValueError: nothing was ever fed (series length unknown).
+
+        Concurrency: single caller; completes even if every Refresh
+        worker crashed — the calling thread helps unfinished parts
+        (traverse_complete), the paper's termination guarantee.
+        """
         if self._finalized:
             raise RuntimeError("finalize() already called")
         order, xn, paa, words, sqn, _ = self._sorted_run()
@@ -317,7 +339,11 @@ class IndexBuilder:
 
     def report(self) -> dict:
         """Per-phase build telemetry: parts, payload applications (>=
-        parts under helping), helped parts, crashes, wall time."""
+        parts under helping), helped parts, crashes, wall time.
+
+        Concurrency: read-only; between phases the counters are a
+        consistent cut, mid-phase reads may lag the workers.
+        """
         return {"n_rows": self.n_fed, "part_rows": self.part_rows,
                 "workers": self.workers,
                 "phases": {p: dict(s) for p, s in self._stats.items()}}

@@ -14,6 +14,12 @@ one code path —
   run_search         knob resolution (explicit arg > IndexConfig >
                      default) + the historical k == 1 squeeze; the
                      facade folds a pending delta in via merge_delta_topk
+  build_sharded_plan the pure sharded plan factory ((Q, k) outputs plus
+                     the replicated round count) — what the sharded
+                     serving path AOT-compiles per (bucket, k, mesh)
+  build_sharded_search
+                     jit + squeeze over build_sharded_plan — what the
+                     sharded FreshIndex.search dispatches through
   search / make_sharded_search
                      DEPRECATED free-function shims (DeprecationWarning
                      pointing at the repro.api migration table)
@@ -456,13 +462,15 @@ def shard_index(idx: FlatIndex, mesh: Mesh, axis: str = "data") -> FlatIndex:
     )
 
 
-def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
-                         round_leaves: Optional[int] = None,
-                         sync_every: int = 1,
-                         max_rounds: Optional[int] = None, znorm: bool = True,
-                         backend: Optional[str] = None,
-                         pq_budget: Optional[int] = None, config=None):
-    """Builds a jitted sharded k-NN search(idx, queries) for the given mesh.
+def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
+                       round_leaves: Optional[int] = None,
+                       sync_every: int = 1,
+                       max_rounds: Optional[int] = None, znorm: bool = True,
+                       backend: Optional[str] = None,
+                       pq_budget: Optional[int] = None, config=None):
+    """The PURE sharded search plan factory: `(idx, queries) -> (dist,
+    ids, rounds)` with (Q, k) outputs and no squeeze — the sharded
+    analogue of `search_plan_impl`.
 
     Each device: local lower bounds + local partial-selection PQ + local
     refinement rounds against a LOCAL top-k BSF buffer (expeditive); every
@@ -472,7 +480,15 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
     (its k candidates are all <= it and all belong to the union), so the
     pmin over devices is too.  The final (dist, id) top-k is resolved by
     all-gathering the n_dev local buffers and re-top-k'ing the union.
-    Returns (Q,) arrays for k == 1, (Q, k) ascending otherwise.
+    `rounds` is the (replicated) refinement-round count of the collective
+    while_loop — every device executes the same number of iterations
+    because the loop condition is itself an all-reduce.
+
+    The returned function is traceable but NOT jitted: `FreshIndex.search`
+    dispatches it through the jit in `build_sharded_search`, and the
+    serving layer (`serve.PlanCache`) AOT-compiles the very same function
+    per (batch-bucket, k, mesh layout) with `.lower().compile()`, so the
+    two paths execute identical programs.
 
     backend / round_leaves / pq_budget resolve from `config` (IndexConfig)
     when unset, like the local search().  backend='pallas' routes each
@@ -533,7 +549,7 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
         state = (jnp.int32(0), jnp.full((Qn, k), BIG),
                  jnp.zeros((Qn, k), jnp.int32), jnp.full((Qn,), BIG),
                  jnp.int32(0))
-        _, bsf_d, bsf_e, _, _ = jax.lax.while_loop(cond, body, state)
+        _, bsf_d, bsf_e, _, rounds = jax.lax.while_loop(cond, body, state)
 
         # recompute the local winners' distances in DIRECT form (matmul
         # form loses ~1e-3 absolute to f32 cancellation — see search())
@@ -550,25 +566,50 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
         neg, pos = jax.lax.top_k(-all_d, k)              # ascending
         dist = -neg
         bid = jnp.take_along_axis(all_i, pos, axis=1)
-        if k == 1:
-            return jnp.sqrt(dist[:, 0]), bid[:, 0]
-        return jnp.sqrt(dist), bid
+        # rounds is replicated: the while_loop condition is collective
+        # (pmax over devices), so every device ran the same iterations
+        return jnp.sqrt(dist), bid, rounds
 
     pleaf = P(axis, None)
-    out_spec = P(None) if k == 1 else P(None, None)
+    out2 = P(None, None)
 
-    @functools.partial(jax.jit)
-    def sharded_search(idx: FlatIndex, queries: jnp.ndarray):
+    def sharded_plan_impl(idx: FlatIndex, queries: jnp.ndarray):
         q, q_paa = prepare_queries(queries, znorm, index=idx)
         q_sq = jnp.sum(q * q, axis=-1)
         fn = shard_map(
             _local_search, mesh=mesh,
             in_specs=(pleaf, P(axis), P(axis), pleaf, pleaf,
                       P(None, None), P(None, None), P(None)),
-            out_specs=(out_spec, out_spec),
+            out_specs=(out2, out2, P()),
             check_rep=False)
         return fn(idx.series, idx.sq_norms, idx.perm, idx.leaf_lo,
                   idx.leaf_hi, q, q_paa, q_sq)
+
+    return sharded_plan_impl
+
+
+def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
+                         round_leaves: Optional[int] = None,
+                         sync_every: int = 1,
+                         max_rounds: Optional[int] = None, znorm: bool = True,
+                         backend: Optional[str] = None,
+                         pq_budget: Optional[int] = None, config=None):
+    """Builds a jitted sharded k-NN `search(idx, queries)` for the mesh.
+
+    The facade spelling over `build_sharded_plan`: the pure plan is traced
+    through one `jax.jit` and the historical k == 1 squeeze is applied
+    outside it, so results keep the `FreshIndex.search` shapes ((Q,) for
+    k == 1, (Q, k) ascending otherwise) while the compiled program is the
+    same one the serving layer AOT-compiles per batch bucket.
+    """
+    plan = jax.jit(build_sharded_plan(
+        mesh, axis=axis, k=k, round_leaves=round_leaves,
+        sync_every=sync_every, max_rounds=max_rounds, znorm=znorm,
+        backend=backend, pq_budget=pq_budget, config=config))
+
+    def sharded_search(idx: FlatIndex, queries: jnp.ndarray):
+        d, i, _ = plan(idx, queries)
+        return squeeze_k(d, i, k)
 
     return sharded_search
 

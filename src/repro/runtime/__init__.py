@@ -14,15 +14,16 @@ module paths:
 """
 
 from .elastic import (ElasticController, MeshSpec,  # noqa: F401
-                      StragglerMonitor, plan_mesh_for)
+                      StragglerMonitor, plan_mesh_for, plan_serving_mesh)
 from .journal import PartState, WorkJournal  # noqa: F401
 from .sharding import (ShardingPlan, active_plan, batch_axes_for,  # noqa: F401
-                       constrain, make_plan, seq_attn_specs,
+                       constrain, make_plan, mesh_sig, seq_attn_specs,
                        tree_param_shardings)
 
 __all__ = [
     "ElasticController", "MeshSpec", "StragglerMonitor", "plan_mesh_for",
+    "plan_serving_mesh",
     "PartState", "WorkJournal",
     "ShardingPlan", "active_plan", "batch_axes_for", "constrain",
-    "make_plan", "seq_attn_specs", "tree_param_shardings",
+    "make_plan", "mesh_sig", "seq_attn_specs", "tree_param_shardings",
 ]

@@ -47,6 +47,24 @@ def plan_mesh_for(n_pods: int, chips_per_pod: int = 256,
     return MeshSpec((n_pods, data, model_axis), ("pod", "data", "model"))
 
 
+def plan_serving_mesh(n_devices: Optional[int] = None,
+                      axis: str = "data") -> MeshSpec:
+    """Largest 1-D query mesh over the surviving devices.
+
+    The serving-plane analogue of `plan_mesh_for`: a sharded FreshIndex
+    places leaves over one mesh axis, so after a shard loss the recovery
+    mesh is simply every device still visible to the runtime, in one row.
+    `QueryEngine.recover()` uses this when no explicit mesh is passed —
+    re-sharding the (checkpoint-restored) index over whatever is left and
+    republishing a fresh epoch.  Raises RuntimeError when no device
+    survives (nothing can serve).
+    """
+    n = len(jax.devices()) if n_devices is None else int(n_devices)
+    if n < 1:
+        raise RuntimeError("no healthy devices left to serve from")
+    return MeshSpec((n,), (axis,))
+
+
 class ElasticController:
     """Decides when to re-mesh; owns the resume-from-checkpoint flow."""
 

@@ -276,6 +276,21 @@ def make_plan(cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
                         and "data" in axis_names)
 
 
+def mesh_sig(mesh: Mesh) -> Tuple:
+    """Hashable identity of a mesh PLACEMENT: axis names, axis sizes and
+    the flat device-id order.
+
+    Two meshes with equal signatures compile to interchangeable
+    executables; anything that caches per-mesh compiled programs (the
+    serving layer's `PlanCache`, `FreshIndex._sharded_fns`) keys on this
+    instead of the Mesh object so an elastic re-mesh onto different
+    devices — even of the same shape — can never alias a stale plan.
+    """
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
 def tree_param_shardings(plan: ShardingPlan, axes_tree):
     """Map a tree of logical-axes tuples to NamedShardings."""
     return jax.tree.map(

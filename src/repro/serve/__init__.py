@@ -22,10 +22,11 @@ the exact same `search_plan` / `snapshot_search` programs the
 
 from .batcher import Batch, MicroBatcher, Pending, bucket_for, shape_buckets
 from .engine import EngineConfig, QueryEngine, SearchFuture, Snapshot
-from .plan_cache import CompiledPlan, Knobs, PlanCache
+from .plan_cache import (CompiledPlan, Knobs, PlanCache,
+                         ShardedCompiledPlan)
 
 __all__ = [
     "Batch", "MicroBatcher", "Pending", "bucket_for", "shape_buckets",
     "EngineConfig", "QueryEngine", "SearchFuture", "Snapshot",
-    "CompiledPlan", "Knobs", "PlanCache",
+    "CompiledPlan", "Knobs", "PlanCache", "ShardedCompiledPlan",
 ]

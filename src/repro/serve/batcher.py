@@ -13,6 +13,13 @@ cleanly (an all-zeros pad row would hit the zero-variance path), the
 padded rows' results are simply never read back, and the wasted slots are
 accounted in `QueryEngine.stats()["batches"]["padded_slots"]` so the
 bucket-overhead / plan-count trade is measurable (EXPERIMENTS.md).
+
+Sharded serving changes NOTHING here: queries are replicated over the
+mesh (only leaves are sharded), so buckets are mesh-independent and one
+batch is one mesh-wide dispatch bound to one mesh-wide epoch snapshot.
+The epoch in the (epoch, k) group key is what keeps a batch from ever
+straddling two placements across an elastic recovery — pre-recovery
+pendings form their own batches and run on the old placement's plans.
 """
 
 from __future__ import annotations

@@ -27,6 +27,14 @@ module is that shape for the device-plane index:
   expeditive/standard helping transplanted to the serving plane.
 * stats() exposes queue depth, p50/p99 latency, rounds-per-query, epoch
   lag, plan-cache hit rates and padding overhead.
+* a SHARDED FreshIndex (`index.shard(mesh)`) is a first-class citizen:
+  plans AOT-compile per (bucket, k, mesh placement) from the same pure
+  `build_sharded_plan` the facade jits, `add()` publishes MESH-WIDE
+  epoch snapshots (per-shard cores + the replicated delta — one pointer
+  swap), `auto_compact_rows` republishes delta-free epochs through the
+  incremental merge + re-shard, and `recover()` survives permanent
+  shard loss by restoring `checkpoint/` arrays and re-meshing over the
+  surviving devices — all without dropping in-flight futures.
 
 Threading: `workers=0` (default) is synchronous — batches dispatch on
 flush() or inside result(); `workers=N` starts N daemon threads that
@@ -47,6 +55,8 @@ import numpy as np
 
 from repro.core.refresh import WorkerCrash
 from repro.runtime import WorkJournal
+from repro.runtime.elastic import plan_serving_mesh
+from repro.runtime.sharding import mesh_sig
 
 from .batcher import Batch, MicroBatcher, Pending, shape_buckets
 from .plan_cache import Knobs, PlanCache
@@ -82,6 +92,9 @@ class EngineConfig:
                     that consumes the stored core arrays as-is, published
                     as a delta-free epoch so steady-state plans return to
                     the core-only program.  None = only explicit compact()
+    sync_every      SHARDED serving only: refinement rounds between the
+                    all-reduce-min that publishes the global k-th bound
+                    (expeditive -> standard cadence); local plans ignore it
     round_leaves / pq_budget / max_rounds / backend
                     per-engine search-knob overrides; None defers to the
                     index's IndexConfig (max_rounds: exact search)
@@ -95,6 +108,7 @@ class EngineConfig:
     latency_window: int = 4096
     journal_path: Optional[str] = None
     auto_compact_rows: Optional[int] = None
+    sync_every: int = 1
     round_leaves: Optional[int] = None
     pq_budget: Optional[int] = None
     max_rounds: Optional[int] = None
@@ -105,6 +119,8 @@ class EngineConfig:
             raise ValueError("max_batch must be >= 1")
         if self.auto_compact_rows is not None and self.auto_compact_rows < 1:
             raise ValueError("auto_compact_rows must be >= 1 or None")
+        if self.sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
         if self.workers < 0:
             raise ValueError("workers must be >= 0")
         if self.linger_ms < 0 or self.help_after_ms < 0:
@@ -123,21 +139,38 @@ class Snapshot:
     The FlatIndex arrays and the materialized delta are device arrays that
     are never mutated in place — add() publishes a NEW snapshot and
     compact() swaps in a NEW core, so a batch holding this object answers
-    exactly on the data visible at its submit epoch, forever."""
+    exactly on the data visible at its submit epoch, forever.
+
+    For a sharded index the epoch is MESH-WIDE: `core` is the
+    leaf-sharded FlatIndex (each device holds its block of leaves) and
+    `delta` is the replicated pending batch every device scans exactly,
+    so one Snapshot object is the vector of per-shard cores plus the
+    delta — publishing it is still a single pointer swap under the
+    engine's condition variable, and an in-flight batch keeps the whole
+    mesh-wide view (old placement included) alive until it completes."""
     epoch: int
     core: object                       # FlatIndex
     delta: Optional[jnp.ndarray]       # (m, L) or None
     n_base: int
     n_total: int
     series_len: int
+    mesh: object = None                # jax Mesh when sharded
+    mesh_axis: str = "data"
 
     @property
     def plan_sig(self) -> tuple:
-        """Everything static about a compiled plan for this snapshot."""
+        """Everything static about a compiled plan for this snapshot —
+        including, when sharded, the mesh placement (axis names/sizes and
+        device order via `runtime.sharding.mesh_sig`), so an elastic
+        re-mesh compiles fresh executables instead of aliasing plans
+        built for the lost placement."""
         s = self.core.series
-        return (tuple(s.shape), str(s.dtype), int(self.core.n_leaves),
-                self.n_base,
-                None if self.delta is None else int(self.delta.shape[0]))
+        sig = (tuple(s.shape), str(s.dtype), int(self.core.n_leaves),
+               self.n_base,
+               None if self.delta is None else int(self.delta.shape[0]))
+        if self.mesh is not None:
+            sig += (self.mesh_axis,) + mesh_sig(self.mesh)
+        return sig
 
 
 class SearchFuture:
@@ -176,6 +209,7 @@ class SearchFuture:
         return False
 
     def done(self) -> bool:
+        """True once every row of this future has been delivered."""
         return self._event.is_set()
 
     def result(self, timeout: Optional[float] = None
@@ -208,11 +242,6 @@ class QueryEngine:
 
     def __init__(self, index, config: Optional[EngineConfig] = None):
         cfg = config or EngineConfig()
-        if getattr(index, "_mesh", None) is not None:
-            raise ValueError(
-                "QueryEngine serves single-host indexes; a sharded "
-                "FreshIndex already owns per-mesh compiled searches — "
-                "call index.search directly")
         self._index = index
         self.config = cfg
         icfg = index.config
@@ -223,7 +252,8 @@ class QueryEngine:
             max_rounds=cfg.max_rounds,
             backend=cfg.backend if cfg.backend is not None else icfg.backend,
             pq_budget=(cfg.pq_budget if cfg.pq_budget is not None
-                       else icfg.pq_budget))
+                       else icfg.pq_budget),
+            sync_every=cfg.sync_every)
         self.plans = PlanCache(donate=cfg.donate)
         self._batcher = MicroBatcher(cfg.max_batch)
         self._cv = threading.Condition(threading.RLock())
@@ -245,6 +275,7 @@ class QueryEngine:
         self._dispatched = 0
         self._padded_slots = 0
         self._compactions = 0
+        self._recoveries = 0
         self._first_submit: Optional[float] = None
         self._crashed_workers = 0
         self._crash_hook = None             # test injection: fn(wid, batch)
@@ -262,7 +293,8 @@ class QueryEngine:
         ix = self._index
         return Snapshot(epoch=epoch, core=ix.index, delta=ix.delta_cat,
                         n_base=ix._n_base, n_total=ix.n_series,
-                        series_len=ix.series_len)
+                        series_len=ix.series_len,
+                        mesh=ix.mesh, mesh_axis=ix.mesh_axis)
 
     def _publish(self) -> None:
         with self._cv:
@@ -272,18 +304,28 @@ class QueryEngine:
 
     @property
     def epoch(self) -> int:
+        """The currently published epoch number (0 at construction)."""
         return self._epoch
 
     def add(self, batch) -> "QueryEngine":
-        """Append series and publish a new epoch snapshot.  In-flight
-        queries keep answering on their submit-time snapshot; queries
-        submitted after this call see the new series.  When
-        `auto_compact_rows` is set and the pending delta reaches it, the
-        delta is folded into the core first (incremental sorted-run
-        merge) and the published epoch is delta-free.  The merge itself
-        runs OUTSIDE the engine condition variable (writers serialize on
-        a separate lock), so concurrent submit()/result() never stall
-        behind a compaction."""
+        """Append `batch` ((L,) or (m, L) series) and publish a new
+        epoch snapshot.  In-flight queries keep answering on their
+        submit-time snapshot; queries submitted after this call see the
+        new series.  On a sharded index the published epoch is
+        MESH-WIDE: per-shard cores plus the replicated delta, still one
+        pointer swap.  When `auto_compact_rows` is set and the pending
+        delta reaches it, the delta is folded into the core first
+        (incremental sorted-run merge) and the published epoch is
+        delta-free.  Returns self.
+
+        Raises:
+            ValueError: batch shape mismatch (FreshIndex.add).
+
+        Concurrency: a writer — serializes with compact/refresh/recover
+        on the writer lock; never blocks readers (the heavy merge runs
+        OUTSIDE the engine condition variable, so concurrent
+        submit()/result() never stall behind a compaction).
+        """
         cap = self.config.auto_compact_rows
         with self._wlock:
             with self._cv:
@@ -298,16 +340,23 @@ class QueryEngine:
         """Merge the delta into the core (incremental sorted-run merge —
         the stored core arrays are consumed as-is) and publish.
         Compacted epochs compile delta-free plans — steady-state cost
-        returns to the core-only program."""
+        returns to the core-only program.  Returns self.
+
+        Concurrency: a writer on the writer lock; readers keep draining
+        old epochs while the merge runs outside the condition variable.
+        """
         with self._wlock:
             self._compact_locked()
         return self
 
     def _compact_locked(self) -> None:
-        """Heavy merge outside _cv, O(1) commit + publish under it.
-        Caller holds _wlock (no writer can race prepare -> commit).  The
-        commit really is O(1) here: __init__ rejects sharded indexes, so
-        commit_compact's re-shard branch cannot trigger under _cv."""
+        """Heavy merge outside _cv, cheap commit + publish under it.
+        Caller holds _wlock (no writer can race prepare -> commit).
+        prepare_compact does ALL the heavy work — the merge and, for a
+        sharded index, the placement of the merged core over the mesh —
+        so commit_compact under _cv is a pointer swap plus no-op
+        device_puts (the arrays already carry the target sharding) and
+        concurrent submit()/result() never stall behind a compaction."""
         token = self._index.prepare_compact()
         with self._cv:
             self._index.commit_compact(token)
@@ -318,19 +367,90 @@ class QueryEngine:
     def refresh(self) -> "QueryEngine":
         """Publish a snapshot of out-of-band index mutations (direct
         index.add()/compact() calls made without going through the
-        engine).  Takes the writer lock like every other writer entry
-        point, so a refresh cannot interleave with an in-flight
-        prepare/commit compaction."""
+        engine).  Returns self.
+
+        Concurrency: a writer — takes the writer lock like every other
+        writer entry point, so a refresh cannot interleave with an
+        in-flight prepare/commit compaction.
+        """
         with self._wlock:
             self._publish()
+        return self
+
+    def recover(self, checkpoint: Optional[str] = None, *,
+                step: Optional[int] = None, mesh=None,
+                axis: Optional[str] = None) -> "QueryEngine":
+        """Elastic shard recovery: re-place the index and publish.
+
+        The two failure layers this closes (runtime/elastic.py wired into
+        the serving plane):
+
+        * TRANSIENT loss — a dispatch worker dies mid-batch.  Nothing to
+          call: the orphaned batch is a WorkJournal part and any survivor
+          (another worker, flush(), a blocked result() caller) re-executes
+          it.  recover() is NOT needed for that path.
+        * PERMANENT loss — a shard's device is gone for good.  recover()
+          rebuilds the serving state: with `checkpoint` it first restores
+          the latest durable arrays via `FreshIndex.reload` (the
+          checkpoint/ directory written by `index.save()`), then
+          re-shards over `mesh` — for an already-sharded index `mesh`
+          defaults to the largest 1-D mesh over the devices still
+          visible (`runtime.elastic.plan_serving_mesh`) — and publishes
+          the new epoch.  An engine over an UNSHARDED index stays
+          local unless a mesh is passed explicitly: with `mesh=None`,
+          recover(checkpoint) is a pure serving-state restore.
+
+        In-flight futures are never dropped: batches formed before the
+        recovery keep their submit-time Snapshot (whose arrays hold the
+        OLD placement) and complete on it; only post-recovery submits
+        bind to the recovered epoch, which AOT-compiles fresh plans
+        because the mesh placement is part of the plan signature.
+
+        Args:
+            checkpoint: `index.save()` directory to restore arrays from
+                (None = keep the current in-memory arrays).
+            step: checkpoint step (None = latest).
+            mesh: target jax Mesh (None = all visible devices, 1-D).
+            axis: mesh axis name (None = the index's current axis).
+        Returns:
+            self.
+        Raises:
+            ValueError: checkpoint config mismatch (FreshIndex.reload).
+            RuntimeError: no devices left to build a recovery mesh from.
+
+        Concurrency: a writer — serializes on the engine writer lock with
+        add/compact/refresh; readers keep draining old epochs throughout.
+        """
+        with self._wlock:
+            ix = self._index
+            axis = axis if axis is not None else ix.mesh_axis
+            was_sharded = ix.mesh is not None
+            if checkpoint is not None:
+                ix.reload(checkpoint, step=step)
+            if mesh is None and was_sharded:
+                mesh = plan_serving_mesh(axis=axis).make()
+            if mesh is not None:
+                ix.shard(mesh, axis=axis)
+            with self._cv:
+                self._recoveries += 1
+                self._publish()
         return self
 
     # ------------------------------------------------------------------ #
     # query path
     # ------------------------------------------------------------------ #
     def submit(self, queries, k: int = 1) -> SearchFuture:
-        """Enqueue one query (L,) or a small batch (m, L); returns a
-        future.  Validation mirrors FreshIndex.search."""
+        """Enqueue `queries` — one (L,) query or an (m, L) batch — for
+        top-`k` search on the CURRENT epoch; returns a SearchFuture.
+
+        Raises:
+            ValueError: shape mismatch, empty batch, k < 1 or k beyond
+                the snapshot's series count (mirrors FreshIndex.search).
+            RuntimeError: the engine is closed.
+
+        Concurrency: a reader; lock-held work is O(1) bookkeeping, so
+        submits never wait on compactions or plan compiles.
+        """
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
             q = q[None]
@@ -359,7 +479,12 @@ class QueryEngine:
     def flush(self) -> "QueryEngine":
         """Dispatch everything now: form pending into batches, then run
         every unfinished journal part — including orphaned batches whose
-        worker died (helping)."""
+        worker died (helping).  Returns self once the queue is drained.
+
+        Concurrency: safe from any thread; executes plans on the calling
+        thread and races benignly with live workers (a lost race is
+        detected via the journal's done flags).
+        """
         self._form_and_register()
         while True:
             pid = self._next_part(worker=HELPER_ID, force_help=True)
@@ -369,8 +494,15 @@ class QueryEngine:
 
     def warmup(self, ks: Optional[Sequence[int]] = None,
                buckets: Optional[Sequence[int]] = None) -> "QueryEngine":
-        """Precompile plans for the current snapshot so first requests pay
-        zero trace/compile.  Defaults: config.warm_ks x all buckets."""
+        """Precompile plans for the current snapshot so first requests
+        pay zero trace/compile.  `ks` defaults to config.warm_ks,
+        `buckets` to every micro-batcher bucket; k values beyond the
+        indexed series count are skipped.  Returns self.
+
+        Concurrency: compiles outside the engine locks; safe to run
+        while traffic flows (concurrent submits may pay the compile
+        inline for a bucket warmed a moment later).
+        """
         ks = tuple(ks) if ks is not None else self.config.warm_ks
         buckets = (tuple(buckets) if buckets is not None
                    else self._batcher.buckets)
@@ -467,6 +599,11 @@ class QueryEngine:
             del self._snapshots[e]
 
     def has_live_workers(self) -> bool:
+        """True while at least one dispatch worker thread is alive.
+
+        Concurrency: lock-free racy read — a worker may die right after;
+        callers (result's helping loop) tolerate staleness either way.
+        """
         return any(t.is_alive() for t in self._workers)
 
     def _make_progress(self) -> None:
@@ -515,7 +652,12 @@ class QueryEngine:
     # lifecycle / stats
     # ------------------------------------------------------------------ #
     def close(self, drain: bool = True) -> None:
-        """Stop the engine; `drain` first completes everything queued."""
+        """Stop the engine; `drain` first completes everything queued.
+
+        Concurrency: idempotent; joins worker threads (10 s cap each).
+        Submits racing close() either land before the closed flag or
+        raise RuntimeError — no future is silently dropped.
+        """
         if drain and not self._closed:
             self.flush()
         with self._cv:
@@ -532,7 +674,13 @@ class QueryEngine:
 
     def stats(self) -> dict:
         """Serving telemetry: queue depth, latency percentiles (ms),
-        rounds-per-query, epoch lag, plan-cache and batching counters."""
+        rounds-per-query, epoch lag, mesh placement, recoveries,
+        plan-cache and batching counters — see docs/SERVING.md for how
+        to read each field.
+
+        Concurrency: takes the condition variable briefly for one
+        consistent cut; safe from any thread at any rate.
+        """
         with self._cv:
             lat = sorted(self._latencies)
             inflight = len(self._batches)
@@ -542,10 +690,15 @@ class QueryEngine:
             elapsed = (time.monotonic() - self._first_submit
                        if self._first_submit is not None else 0.0)
             js = self._journal.stats()
+            mesh = self._snapshots[self._epoch].mesh
             return {
                 "epoch": self._epoch,
                 "epoch_lag": self._epoch - oldest,
                 "compactions": self._compactions,
+                "recoveries": self._recoveries,
+                "mesh": (None if mesh is None else
+                         {"axes": dict(mesh.shape),
+                          "devices": int(mesh.devices.size)}),
                 "queue_depth": len(self._pending),
                 "queued_rows": sum(p.queries.shape[0]
                                    for p in self._pending),

@@ -18,6 +18,15 @@ epoch's shape — and an add-then-compact cycle that returns to a previous
 shape reuses the old executable with the new arrays, because the arrays
 are runtime arguments.
 
+Sharded snapshots (the index lives on a mesh) compile through
+`build_sharded_plan` instead: one shard_map executable per (bucket, k,
+knobs, mesh placement) — the mesh's `runtime.sharding.mesh_sig` is part
+of the snapshot signature, so an elastic re-mesh can never alias a stale
+plan — plus, for delta-carrying epochs, one compiled `merge_delta_topk`
+that folds the exact delta scan into the core answer.  That two-program
+split is exactly what the sharded `FreshIndex.search` executes, which is
+what keeps sharded serving bit-identical to the facade.
+
 Donation: with `donate=True` the padded query batch is donated to XLA so
 the hot path reuses its buffer for outputs (the batcher builds a fresh
 device array per dispatch anyway).  Default is auto: on for tpu/gpu, off
@@ -36,8 +45,10 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.search import (search_plan, search_plan_impl,
+from repro.core.search import (build_sharded_plan, merge_delta_topk,
+                               search_plan, search_plan_impl,
                                snapshot_search, snapshot_search_impl)
+from repro.runtime.sharding import mesh_sig
 
 _PLAN_STATICS = ("k", "round_leaves", "znorm", "max_rounds", "backend",
                  "pq_budget")
@@ -47,12 +58,15 @@ _SNAP_STATICS = _PLAN_STATICS + ("n_base",)
 @dataclasses.dataclass(frozen=True)
 class Knobs:
     """The fully-resolved search knobs one engine serves with (resolved
-    once at engine construction from EngineConfig -> IndexConfig)."""
+    once at engine construction from EngineConfig -> IndexConfig).
+    `sync_every` only affects sharded plans (the expeditive/standard
+    all-reduce cadence); local plans ignore it."""
     round_leaves: int = 8
     znorm: bool = True
     max_rounds: Optional[int] = None
     backend: str = "ref"
     pq_budget: Optional[int] = None
+    sync_every: int = 1
 
 
 class CompiledPlan:
@@ -75,6 +89,35 @@ class CompiledPlan:
         return self._exe(snapshot.core, queries)
 
 
+class ShardedCompiledPlan:
+    """One AOT-compiled MESH executable pair for a sharded snapshot.
+
+    `core` is the compiled `build_sharded_plan` program (shard_map over
+    the mesh; returns (Q, k) dist/ids plus the replicated round count);
+    `merge` (present only for delta-carrying epochs) is the compiled
+    `merge_delta_topk` that folds the exact scan of the snapshot's delta
+    into the core answer — the SAME two-program split the sharded facade
+    path executes, so `submit().result()` stays bit-identical to
+    `FreshIndex.search` on the sharded index."""
+
+    __slots__ = ("_core", "_merge", "has_delta", "bucket_q", "k", "calls")
+
+    def __init__(self, core, merge, bucket_q: int, k: int):
+        self._core = core
+        self._merge = merge
+        self.has_delta = merge is not None
+        self.bucket_q = bucket_q
+        self.k = k
+        self.calls = 0
+
+    def run(self, snapshot, queries: jnp.ndarray):
+        self.calls += 1
+        d, i, rounds = self._core(snapshot.core, queries)
+        if self._merge is not None:
+            d, i = self._merge(snapshot.delta, queries, d, i)
+        return d, i, rounds
+
+
 class PlanCache:
     """(bucket_Q, k, knobs, snapshot_sig) -> CompiledPlan, with counters."""
 
@@ -86,6 +129,7 @@ class PlanCache:
         self.misses = 0
         self._plans: Dict[Tuple, CompiledPlan] = {}
         self._donating_jits: Dict[bool, object] = {}
+        self._sharded_jits: Dict[Tuple, object] = {}
         self._lock = threading.Lock()
 
     # ------------------------------------------------------------------ #
@@ -125,10 +169,54 @@ class PlanCache:
             self.misses += 1
             return self._plans.setdefault(key, plan)
 
+    def _sharded_jit(self, snapshot, k: int, knobs: Knobs):
+        """The jitted sharded plan for this (mesh placement, k, knobs).
+
+        One jit object per key so every bucket of the same mesh lowers
+        from the same traced function; the per-bucket executables are
+        cached in `_plans` like local ones.  Sharded plans never donate —
+        the query buffer is replicated over the mesh and a journal helper
+        must be able to re-execute a batch from its host copy."""
+        key = (mesh_sig(snapshot.mesh), snapshot.mesh_axis, k, knobs)
+        with self._lock:
+            # under the cache lock (jit-object creation is cheap — no
+            # trace happens until .lower) so racing bucket compiles for
+            # the same key share one traced function and the
+            # sharded_traces counter stays truthful
+            fn = self._sharded_jits.get(key)
+            if fn is None:
+                fn = jax.jit(build_sharded_plan(
+                    snapshot.mesh, axis=snapshot.mesh_axis, k=k,
+                    round_leaves=knobs.round_leaves,
+                    sync_every=knobs.sync_every,
+                    max_rounds=knobs.max_rounds,
+                    znorm=knobs.znorm, backend=knobs.backend,
+                    pq_budget=knobs.pq_budget))
+                self._sharded_jits[key] = fn
+            return fn
+
     def _compile(self, snapshot, bucket_q: int, k: int,
                  knobs: Knobs) -> CompiledPlan:
         qs = jax.ShapeDtypeStruct((bucket_q, snapshot.series_len),
                                   jnp.float32)
+        if snapshot.mesh is not None:
+            core_exe = self._sharded_jit(snapshot, k, knobs).lower(
+                snapshot.core, qs).compile()
+            merge_exe = None
+            if snapshot.delta is not None:
+                # the core plan's (d, i) come out mesh-replicated; the
+                # merge must be lowered for exactly that placement or the
+                # AOT call rejects them (no auto-reshard on compiled exes)
+                from jax.sharding import NamedSharding, PartitionSpec
+                rep = NamedSharding(snapshot.mesh, PartitionSpec())
+                ds = jax.ShapeDtypeStruct((bucket_q, k), jnp.float32,
+                                          sharding=rep)
+                is_ = jax.ShapeDtypeStruct((bucket_q, k), jnp.int32,
+                                           sharding=rep)
+                merge_exe = merge_delta_topk.lower(
+                    snapshot.delta, qs, ds, is_, k=k,
+                    n_base=snapshot.n_base, znorm=knobs.znorm).compile()
+            return ShardedCompiledPlan(core_exe, merge_exe, bucket_q, k)
         kw = dict(k=k, round_leaves=knobs.round_leaves, znorm=knobs.znorm,
                   max_rounds=knobs.max_rounds, backend=knobs.backend,
                   pq_budget=knobs.pq_budget)
@@ -143,6 +231,11 @@ class PlanCache:
 
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:
+        """Counters proving (or disproving) steady-state zero-retrace:
+        `misses` must freeze after warmup; `size` counts executables
+        (sharded plan pairs count once); `sharded_traces` counts distinct
+        (mesh, k, knobs) tracings behind those executables."""
         with self._lock:
             return {"hits": self.hits, "misses": self.misses,
-                    "size": len(self._plans), "donate": self.donate}
+                    "size": len(self._plans), "donate": self.donate,
+                    "sharded_traces": len(self._sharded_jits)}

@@ -80,6 +80,148 @@ def test_sharded_pallas_backend_matches_oracle():
     """)
 
 
+def test_sharded_engine_bit_identical_zero_retrace():
+    """Tentpole acceptance: sharded `submit().result()` is bit-identical
+    to `FreshIndex.search` on the sharded index for k in {1, 5, 10} on
+    BOTH kernel backends, with plan-cache counters proving zero
+    re-traces after warmup, on a 2-device host mesh."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import FreshIndex, IndexConfig
+    from repro.serve import EngineConfig
+    from repro.data.synthetic import random_walk, query_workload
+    mesh = jax.make_mesh((2,), ("data",))
+    for backend, n, L in (("ref", 512, 128), ("pallas", 256, 64)):
+        walks = random_walk(n, L, seed=11)
+        qs = query_workload(walks, 8, noise_sigma=0.05, seed=12)
+        ix = FreshIndex.build(walks, IndexConfig(
+            leaf_capacity=32, backend=backend)).shard(mesh)
+        with ix.engine(EngineConfig(max_batch=4, sync_every=2)) as eng:
+            eng.warmup(ks=(1, 5, 10), buckets=(4,))
+            warm = eng.stats()["plan_cache"]["misses"]
+            for k in (1, 5, 10):
+                for _ in range(2):
+                    d, i = eng.submit(qs[:4], k=k).result(timeout=600)
+                    df, if_ = ix.search(jnp.asarray(qs[:4]), k=k,
+                                        sync_every=2)
+                    np.testing.assert_array_equal(np.asarray(i),
+                                                  np.asarray(if_))
+                    np.testing.assert_array_equal(np.asarray(d),
+                                                  np.asarray(df))
+            st = eng.stats()["plan_cache"]
+            assert st["misses"] == warm, (backend, st, warm)
+            assert st["hits"] > 0
+    print("sharded engine bit-identity + zero retrace OK")
+    """, devices=2)
+
+
+def test_sharded_engine_epochs_and_auto_compact():
+    """Mesh-wide epoch snapshots under concurrent add(): the in-flight
+    batch answers on its pre-add snapshot, the later submit sees the new
+    series exactly (replicated-delta merge plan), and auto_compact_rows
+    folds the delta through merge_sorted_delta + re-shard, republishing
+    a delta-free epoch."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.api import FreshIndex, IndexConfig
+    from repro.core import search_bruteforce
+    from repro.serve import EngineConfig
+    from repro.data.synthetic import random_walk, query_workload
+    walks = random_walk(512, 128, seed=13)
+    qs = query_workload(walks, 8, noise_sigma=0.05, seed=14)
+    extra = random_walk(32, 128, seed=15)
+    mesh = jax.make_mesh((2,), ("data",))
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=32)).shard(mesh)
+    with ix.engine(EngineConfig(max_batch=8)) as eng:
+        f_pre = eng.submit(qs[:4], k=5)          # in flight at epoch 0
+        eng.add(extra)                           # publish epoch 1
+        f_post = eng.submit(qs[:4], k=5)
+        eng.flush()
+        d_pre, i_pre = f_pre.result(timeout=600)
+        d_post, i_post = f_post.result(timeout=600)
+        db, ib = search_bruteforce(jnp.asarray(walks),
+                                   jnp.asarray(qs[:4]), k=5)
+        np.testing.assert_array_equal(i_pre, np.asarray(ib))
+        both = np.concatenate([walks, extra])
+        db2, ib2 = search_bruteforce(jnp.asarray(both),
+                                     jnp.asarray(qs[:4]), k=5)
+        np.testing.assert_array_equal(i_post, np.asarray(ib2))
+        # the delta-carrying sharded engine path == the facade path
+        df, if_ = ix.search(jnp.asarray(qs[:4]), k=5)
+        np.testing.assert_array_equal(i_post, np.asarray(if_))
+        np.testing.assert_array_equal(d_post, np.asarray(df))
+    ix2 = FreshIndex.build(walks, IndexConfig(leaf_capacity=32)).shard(mesh)
+    with ix2.engine(EngineConfig(max_batch=8,
+                                 auto_compact_rows=16)) as eng:
+        eng.add(extra)                           # 32 >= 16: auto-compact
+        assert ix2.n_pending == 0 and ix2.mesh is not None
+        assert eng.stats()["compactions"] == 1
+        d, i = eng.submit(qs[:4], k=10).result(timeout=600)
+        both = np.concatenate([walks, extra])
+        db3, ib3 = search_bruteforce(jnp.asarray(both),
+                                     jnp.asarray(qs[:4]), k=10)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(ib3))
+    print("sharded epochs + auto-compact OK")
+    """, devices=2)
+
+
+def test_sharded_engine_crash_helping_and_elastic_recovery():
+    """A shard batch whose worker crashes mid-dispatch is re-executed
+    through the WorkJournal helping path (the future still fills,
+    bit-identical); a PERMANENT loss is survived by recover(): restore
+    the latest checkpoint arrays, re-shard over the surviving 1-device
+    mesh, republish — without dropping the in-flight future."""
+    _run("""
+    import jax, jax.numpy as jnp, numpy as np, tempfile, threading
+    from repro.api import FreshIndex, IndexConfig
+    from repro.core import search_bruteforce
+    from repro.core.refresh import WorkerCrash
+    from repro.serve import EngineConfig
+    from repro.data.synthetic import random_walk, query_workload
+    walks = random_walk(512, 128, seed=21)
+    qs = query_workload(walks, 8, noise_sigma=0.05, seed=22)
+    mesh = jax.make_mesh((2,), ("data",))
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=32)).shard(mesh)
+    eng = ix.engine(EngineConfig(max_batch=8, workers=1, linger_ms=1.0,
+                                 help_after_ms=20.0))
+    try:
+        crashed = threading.Event()
+        def hook(wid, batch):
+            if wid >= 0 and not crashed.is_set():
+                crashed.set()
+                raise WorkerCrash()
+        eng._crash_hook = hook
+        fut = eng.submit(qs[:3], k=3)
+        assert crashed.wait(60), "worker never acquired the batch"
+        d, i = fut.result(timeout=600)       # caller helps via the journal
+        df, if_ = ix.search(jnp.asarray(qs[:3]), k=3)
+        np.testing.assert_array_equal(np.asarray(i), np.asarray(if_))
+        np.testing.assert_array_equal(np.asarray(d), np.asarray(df))
+        st = eng.stats()
+        assert st["workers"]["crashed"] == 1
+        assert st["batches"]["helped"] >= 1
+
+        ckpt = tempfile.mkdtemp()
+        ix.save(ckpt)
+        f_old = eng.submit(qs[:4], k=5)      # pending at the old epoch
+        m1 = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("data",))
+        eng.recover(ckpt, mesh=m1)           # permanent loss of device 1
+        f_new = eng.submit(qs[:4], k=5)
+        d_o, i_o = f_old.result(timeout=600)
+        d_n, i_n = f_new.result(timeout=600)
+        db, ib = search_bruteforce(jnp.asarray(walks),
+                                   jnp.asarray(qs[:4]), k=5)
+        np.testing.assert_array_equal(np.asarray(i_o), np.asarray(ib))
+        np.testing.assert_array_equal(np.asarray(i_n), np.asarray(ib))
+        st = eng.stats()
+        assert st["recoveries"] == 1
+        assert st["mesh"] == {"axes": {"data": 1}, "devices": 1}
+    finally:
+        eng.close()
+    print("sharded crash helping + elastic recovery OK")
+    """, devices=2)
+
+
 def test_sharded_search_matches_single_device():
     _run("""
     import jax, jax.numpy as jnp, numpy as np
