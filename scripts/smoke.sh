@@ -59,6 +59,14 @@ if [ "$SHARDED_ONLY" = 1 ]; then
     exit 0
 fi
 
+# Concurrency gates (docs/ANALYSIS.md): the AST lint must be clean
+# modulo the justified .lint-allow entries, and a quick-budget schedule
+# exploration must hold every invariant (exactly-once, bit-identity,
+# snapshot immutability, lock-freedom under permanent stalls).  The
+# full >=10k-interleaving run is `python -m repro.analysis.checker`.
+python -m repro.analysis.lint src/
+python -m repro.analysis.checker --budget 400
+
 python examples/quickstart.py
 python examples/serve_engine.py
 run_sharded_example

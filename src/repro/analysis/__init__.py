@@ -1,0 +1,24 @@
+"""Concurrency correctness tooling for the lock-free core.
+
+Two prongs (docs/ANALYSIS.md):
+
+  * a schedule-exploring race checker (`schedules` + `checker`): a
+    loom-style controlled scheduler drives the REAL RefreshRun /
+    WorkJournal / QueryEngine code through adversarial interleavings via
+    the `hooks.sync_point` seam, checking machine-verified invariants
+    (exactly-once logical execution, bit-identical future fills,
+    published-snapshot immutability, lock-free progress under permanent
+    stalls) after every schedule;
+  * an AST concurrency lint (`lint`, `python -m repro.analysis.lint
+    src/`): rules for this repo's idioms — bare Lock.acquire, blocking
+    work under QueryEngine._cv/_wlock, published-Snapshot mutation,
+    Python side effects inside jitted/plan-factory functions, and a
+    dead-module detector.
+
+This package root stays import-light (no jax): `hooks` is imported by
+`core.refresh`, `runtime.journal` and `serve.engine` on their hot paths.
+"""
+
+from .hooks import SyncHook, observe, set_sync_hook, sync_point  # noqa: F401
+
+__all__ = ["SyncHook", "observe", "set_sync_hook", "sync_point"]

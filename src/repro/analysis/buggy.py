@@ -1,0 +1,85 @@
+"""Deliberately-broken engine variants used to validate the checker.
+
+These are the meta-test fixtures: each class reintroduces one concrete
+concurrency bug that the correct QueryEngine prevents, and the schedule
+explorer (analysis/checker) must CATCH it within a bounded schedule
+budget — proving the invariant machinery has teeth, not just that the
+shipped code happens to pass.
+
+Never import these outside tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.analysis.hooks import sync_point
+from repro.serve.engine import QueryEngine
+
+import jax.numpy as jnp
+import time
+
+__all__ = ["DoubleExecuteEngine", "MutableSnapshotEngine"]
+
+
+class DoubleExecuteEngine(QueryEngine):
+    """Drops the `is_done` re-check before delivery.
+
+    The correct `_execute_part` re-validates the journal's done flag
+    under _cv before delivering, because a helper may have force-stolen
+    and completed the part while this thread sat between plan execution
+    and delivery.  Without the re-check, the losing racer delivers the
+    same rows a second time — the checker's exactly-once-delivery
+    invariant (fill count per row == 1) must flag it."""
+
+    def _execute_part(self, pid: int, worker: int) -> None:
+        with self._cv:
+            batch = self._batches.get(pid)
+            if batch is None:
+                return
+            snap = self._snapshots[batch.epoch]
+        sync_point("engine.execute.run", pid)
+        plan = self.plans.get(snap, batch.queries.shape[0], batch.k,
+                              self._knobs)
+        d, i, rounds = plan.run(snap, jnp.asarray(batch.queries))
+        d = np.asarray(d)
+        i = np.asarray(i)
+        now = time.monotonic()
+        sync_point("engine.execute.deliver", pid)
+        with self._cv:
+            # BUG: no `if self._journal.is_done(pid): return` here
+            if not self._journal.is_done(pid):
+                self._journal.mark_done(pid)
+            self._dispatched += 1
+            for fut, dst, src, n in batch.segments:
+                if fut._fill(src, d[dst:dst + n], i[dst:dst + n], now):
+                    self._completed += 1
+            self._batches.pop(pid, None)
+            self._journal.prune_done()
+            self._gc_snapshots()
+            self._cv.notify_all()
+        self._journal.persist()
+
+
+class MutableSnapshotEngine(QueryEngine):
+    """Mutates the published snapshot in place instead of publishing.
+
+    The correct add() buffers the rows and publishes a NEW epoch; this
+    variant smashes the delta into the CURRENT epoch's frozen Snapshot,
+    so an in-flight batch that captured the object sees data from after
+    its submit epoch.  The checker's publish-time-vs-end fingerprint
+    comparison must flag the mutation (and the epoch-bound oracle check
+    usually fails with it)."""
+
+    def add(self, batch) -> "QueryEngine":
+        sync_point("engine.add")
+        with self._wlock:
+            self._index.add(batch)
+            with self._cv:
+                snap = self._snapshots[self._epoch]
+            delta = self._index.delta_cat
+            # BUG: in-place mutation of a published frozen Snapshot
+            object.__setattr__(snap, "delta",
+                               None if delta is None else np.asarray(delta))
+            object.__setattr__(snap, "n_total", self._index.n_series)
+        return self

@@ -1,0 +1,806 @@
+"""Schedule-exploring race checker: scenarios + machine-verified invariants.
+
+Each SCENARIO spins up the REAL concurrency machinery — `RefreshRun`
+workers (core/refresh.py), a `WorkJournal` with helping (runtime/
+journal.py), a `QueryEngine` with submit/add/flush/helping races
+(serve/engine.py) — under the controlled scheduler (analysis/schedules),
+then checks the INVARIANT CATALOG (docs/ANALYSIS.md) after every
+interleaving:
+
+  exactly-once    every journal part's logical effect lands exactly once
+                  (physical re-execution by helpers is allowed — that is
+                  the paper's at-least-once traversing property — but
+                  each future row is DELIVERED exactly once and counters
+                  never double-count);
+  bit-identity    a future bound to epoch e returns exactly the oracle
+                  answer over e's data, and byte-identical results for
+                  the same (client, epoch) across every schedule;
+  immutability    a published Snapshot never changes after publish
+                  (byte fingerprints at publish vs. end of run);
+  lock-freedom    with one thread PERMANENTLY STALLED at an adversarial
+                  point (stronger than the crash injectors: its
+                  half-done state stays visible), the remaining threads
+                  still finish everything — no deadlock, no livelock;
+  lock discipline blocking work (journal file persistence, host->device
+                  delta transfer) never runs while the engine's _cv or
+                  _wlock is held.
+
+Engine scenarios run the real QueryEngine over a stub index + stub plan
+cache (pure-numpy brute force): every schedule then costs milliseconds,
+which is what makes >=10k interleavings tractable, and the invariants
+target exactly the machinery the stub does NOT replace — snapshots,
+batching, journal helping, future delivery.  Refresh and journal
+scenarios are stub-free.
+
+CLI::
+
+    python -m repro.analysis.checker                 # full (>=10k runs)
+    python -m repro.analysis.checker --budget 400    # CI quick gate
+    python -m repro.analysis.checker --scenario refresh.dfs --budget 50
+
+Exit status 0 iff every scenario holds every invariant.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .hooks import SyncHook, installed, observe
+from .schedules import (ControlledScheduler, DFSStrategy, RandomStrategy,
+                        RunResult, ScheduleLivelock, SchedulerHang, Strategy)
+
+__all__ = ["ExploreReport", "Scenario", "StubIndex", "StubPlans",
+           "TrackedCondition", "TrackedLock", "engine_scenario",
+           "explore", "journal_scenario", "main", "make_portfolio",
+           "refresh_scenario", "snapshot_fingerprint", "stub_topk"]
+
+
+# ------------------------------------------------------------------ stubs
+class StubConfig:
+    """The IndexConfig fields QueryEngine reads when resolving knobs."""
+    round_leaves = 8
+    znorm = False
+    backend = "ref"
+    pq_budget = None
+
+
+class _StubCore:
+    """Stands in for FlatIndex: just the fields Snapshot.plan_sig reads."""
+
+    __slots__ = ("series", "n_leaves")
+
+    def __init__(self, series: np.ndarray):
+        self.series = series
+        self.n_leaves = 1
+
+
+class StubIndex:
+    """A FreshIndex look-alike whose search is pure-numpy brute force.
+
+    Mirrors the facade's concurrency-relevant contract exactly: add()
+    buffers immutable delta batches, delta_cat materializes lazily (and
+    emits the same `index.delta_cat` observe as the real facade — the
+    lock-discipline invariant watches for it), prepare/commit_compact
+    split heavy work from the O(1) swap, and every published array is
+    replaced, never mutated."""
+
+    def __init__(self, base: np.ndarray):
+        base = np.asarray(base, np.float32)
+        self._core = _StubCore(base)
+        self._delta: List[np.ndarray] = []
+        self._dcat: Optional[np.ndarray] = None
+        self._n_base = base.shape[0]
+        self.config = StubConfig()
+        self.mesh = None
+        self.mesh_axis = "data"
+
+    @property
+    def index(self):
+        return self._core
+
+    @property
+    def n_series(self) -> int:
+        return self._n_base + self.n_pending
+
+    @property
+    def n_pending(self) -> int:
+        return sum(b.shape[0] for b in self._delta)
+
+    @property
+    def series_len(self) -> int:
+        return self._core.series.shape[1]
+
+    @property
+    def delta_cat(self) -> Optional[np.ndarray]:
+        if not self._delta:
+            return None
+        if self._dcat is None:
+            observe("index.delta_cat", self)
+            self._dcat = np.concatenate(self._delta, axis=0)
+        return self._dcat
+
+    def add(self, batch) -> "StubIndex":
+        b = np.array(batch, np.float32)
+        if b.ndim == 1:
+            b = b[None]
+        if b.ndim != 2 or b.shape[1] != self.series_len:
+            raise ValueError(f"batch must be (m, {self.series_len})")
+        self._delta.append(b)
+        self._dcat = None
+        return self
+
+    def prepare_compact(self):
+        if not self._delta:
+            return None
+        delta = np.concatenate(self._delta, axis=0)
+        merged = np.concatenate([self._core.series, delta], axis=0)
+        return (merged, delta.shape[0], len(self._delta))
+
+    def commit_compact(self, token) -> "StubIndex":
+        if token is None:
+            return self
+        merged, n_rows, n_batches = token
+        if (len(self._delta) != n_batches
+                or sum(b.shape[0] for b in self._delta) != n_rows):
+            raise RuntimeError("delta changed between prepare and commit")
+        self._core = _StubCore(merged)
+        self._n_base += n_rows
+        self._delta = []
+        self._dcat = None
+        return self
+
+
+def stub_topk(q: np.ndarray, data: np.ndarray, k: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic brute-force top-k (squared L2, stable ties)."""
+    d = ((q[:, None, :] - data[None, :, :]) ** 2).sum(-1)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    return (np.take_along_axis(d, order, axis=1).astype(np.float32),
+            order.astype(np.int32))
+
+
+class _StubPlan:
+    __slots__ = ("k",)
+
+    def __init__(self, k: int):
+        self.k = k
+
+    def run(self, snap, queries):
+        q = np.asarray(queries, np.float32)
+        rows = [np.asarray(snap.core.series)]
+        if snap.delta is not None:
+            rows.append(np.asarray(snap.delta))
+        d, i = stub_topk(q, np.concatenate(rows, axis=0), self.k)
+        return d, i, 1
+
+
+class StubPlans:
+    """PlanCache stand-in: no compilation, pure-numpy plans."""
+    donate = False
+
+    def get(self, snap, bucket_q: int, k: int, knobs) -> _StubPlan:
+        return _StubPlan(k)
+
+    def stats(self) -> dict:
+        return {"hits": 0, "misses": 0, "size": 0, "donate": False,
+                "sharded_traces": 0}
+
+
+# ------------------------------------------------- lock-discipline probes
+class TrackedCondition:
+    """Wraps a threading.Condition, tracking per-thread hold depth so the
+    lock-discipline invariant can ask `held()` from observe callbacks."""
+
+    def __init__(self, cond):
+        self._c = cond
+        self._depth: Dict[int, int] = {}
+
+    def __enter__(self):
+        self._c.__enter__()
+        i = threading.get_ident()
+        self._depth[i] = self._depth.get(i, 0) + 1
+        return self
+
+    def __exit__(self, *exc):
+        i = threading.get_ident()
+        self._depth[i] -= 1
+        if not self._depth[i]:
+            del self._depth[i]
+        return self._c.__exit__(*exc)
+
+    def wait(self, timeout=None):
+        return self._c.wait(timeout)
+
+    def notify(self, n=1):
+        self._c.notify(n)
+
+    def notify_all(self):
+        self._c.notify_all()
+
+    def held(self) -> bool:
+        return self._depth.get(threading.get_ident(), 0) > 0
+
+
+class TrackedLock:
+    """Same for a plain Lock used as a context manager."""
+
+    def __init__(self, lock):
+        self._l = lock
+        self._depth: Dict[int, int] = {}
+
+    def __enter__(self):
+        self._l.__enter__()
+        i = threading.get_ident()
+        self._depth[i] = self._depth.get(i, 0) + 1
+        return self
+
+    def __exit__(self, *exc):
+        i = threading.get_ident()
+        self._depth[i] -= 1
+        if not self._depth[i]:
+            del self._depth[i]
+        return self._l.__exit__(*exc)
+
+    def held(self) -> bool:
+        return self._depth.get(threading.get_ident(), 0) > 0
+
+
+class _ObserveForwarder(SyncHook):
+    """Forwards observe() events to a callback without any parking —
+    installed around scenario.finish() so the uncontrolled drain still
+    feeds the invariant observers."""
+
+    def __init__(self, fn: Callable[[str, Any], None]):
+        self._fn = fn
+
+    def observe(self, name: str, obj: Any) -> None:
+        self._fn(name, obj)
+
+
+def snapshot_fingerprint(snap) -> Tuple:
+    """Byte-level identity of a published Snapshot (immutability check)."""
+    core = np.asarray(snap.core.series)
+    delta = None if snap.delta is None else np.asarray(snap.delta).tobytes()
+    return (snap.epoch, core.tobytes(), delta, snap.n_base, snap.n_total,
+            int(snap.core.n_leaves))
+
+
+# -------------------------------------------------------------- scenarios
+class Scenario:
+    """One checkable concurrency scenario; carries cross-run state for
+    the bit-identity-across-schedules invariant."""
+
+    name = "scenario"
+    park_on: Any = None
+
+    def setup(self) -> Any:
+        raise NotImplementedError
+
+    def threads(self, ctx) -> List[Tuple[str, Callable[[], None]]]:
+        raise NotImplementedError
+
+    def observer(self, ctx) -> Optional[Callable[[str, Any], None]]:
+        return None
+
+    def finish(self, ctx, result: RunResult) -> None:
+        """Uncontrolled post-run drain (runs on the exploring thread)."""
+
+    def check(self, ctx, result: RunResult) -> List[str]:
+        """Return invariant-violation descriptions (empty = all green)."""
+        raise NotImplementedError
+
+
+REFRESH_PARK = ("refresh.fai", "refresh.elem", "refresh.elem.pre_done",
+                "refresh.group.pre_done", "refresh.chunk.pre_done",
+                "refresh.help.scan")
+REFRESH_STALL = ("refresh.elem.pre_done", "refresh.group.pre_done",
+                 "refresh.chunk.pre_done", "refresh.fai")
+
+
+class RefreshScenario(Scenario):
+    """2-3 RefreshRun workers over a tiny 3-level workload.
+
+    Invariants: traversing property (every element applied >= once), the
+    exactly-once LOGICAL effect (final results == oracle; payloads write
+    deterministic values into disjoint slots), and — with a stalled
+    worker — lock-free termination: all done flags set by the survivors
+    alone."""
+
+    def __init__(self, n_elements: int = 6, n_threads: int = 2,
+                 require_completion: bool = True):
+        self.name = "refresh"
+        self.park_on = REFRESH_PARK
+        self.n_elements = n_elements
+        self.n_threads = n_threads
+        self.require_completion = require_completion
+
+    def setup(self):
+        from repro.core.refresh import RefreshRun
+        out = np.full(self.n_elements, -1, np.int64)
+
+        def payload(e: int, mode: str) -> None:
+            out[e] = e * 7 + 1          # deterministic, disjoint slots
+
+        rr = RefreshRun(self.n_elements, payload,
+                        n_threads=self.n_threads, chunks=2,
+                        groups_per_chunk=2, backoff_factor=0.0)
+        return {"rr": rr, "out": out}
+
+    def threads(self, ctx):
+        rr = ctx["rr"]
+        return [(f"w{t}", lambda t=t: rr._worker(t))
+                for t in range(self.n_threads)]
+
+    def check(self, ctx, result):
+        from repro.core.traverse import check_traversing_property
+        rr, out = ctx["rr"], ctx["out"]
+        v = []
+        if self.require_completion and not rr.all_done():
+            v.append(f"lock-freedom: parts unfinished with survivors done "
+                     f"(stalled={result.stalled})")
+        if rr.all_done():
+            if not check_traversing_property(self.n_elements,
+                                             rr.applied_log):
+                v.append("traversing property: element never applied")
+            oracle = np.arange(self.n_elements) * 7 + 1
+            if not np.array_equal(out, oracle):
+                v.append(f"exactly-once logical effect: {out} != {oracle}")
+            if rr.applications.value < self.n_elements:
+                v.append("applications under-counted")
+        return v
+
+
+JOURNAL_PARK = ("journal.acquire", "journal.acquire.claim",
+                "journal.add_part", "journal.mark_done", "journal.steal",
+                "journal.prune")
+
+
+class JournalScenario(Scenario):
+    """Two workers + a producer over a real WorkJournal: static parts,
+    dynamic add_part growth, unconditional helping (the engine's
+    force-steal path), and a prune at quiescence.
+
+    Invariants: every part done, exactly-once logical effect (results ==
+    oracle), helping/attempt stats never lost to pruning, pruned window
+    fully released."""
+
+    def __init__(self, n_static: int = 2, n_dynamic: int = 2,
+                 n_workers: int = 2):
+        self.name = "journal"
+        self.park_on = JOURNAL_PARK
+        self.n_static = n_static
+        self.n_dynamic = n_dynamic
+        self.n_workers = n_workers
+        self.total = n_static + n_dynamic
+
+    def setup(self):
+        from repro.runtime.journal import WorkJournal
+        j = WorkJournal(None, n_parts=self.n_static)
+        out = np.full(self.total, -1, np.int64)
+        return {"j": j, "out": out}
+
+    def _work(self, ctx, wid: int) -> None:
+        j, out = ctx["j"], ctx["out"]
+        while True:
+            pid = j.acquire(wid)
+            if pid is None:
+                break
+            out[pid] = pid * 13 + 3
+            j.mark_done(pid)
+        # helping phase: unconditional steal (the flush/force-help rule)
+        for pid in j.unfinished():
+            if j.is_done(pid):
+                continue
+            j.steal(pid, wid)
+            out[pid] = pid * 13 + 3
+            j.mark_done(pid)
+
+    def _produce(self, ctx) -> None:
+        j = ctx["j"]
+        for _ in range(self.n_dynamic):
+            j.add_part()
+        self._work(ctx, wid=99)         # the producer helps too
+
+    def threads(self, ctx):
+        ts = [("prod", lambda: self._produce(ctx))]
+        ts += [(f"w{t}", lambda t=t: self._work(ctx, t))
+               for t in range(self.n_workers)]
+        return ts
+
+    def finish(self, ctx, result):
+        ctx["j"].prune_done()           # quiescent: no racing executors
+
+    def check(self, ctx, result):
+        j, out = ctx["j"], ctx["out"]
+        v = []
+        if not j.all_done():
+            v.append(f"unfinished parts {j.unfinished()} "
+                     f"(stalled={result.stalled})")
+            return v
+        oracle = np.arange(self.total) * 13 + 3
+        if not np.array_equal(out, oracle):
+            v.append(f"exactly-once logical effect: {out} != {oracle}")
+        st = j.stats()
+        if st["n_parts"] != self.total:
+            v.append(f"n_parts {st['n_parts']} != {self.total}")
+        if st["attempts"] < self.total:
+            v.append("attempts lost (pruning dropped stats?)")
+        if not all(j.is_done(p) for p in range(self.total)):
+            v.append("is_done lost completion state after prune")
+        if j.parts:
+            v.append("prune_done left a done prefix resident")
+        return v
+
+
+ENGINE_PARK = ("engine.submit", "engine.add", "engine.form",
+               "engine.flush.help", "engine.execute.run",
+               "engine.execute.deliver", "engine.help")
+ENGINE_STALL = ("engine.execute.run", "engine.execute.deliver")
+
+
+class EngineScenario(Scenario):
+    """Real QueryEngine (workers=0) over a StubIndex: two submitting
+    clients, a writer publishing epochs (optionally auto-compacting),
+    and flushing helpers, all racing.
+
+    Invariants: every future delivered exactly once per row and completed
+    exactly once; results == oracle over the future's SUBMIT-TIME epoch
+    data; byte-identical per (client, epoch) across schedules; published
+    snapshots never mutate; snapshot GC keeps only live epochs; no
+    blocking event (journal persist, delta materialize) under _cv/_wlock.
+
+    `lockfree=True` turns the clients into help-until-everyone-done
+    loops and requires every future to complete DURING the schedule (no
+    uncontrolled drain) — the progress guarantee under permanent stalls.
+    """
+
+    def __init__(self, name: str = "engine", auto_compact: Optional[int]
+                 = None, journal_dir: Optional[str] = None,
+                 lockfree: bool = False,
+                 engine_cls=None):
+        self.name = name
+        self.park_on = ENGINE_PARK
+        self.auto_compact = auto_compact
+        self.journal_dir = journal_dir
+        self.lockfree = lockfree
+        self.engine_cls = engine_cls
+        self._identity: Dict[Tuple, Tuple[bytes, bytes]] = {}
+        rng = np.random.RandomState(7)
+        self.base = rng.randn(6, 8).astype(np.float32)
+        self.q0 = rng.randn(2, 8).astype(np.float32)
+        self.q1 = rng.randn(1, 8).astype(np.float32)
+        self.extra = rng.randn(2, 8).astype(np.float32)
+
+    def setup(self):
+        from repro.serve.engine import EngineConfig, QueryEngine
+        cls = self.engine_cls or QueryEngine
+        jpath = None
+        if self.journal_dir is not None:
+            import tempfile
+            jpath = tempfile.mktemp(suffix=".json", dir=self.journal_dir)
+        ix = StubIndex(self.base)
+        eng = cls(ix, EngineConfig(
+            workers=0, linger_ms=0.0, help_after_ms=0.0, max_batch=4,
+            auto_compact_rows=self.auto_compact, journal_path=jpath))
+        eng.plans = StubPlans()
+        cv = TrackedCondition(eng._cv)
+        wl = TrackedLock(eng._wlock)
+        eng._cv = cv
+        eng._wlock = wl
+        ctx: Dict[str, Any] = {
+            "eng": eng, "cv": cv, "wl": wl,
+            "futs": [None, None],
+            "pub": {0: self.base.copy()},
+            "fps": [(eng._snapshots[0],
+                     snapshot_fingerprint(eng._snapshots[0]))],
+            "fills": {},                # (fut_id, src, n) -> count
+            "completions": {},          # fut_id -> count
+            "gc": [],
+            "lock_violations": [],
+        }
+        return ctx
+
+    def observer(self, ctx):
+        cv, wl = ctx["cv"], ctx["wl"]
+
+        def obs(name: str, obj: Any) -> None:
+            # Lock discipline: journal file I/O must run outside BOTH
+            # engine locks; delta materialization (host->device transfer)
+            # is legal under the writer mutex — capture intentionally
+            # serializes with writers — but never under the shared _cv.
+            if name == "journal.persist" and (cv.held() or wl.held()):
+                where = "_cv" if cv.held() else "_wlock"
+                ctx["lock_violations"].append(f"{name} while {where} held")
+            elif name == "index.delta_cat" and cv.held():
+                ctx["lock_violations"].append(f"{name} while _cv held")
+            elif name == "engine.publish":
+                ctx["pub"][obj.epoch] = np.concatenate(
+                    [np.asarray(obj.core.series)]
+                    + ([np.asarray(obj.delta)]
+                       if obj.delta is not None else []), axis=0).copy()
+                ctx["fps"].append((obj, snapshot_fingerprint(obj)))
+            elif name == "engine.gc":
+                ctx["gc"].extend(obj)
+            elif name == "engine.future.fill":
+                fut, src, n, completed = obj
+                key = (id(fut), src, n)
+                ctx["fills"][key] = ctx["fills"].get(key, 0) + 1
+                if completed:
+                    c = ctx["completions"]
+                    c[id(fut)] = c.get(id(fut), 0) + 1
+        return obs
+
+    # ----------------------------------------------------------- threads
+    def _client(self, ctx, i: int, q: np.ndarray, k: int) -> None:
+        eng = ctx["eng"]
+        ctx["futs"][i] = eng.submit(q, k=k)
+        if self.lockfree:
+            # help until EVERY submitted future is done: the progress
+            # obligation of a live thread in the lock-freedom model
+            while True:
+                futs = list(ctx["futs"])
+                if all(f is not None and f.done() for f in futs):
+                    return
+                eng.flush()
+
+    def _writer(self, ctx) -> None:
+        ctx["eng"].add(self.extra)
+
+    def _flusher(self, ctx) -> None:
+        ctx["eng"].flush()
+
+    def threads(self, ctx):
+        ts = [("c0", lambda: self._client(ctx, 0, self.q0, 2)),
+              ("c1", lambda: self._client(ctx, 1, self.q1, 1)),
+              ("flush", lambda: self._flusher(ctx))]
+        if not self.lockfree:
+            # a second racing executor: two concurrent flush() calls
+            # force-steal each other's parts, exercising the idempotent
+            # re-execution + is_done delivery guard
+            ts.append(("flush2", lambda: self._flusher(ctx)))
+            ts.append(("add", lambda: self._writer(ctx)))
+        return ts
+
+    def finish(self, ctx, result):
+        if not self.lockfree:
+            ctx["eng"].flush()          # uncontrolled drain
+
+    # ------------------------------------------------------------ checks
+    def check(self, ctx, result):
+        eng = ctx["eng"]
+        v = list(ctx["lock_violations"])
+        futs = ctx["futs"]
+        if any(f is None for f in futs):
+            # a stalled client never submitted; nothing further to check
+            return v
+        for i, fut in enumerate(futs):
+            if not fut.done():
+                v.append(f"future c{i} incomplete "
+                         f"(lockfree={self.lockfree}, "
+                         f"stalled={result.stalled})")
+                continue
+            data = ctx["pub"].get(fut.epoch)
+            if data is None:
+                v.append(f"c{i} bound to unpublished epoch {fut.epoch}")
+                continue
+            q = self.q0 if i == 0 else self.q1
+            d_exp, i_exp = stub_topk(q, data, fut.k)
+            if not (np.array_equal(fut._d, d_exp)
+                    and np.array_equal(fut._i, i_exp)):
+                v.append(f"c{i} result != oracle for epoch {fut.epoch}")
+            key = (i, fut.epoch, fut.k)
+            sig = (fut._d.tobytes(), fut._i.tobytes())
+            prev = self._identity.setdefault(key, sig)
+            if prev != sig:
+                v.append(f"bit-identity broken across schedules for "
+                         f"(client={i}, epoch={fut.epoch})")
+            if ctx["completions"].get(id(fut), 0) != 1:
+                v.append(f"c{i} completed "
+                         f"{ctx['completions'].get(id(fut), 0)} times")
+        # exactly-once row delivery
+        for (fid, src, n), count in ctx["fills"].items():
+            if count != 1:
+                v.append(f"rows [{src}:{src + n}] delivered {count} times")
+        if all(f is not None and f.done() for f in futs):
+            if eng._completed != len(futs):
+                v.append(f"_completed={eng._completed} != {len(futs)}")
+            if eng._batches:
+                v.append(f"unfinished batches left: {list(eng._batches)}")
+            if eng._pending:
+                v.append("pending queries left after drain")
+        # published snapshots never mutate
+        for snap, fp in ctx["fps"]:
+            if snapshot_fingerprint(snap) != fp:
+                v.append(f"snapshot epoch {snap.epoch} mutated after "
+                         f"publish")
+        # GC'd epochs must be dead and must not resurrect
+        for e in ctx["gc"]:
+            if e in eng._snapshots:
+                v.append(f"GC'd epoch {e} resurrected")
+        # GC is piggybacked on delivery, so epochs published after the
+        # last delivery may legitimately still be resident; what must
+        # hold is that one explicit cycle collects exactly the dead set.
+        with eng._cv:
+            eng._gc_snapshots()
+        live = {eng._epoch}
+        live.update(p.epoch for p in eng._pending)
+        live.update(b.epoch for b in eng._batches.values())
+        extra = set(eng._snapshots) - live
+        if extra:
+            v.append(f"snapshot GC left dead epochs {sorted(extra)}")
+        if eng._epoch not in eng._snapshots:
+            v.append("GC collected the live published epoch")
+        return v
+
+
+# shortcut constructors (importable names for tests / portfolio)
+def refresh_scenario(**kw) -> RefreshScenario:
+    return RefreshScenario(**kw)
+
+
+def journal_scenario(**kw) -> JournalScenario:
+    return JournalScenario(**kw)
+
+
+def engine_scenario(**kw) -> EngineScenario:
+    return EngineScenario(**kw)
+
+
+# ---------------------------------------------------------------- driver
+@dataclass
+class ExploreReport:
+    """Outcome of exploring one scenario under one strategy."""
+    scenario: str
+    runs: int = 0
+    distinct: int = 0
+    steps: int = 0
+    diverged: int = 0
+    stalled_runs: int = 0
+    violations: List[str] = field(default_factory=list)
+    seconds: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return not self.violations
+
+    def line(self) -> str:
+        status = "OK" if self.ok else f"{len(self.violations)} VIOLATIONS"
+        return (f"{self.scenario:<18} runs={self.runs:<6} "
+                f"distinct={self.distinct:<6} steps={self.steps:<7} "
+                f"stalls={self.stalled_runs:<5} {self.seconds:6.1f}s "
+                f"{status}")
+
+
+def explore(scenario: Scenario, strategy: Strategy, budget: int,
+            max_steps: int = 20_000, stop_after: int = 10,
+            ) -> ExploreReport:
+    """Run up to `budget` schedules of `scenario` under `strategy`,
+    checking invariants after each; stops early when the strategy
+    exhausts its schedule space or `stop_after` violations accumulate."""
+    rep = ExploreReport(scenario=scenario.name)
+    sched = ControlledScheduler(strategy, park_on=scenario.park_on,
+                                max_steps=max_steps)
+    seen: set = set()
+    t0 = time.perf_counter()
+    for _ in range(budget):
+        if strategy.exhausted:
+            break
+        ctx = scenario.setup()
+        obs = scenario.observer(ctx)
+        try:
+            result = sched.run(scenario.threads(ctx), observer=obs)
+        except (SchedulerHang, ScheduleLivelock) as e:
+            rep.runs += 1
+            rep.violations.append(f"liveness: {type(e).__name__}: {e}")
+            break
+        if obs is not None:
+            with installed(_ObserveForwarder(obs)):
+                scenario.finish(ctx, result)
+        else:
+            scenario.finish(ctx, result)
+        rep.runs += 1
+        rep.steps += result.steps
+        rep.diverged += bool(result.diverged)
+        rep.stalled_runs += bool(result.stalled)
+        seen.add(result.signature())
+        for name, err in result.errors.items():
+            rep.violations.append(
+                f"thread {name} raised {type(err).__name__}: {err} "
+                f"[schedule {result.trace[-6:]}]")
+        rep.violations.extend(scenario.check(ctx, result))
+        if len(rep.violations) >= stop_after:
+            break
+    rep.distinct = len(seen)
+    rep.seconds = time.perf_counter() - t0
+    return rep
+
+
+# ------------------------------------------------------------- portfolio
+def make_portfolio(budget: int, seed: int = 0,
+                   journal_dir: Optional[str] = None
+                   ) -> List[Tuple[str, Scenario, Strategy, int]]:
+    """The standard scenario/strategy mix, budget split across prongs.
+
+    Weights favour the stub-free refresh/journal scenarios (cheapest per
+    schedule) while keeping every invariant family covered."""
+    b = max(budget, 10)
+    mix = [
+        ("refresh.dfs",
+         RefreshScenario(n_threads=2),
+         DFSStrategy(max_preemptions=2), int(b * 0.26)),
+        ("refresh.stall",
+         RefreshScenario(n_threads=3),
+         RandomStrategy(seed=seed + 1, p_stall=0.25,
+                        stall_points=REFRESH_STALL), int(b * 0.16)),
+        ("journal.dfs",
+         JournalScenario(),
+         DFSStrategy(max_preemptions=2), int(b * 0.22)),
+        ("journal.random",
+         JournalScenario(n_workers=3),
+         RandomStrategy(seed=seed + 2), int(b * 0.10)),
+        ("engine.race",
+         EngineScenario(name="engine.race", auto_compact=2),
+         RandomStrategy(seed=seed + 3), int(b * 0.14)),
+        ("engine.lockfree",
+         EngineScenario(name="engine.lockfree", lockfree=True),
+         RandomStrategy(seed=seed + 4, p_stall=0.35,
+                        stall_points=ENGINE_STALL), int(b * 0.09)),
+        ("engine.durable",
+         EngineScenario(name="engine.durable", journal_dir=journal_dir),
+         RandomStrategy(seed=seed + 5), int(b * 0.03)),
+    ]
+    return mix
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.checker",
+        description="Schedule-exploring race checker for the lock-free "
+                    "core (see docs/ANALYSIS.md).")
+    # The DFS scenarios exhaust their bounded-preemption space below
+    # their slice; 15k leaves the random scenarios enough headroom that
+    # the full portfolio clears >10k DISTINCT interleavings.
+    ap.add_argument("--budget", type=int, default=15_000,
+                    help="total schedules across the portfolio "
+                         "(default 15000; CI uses a few hundred)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scenario", type=str, default=None,
+                    help="run only portfolio entries whose name contains "
+                         "this substring")
+    args = ap.parse_args(argv)
+
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        mix = make_portfolio(args.budget, seed=args.seed, journal_dir=tmp)
+        if args.scenario:
+            mix = [m for m in mix if args.scenario in m[0]]
+            if not mix:
+                print(f"no portfolio entry matches {args.scenario!r}")
+                return 2
+        reports: List[ExploreReport] = []
+        for label, scenario, strategy, share in mix:
+            scenario.name = label
+            rep = explore(scenario, strategy, budget=share)
+            reports.append(rep)
+            print(rep.line(), flush=True)
+
+    total_runs = sum(r.runs for r in reports)
+    total_distinct = sum(r.distinct for r in reports)
+    bad = [r for r in reports if not r.ok]
+    print(f"\ntotal: {total_runs} schedules, {total_distinct} distinct "
+          f"interleavings, {len(bad)} scenario(s) with violations")
+    for r in bad:
+        for msg in r.violations[:10]:
+            print(f"  [{r.scenario}] {msg}")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,639 @@
+"""AST concurrency lint for the lock-free core.
+
+Static companion to the schedule-exploring race checker: rules encode
+the concurrency conventions the runtime machinery relies on, so a
+violation is flagged at review time instead of surfacing as a one-in-a-
+thousand interleaving failure.  Pure stdlib (`ast` only) — importable
+and runnable without jax installed.
+
+Rules
+-----
+bare-acquire        `X.acquire()` outside a `with` item and without a
+                    try/finally release — an exception between acquire
+                    and release deadlocks every other thread.
+blocking-under-lock blocking work inside `with self._cv:` (or `_wlock`):
+                    file I/O (open/json.dump/os.replace...), sleeps,
+                    `.block_until_ready()`, journal `persist()`, or —
+                    under `_cv` only — `.delta_cat` materialization
+                    (host->device transfer).  The engine's condition
+                    variable is on the submit/result hot path; anything
+                    slow under it stalls every client.
+snapshot-mutation   writes to published-`Snapshot` fields or
+                    `object.__setattr__` on frozen instances outside
+                    `__init__`/`__post_init__` — published epochs are
+                    immutable by contract (checker fingerprints them).
+jit-side-effect     Python side effects (`time.*`, print, open,
+                    global/nonlocal writes, mutation of closure state)
+                    inside `@jax.jit` functions, functions passed to
+                    `jax.jit(...)`, or plan/step-factory inner
+                    functions — they run at TRACE time only and
+                    silently vanish from the compiled computation.
+dead-module         modules unreachable from any entry point (`__main__`
+                    guard), the test suite, or a dynamic-import
+                    registry (`importlib.import_module` with a literal
+                    or prefix f-string).
+
+Usage::
+
+    python -m repro.analysis.lint src/            # gate: exit 0 iff clean
+    python -m repro.analysis.lint src/ --no-allow # ignore the allowlist
+
+Suppressions live in `.lint-allow` at the repo root (or `--allow FILE`):
+one `<rule> <path-suffix>` pair per line, `#` comments encouraged — the
+gate is zero-violations-with-explicit-allowlist, never silent.
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = ["Violation", "lint_file", "lint_paths", "load_allowlist",
+           "main", "RULES"]
+
+RULES = ("bare-acquire", "blocking-under-lock", "snapshot-mutation",
+         "jit-side-effect", "dead-module")
+
+# names that identify a lock-ish attribute in a `with` item
+_LOCK_ATTRS = ("_cv", "_wlock", "_lock", "_mutex")
+# Snapshot's field names — attribute writes to a snapshot-named value
+# hitting these are mutation of a published epoch
+_SNAPSHOT_FIELDS = {"epoch", "core", "delta", "n_base", "n_total",
+                    "series_len", "mesh", "mesh_axis"}
+# blocking calls forbidden under ANY engine lock
+_BLOCKING_NAMES = {"open", "print", "input"}
+_BLOCKING_ATTRS = {"sleep", "block_until_ready", "persist", "_persist"}
+_BLOCKING_MOD_ATTRS = {("json", "dump"), ("json", "load"),
+                       ("os", "replace"), ("os", "rename"),
+                       ("os", "fsync"), ("os", "remove"),
+                       ("os", "unlink"), ("shutil", "copy"),
+                       ("shutil", "move")}
+# side effects forbidden inside traced (jit) functions
+_TRACE_BAD_NAMES = {"print", "open", "input"}
+_TRACE_BAD_MODS = {"time", "random"}
+# NB: no "update"/"pop" — optax-style `optimizer.update(...)` and
+# dict.pop-with-default are overwhelmingly pure/local in this codebase
+_MUTATING_METHODS = {"append", "extend", "add", "insert", "setdefault",
+                     "write"}
+# a `.acquire()` receiver must look lock-ish; WorkJournal.acquire() is a
+# work-claiming API, not a mutex
+_LOCKISH_RECEIVER = ("lock", "cv", "mutex", "sem", "cond")
+
+
+@dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str
+    line: int
+    msg: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.msg}"
+
+
+# --------------------------------------------------------------- helpers
+def _dotted(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """jax.jit / jit / partial(jax.jit, ...) / functools.partial(jit,.)"""
+    d = _dotted(node)
+    if d in ("jit", "jax.jit"):
+        return True
+    if isinstance(node, ast.Call):
+        f = _dotted(node.func)
+        if f in ("partial", "functools.partial") and node.args:
+            return _is_jit_expr(node.args[0])
+        return _is_jit_expr(node.func)
+    return False
+
+
+def _is_factory_name(name: str) -> bool:
+    """Functions whose inner defs are traced: make_*_step, *_plan..."""
+    low = name.lower()
+    return (low.startswith(("make_", "build_")) and
+            low.endswith(("plan", "step", "kernel", "fn"))
+            ) or low.endswith("_factory")
+
+
+def _lock_kind(item: ast.withitem) -> Optional[str]:
+    """'_cv' / '_wlock' / generic '_lock' when a with-item takes one."""
+    expr = item.context_expr
+    if isinstance(expr, ast.Attribute) and any(
+            expr.attr == a or expr.attr.endswith(a) for a in _LOCK_ATTRS):
+        for a in _LOCK_ATTRS:
+            if expr.attr == a or expr.attr.endswith(a):
+                return a
+    return None
+
+
+def _finalbody_releases(tr: ast.Try) -> bool:
+    for stmt in tr.finalbody:
+        for n in ast.walk(stmt):
+            if (isinstance(n, ast.Call)
+                    and isinstance(n.func, ast.Attribute)
+                    and n.func.attr == "release"):
+                return True
+    return False
+
+
+# ---------------------------------------------------------- file linter
+class _FileLinter:
+    """Single-pass recursive walker carrying lock/trace/function context."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.out: List[Violation] = []
+        self._jit_target_names: Set[str] = set()
+        # pre-pass: names passed to jax.jit(fn) calls
+        for n in ast.walk(tree):
+            if (isinstance(n, ast.Call) and _is_jit_expr(n.func)
+                    and n.args and isinstance(n.args[0], ast.Name)):
+                self._jit_target_names.add(n.args[0].id)
+
+    def emit(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.out.append(Violation(rule, self.path,
+                                  getattr(node, "lineno", 1), msg))
+
+    def run(self) -> List[Violation]:
+        self._walk_body(self.tree.body, locks=(), traced=False,
+                        fn_name=None, local_names=set())
+        return self.out
+
+    # -- statement walker: `locks` is the tuple of held lock kinds ------
+    def _walk_body(self, body: Sequence[ast.stmt], locks: Tuple[str, ...],
+                   traced: bool, fn_name: Optional[str],
+                   local_names: Set[str]) -> None:
+        for idx, stmt in enumerate(body):
+            nxt = body[idx + 1] if idx + 1 < len(body) else None
+            self._walk_stmt(stmt, nxt, locks, traced, fn_name, local_names)
+
+    def _walk_stmt(self, stmt: ast.stmt, nxt: Optional[ast.stmt],
+                   locks: Tuple[str, ...], traced: bool,
+                   fn_name: Optional[str], local_names: Set[str]) -> None:
+        if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            inner_traced = (
+                any(_is_jit_expr(d) for d in stmt.decorator_list)
+                or stmt.name in self._jit_target_names
+                or (fn_name is not None and _is_factory_name(fn_name)
+                    and not traced))
+            locals_ = {a.arg for a in stmt.args.args
+                       + stmt.args.posonlyargs + stmt.args.kwonlyargs}
+            if stmt.args.vararg:
+                locals_.add(stmt.args.vararg.arg)
+            if stmt.args.kwarg:
+                locals_.add(stmt.args.kwarg.arg)
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Assign):
+                    for t in n.targets:
+                        if isinstance(t, ast.Name):
+                            locals_.add(t.id)
+                elif isinstance(n, (ast.AugAssign, ast.AnnAssign,
+                                    ast.For)):
+                    t = getattr(n, "target", None)
+                    if isinstance(t, ast.Name):
+                        locals_.add(t.id)
+            # a nested def suspends any held locks only at CALL time;
+            # conservatively keep lock context (closures often run
+            # immediately under the lock), but reset for module-level
+            self._walk_body(stmt.body, locks,
+                            traced or inner_traced, stmt.name, locals_)
+            return
+        if isinstance(stmt, ast.ClassDef):
+            self._walk_body(stmt.body, locks, traced, fn_name,
+                            local_names)
+            return
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            kinds = [k for k in (_lock_kind(i) for i in stmt.items) if k]
+            # the with-item expressions themselves evaluate BEFORE the
+            # lock is taken
+            for item in stmt.items:
+                self._scan_expr(item.context_expr, nxt, locks, traced,
+                                fn_name, local_names)
+            self._walk_body(stmt.body, locks + tuple(kinds), traced,
+                            fn_name, local_names)
+            return
+        if isinstance(stmt, ast.Try):
+            self._walk_body(stmt.body, locks, traced, fn_name,
+                            local_names)
+            for h in stmt.handlers:
+                self._walk_body(h.body, locks, traced, fn_name,
+                                local_names)
+            self._walk_body(stmt.orelse, locks, traced, fn_name,
+                            local_names)
+            self._walk_body(stmt.finalbody, locks, traced, fn_name,
+                            local_names)
+            return
+        if isinstance(stmt, (ast.Global, ast.Nonlocal)) and traced:
+            self.emit("jit-side-effect", stmt,
+                      f"{'global' if isinstance(stmt, ast.Global) else 'nonlocal'} "
+                      f"write declared inside a traced function — runs at "
+                      f"trace time only")
+        # mutation rules on assignment statements
+        if isinstance(stmt, (ast.Assign, ast.AugAssign)):
+            targets = (stmt.targets if isinstance(stmt, ast.Assign)
+                       else [stmt.target])
+            for t in targets:
+                self._check_snapshot_write(t)
+                if traced and isinstance(t, ast.Subscript) and \
+                        isinstance(t.value, ast.Name) and \
+                        t.value.id not in local_names:
+                    self.emit("jit-side-effect", t,
+                              f"write to closure/global container "
+                              f"'{t.value.id}[...]' inside a traced "
+                              f"function")
+        # generic expression scan (calls, attribute loads)
+        for child in ast.iter_child_nodes(stmt):
+            if isinstance(child, ast.expr):
+                self._scan_expr(child, nxt, locks, traced, fn_name,
+                                local_names)
+            elif isinstance(child, ast.stmt):
+                self._walk_stmt(child, None, locks, traced, fn_name,
+                                local_names)
+            elif isinstance(child, (ast.withitem, ast.ExceptHandler)):
+                pass  # handled above
+            else:
+                for sub in ast.walk(child):
+                    if isinstance(sub, ast.expr):
+                        self._scan_expr(sub, nxt, locks, traced,
+                                        fn_name, local_names)
+                        break
+
+    def _check_snapshot_write(self, target: ast.expr) -> None:
+        if (isinstance(target, ast.Attribute)
+                and target.attr in _SNAPSHOT_FIELDS
+                and isinstance(target.value, ast.Name)
+                and "snap" in target.value.id.lower()):
+            self.emit("snapshot-mutation", target,
+                      f"write to published Snapshot field "
+                      f"'{target.value.id}.{target.attr}' — snapshots "
+                      f"are immutable after publish")
+
+    # -- expression scan ------------------------------------------------
+    def _scan_expr(self, expr: ast.expr, nxt: Optional[ast.stmt],
+                   locks: Tuple[str, ...], traced: bool,
+                   fn_name: Optional[str], local_names: Set[str]) -> None:
+        for node in ast.walk(expr):
+            if isinstance(node, (ast.Lambda,)) and traced:
+                pass  # lambdas inherit the traced context via walk
+            if isinstance(node, ast.Call):
+                self._check_call(node, nxt, locks, traced, fn_name,
+                                 local_names)
+            elif (isinstance(node, ast.Attribute)
+                  and node.attr == "delta_cat"
+                  and isinstance(node.ctx, ast.Load)
+                  and "_cv" in locks):
+                self.emit("blocking-under-lock", node,
+                          ".delta_cat materializes the delta "
+                          "(host->device transfer) while _cv is held")
+
+    def _check_call(self, node: ast.Call, nxt: Optional[ast.stmt],
+                    locks: Tuple[str, ...], traced: bool,
+                    fn_name: Optional[str], local_names: Set[str]
+                    ) -> None:
+        func = node.func
+        d = _dotted(func) or ""
+        jax_ok = d.startswith("jax.")  # jax.debug.print etc. is fine
+        # ---- bare-acquire ----
+        if (isinstance(func, ast.Attribute) and func.attr == "acquire"
+                and self._lockish(func.value)):
+            if not self._acquire_is_disciplined(node, nxt):
+                self.emit("bare-acquire", node,
+                          f"bare {d or 'lock'}() acquire — use a `with` "
+                          f"block or try/finally release")
+        # ---- blocking-under-lock ----
+        if locks and not jax_ok:
+            bad = None
+            if isinstance(func, ast.Name) and func.id in _BLOCKING_NAMES:
+                bad = func.id
+            elif isinstance(func, ast.Attribute):
+                if func.attr in _BLOCKING_ATTRS:
+                    bad = d or func.attr
+                elif (isinstance(func.value, ast.Name)
+                      and (func.value.id, func.attr)
+                      in _BLOCKING_MOD_ATTRS):
+                    bad = d
+            if bad:
+                self.emit("blocking-under-lock", node,
+                          f"blocking call {bad}() while "
+                          f"{'/'.join(sorted(set(locks)))} is held")
+        # ---- snapshot-mutation via object.__setattr__ ----
+        if (d == "object.__setattr__"
+                and fn_name not in ("__init__", "__post_init__",
+                                    "__setattr__", "replace")):
+            self.emit("snapshot-mutation", node,
+                      "object.__setattr__ on a frozen instance outside "
+                      "__init__/__post_init__")
+        # ---- jit-side-effect ----
+        if traced and not jax_ok:
+            if isinstance(func, ast.Name) and func.id in _TRACE_BAD_NAMES:
+                self.emit("jit-side-effect", node,
+                          f"{func.id}() inside a traced function runs at "
+                          f"trace time only")
+            elif isinstance(func, ast.Attribute):
+                root = func.value
+                if (isinstance(root, ast.Name)
+                        and root.id in _TRACE_BAD_MODS):
+                    self.emit("jit-side-effect", node,
+                              f"{d}() inside a traced function is a "
+                              f"hidden Python side effect")
+                elif (isinstance(root, ast.Name)
+                      and func.attr in _MUTATING_METHODS
+                      and root.id not in local_names
+                      and root.id != "self"):
+                    self.emit("jit-side-effect", node,
+                              f"mutation '{d}()' of closure/global "
+                              f"'{root.id}' inside a traced function")
+
+    @staticmethod
+    def _lockish(receiver: ast.expr) -> bool:
+        name = None
+        if isinstance(receiver, ast.Attribute):
+            name = receiver.attr
+        elif isinstance(receiver, ast.Name):
+            name = receiver.id
+        return (name is not None
+                and any(t in name.lower() for t in _LOCKISH_RECEIVER))
+
+    def _acquire_is_disciplined(self, call: ast.Call,
+                                nxt: Optional[ast.stmt]) -> bool:
+        # `with x.acquire()`-style or `with x:` never reaches here (the
+        # with-item is `x`, not `x.acquire()`); accepted forms:
+        #   1. the very next statement is try/...finally: x.release()
+        #   2. the acquire IS a with-item expression (timeout probes)
+        for anc in ast.walk(self.tree):
+            if isinstance(anc, (ast.With, ast.AsyncWith)):
+                for item in anc.items:
+                    for sub in ast.walk(item.context_expr):
+                        if sub is call:
+                            return True
+        if isinstance(nxt, ast.Try) and _finalbody_releases(nxt):
+            return True
+        return False
+
+
+# ------------------------------------------------------------ dead code
+def _module_name(py: Path, root: Path) -> str:
+    rel = py.relative_to(root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _has_main_guard(tree: ast.Module) -> bool:
+    for n in tree.body:
+        if (isinstance(n, ast.If) and isinstance(n.test, ast.Compare)
+                and isinstance(n.test.left, ast.Name)
+                and n.test.left.id == "__name__"):
+            return True
+    return False
+
+
+def _imports_of(tree: ast.Module, mod: str, is_pkg: bool = False
+                ) -> Tuple[Set[str], Set[str]]:
+    """(imported module names, dynamic-import prefixes)."""
+    mods: Set[str] = set()
+    prefixes: Set[str] = set()
+    pkg_parts = mod.split(".") if mod else []
+    for n in ast.walk(tree):
+        if isinstance(n, ast.Import):
+            for a in n.names:
+                mods.add(a.name)
+        elif isinstance(n, ast.ImportFrom):
+            if n.level:
+                # level 1 from a package __init__ is the package itself;
+                # from a plain module it's the containing package
+                drop = n.level - 1 if is_pkg else n.level
+                base = pkg_parts[:len(pkg_parts) - drop] if drop \
+                    else pkg_parts
+                stem = ".".join(base + ([n.module] if n.module else []))
+            else:
+                stem = n.module or ""
+            if stem:
+                mods.add(stem)
+                for a in n.names:
+                    mods.add(f"{stem}.{a.name}")
+        elif isinstance(n, ast.Call):
+            d = _dotted(n.func)
+            if d in ("importlib.import_module", "import_module") \
+                    and n.args:
+                arg = n.args[0]
+                if isinstance(arg, ast.Constant) and \
+                        isinstance(arg.value, str):
+                    mods.add(arg.value)
+                elif (isinstance(arg, ast.JoinedStr) and arg.values
+                      and isinstance(arg.values[0], ast.Constant)):
+                    # f"pkg.sub.{name}" -> everything under pkg.sub
+                    prefixes.add(str(arg.values[0].value).rstrip("."))
+    return mods, prefixes
+
+
+def _dead_modules(files: Dict[str, ast.Module], src_root: Path,
+                  extra_root_trees: Iterable[ast.Module],
+                  pkg_mods: Optional[Set[str]] = None) -> List[str]:
+    """Reachability over the static+dynamic import graph."""
+    all_mods = set(files)
+    pkg_mods = pkg_mods or set()
+    edges: Dict[str, Set[str]] = {}
+    roots: Set[str] = set()
+
+    def resolve(targets: Set[str], prefixes: Set[str]) -> Set[str]:
+        out: Set[str] = set()
+        for t in targets:
+            if t in all_mods:
+                out.add(t)
+            # `from pkg import name` where pkg is ours but name is an
+            # attribute: pkg itself is already in targets
+        for p in prefixes:
+            out.update(m for m in all_mods if m.startswith(p + "."))
+        return out
+
+    for mod, tree in files.items():
+        mods, prefixes = _imports_of(tree, mod, is_pkg=mod in pkg_mods)
+        edges[mod] = resolve(mods, prefixes)
+        # importing a submodule executes every ancestor package
+        for tgt in list(edges[mod]):
+            parts = tgt.split(".")
+            for i in range(1, len(parts)):
+                anc = ".".join(parts[:i])
+                if anc in all_mods:
+                    edges[mod].add(anc)
+        if _has_main_guard(tree) or mod.rsplit(".", 1)[-1] in (
+                "__main__", "conftest"):
+            roots.add(mod)
+
+    for tree in extra_root_trees:
+        mods, prefixes = _imports_of(tree, "")
+        ext = resolve(mods, prefixes)
+        for tgt in ext:
+            parts = tgt.split(".")
+            for i in range(1, len(parts) + 1):
+                anc = ".".join(parts[:i])
+                if anc in all_mods:
+                    roots.add(anc)
+
+    alive: Set[str] = set()
+    stack = list(roots)
+    while stack:
+        m = stack.pop()
+        if m in alive:
+            continue
+        alive.add(m)
+        stack.extend(edges.get(m, ()))
+    return sorted(all_mods - alive)
+
+
+# ---------------------------------------------------------------- driver
+def lint_file(path: Path, src: Optional[str] = None) -> List[Violation]:
+    text = src if src is not None else path.read_text()
+    try:
+        tree = ast.parse(text, filename=str(path))
+    except SyntaxError as e:
+        return [Violation("syntax", str(path), e.lineno or 1, str(e))]
+    return _FileLinter(str(path), tree).run()
+
+
+def _collect(paths: Sequence[Path]) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def lint_paths(paths: Sequence[Path],
+               test_roots: Optional[Sequence[Path]] = None
+               ) -> List[Violation]:
+    """Run every rule over `paths`; dead-module analysis treats each
+    directory argument as one package root and the sibling `tests/`
+    directory (auto-detected, or `test_roots`) as extra liveness roots.
+    """
+    files = _collect(paths)
+    violations: List[Violation] = []
+    trees: Dict[Path, ast.Module] = {}
+    for f in files:
+        try:
+            trees[f] = ast.parse(f.read_text(), filename=str(f))
+        except SyntaxError as e:
+            violations.append(Violation("syntax", str(f),
+                                        e.lineno or 1, str(e)))
+            continue
+        violations.extend(_FileLinter(str(f), trees[f]).run())
+
+    # dead-module pass per directory root
+    for p in paths:
+        if not p.is_dir():
+            continue
+        by_mod: Dict[str, ast.Module] = {}
+        mod_to_file: Dict[str, Path] = {}
+        pkg_mods: Set[str] = set()
+        for f, t in trees.items():
+            try:
+                m = _module_name(f, p)
+            except ValueError:
+                continue
+            if m:
+                by_mod[m] = t
+                mod_to_file[m] = f
+                if f.name == "__init__.py":
+                    pkg_mods.add(m)
+        if not by_mod:
+            continue
+        roots_dirs = list(test_roots) if test_roots else []
+        if not roots_dirs:
+            cand = p.resolve().parent / "tests"
+            if cand.is_dir():
+                roots_dirs.append(cand)
+        extra_trees: List[ast.Module] = []
+        for d in roots_dirs:
+            for f in sorted(Path(d).rglob("*.py")):
+                try:
+                    extra_trees.append(ast.parse(f.read_text(),
+                                                 filename=str(f)))
+                except SyntaxError:
+                    pass
+        for dead in _dead_modules(by_mod, p, extra_trees, pkg_mods):
+            violations.append(Violation(
+                "dead-module", str(mod_to_file[dead]), 1,
+                f"module {dead} is unreachable from every entry point, "
+                f"the test suite, and dynamic-import registries"))
+    return violations
+
+
+# ------------------------------------------------------------- allowlist
+def load_allowlist(path: Path) -> List[Tuple[str, str]]:
+    entries: List[Tuple[str, str]] = []
+    if not path.is_file():
+        return entries
+    for raw in path.read_text().splitlines():
+        line = raw.split("#", 1)[0].strip()
+        if not line:
+            continue
+        parts = line.split(None, 1)
+        if len(parts) == 2:
+            entries.append((parts[0], parts[1].strip()))
+    return entries
+
+
+def _suppressed(v: Violation, allow: List[Tuple[str, str]]) -> bool:
+    vpath = Path(v.path).as_posix()
+    return any(rule == v.rule and vpath.endswith(suffix)
+               for rule, suffix in allow)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.lint",
+        description="AST concurrency lint (see docs/ANALYSIS.md)")
+    ap.add_argument("paths", nargs="+", type=Path)
+    ap.add_argument("--allow", type=Path, default=None,
+                    help="allowlist file (default: .lint-allow next to "
+                         "the first path's repo root)")
+    ap.add_argument("--no-allow", action="store_true",
+                    help="ignore the allowlist (report everything)")
+    ap.add_argument("--tests", type=Path, action="append", default=None,
+                    help="extra liveness-root dirs for dead-module")
+    args = ap.parse_args(argv)
+
+    allow: List[Tuple[str, str]] = []
+    if not args.no_allow:
+        allow_path = args.allow
+        if allow_path is None:
+            first = args.paths[0].resolve()
+            base = first if first.is_dir() else first.parent
+            for cand in (base, *base.parents):
+                if (cand / ".lint-allow").is_file():
+                    allow_path = cand / ".lint-allow"
+                    break
+        if allow_path is not None:
+            allow = load_allowlist(allow_path)
+
+    violations = lint_paths(args.paths, test_roots=args.tests)
+    shown = [v for v in violations if not _suppressed(v, allow)]
+    for v in shown:
+        print(v)
+    n_sup = len(violations) - len(shown)
+    print(f"{len(shown)} violation(s), {n_sup} allowlisted, "
+          f"{len(RULES)} rules", file=sys.stderr)
+    return 1 if shown else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -93,6 +93,7 @@ from typing import Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hooks import observe
 from repro.checkpoint.store import load_arrays, save_checkpoint
 from repro.core import isax
 from repro.core.builder import IndexBuilder, merge_sorted_delta
@@ -403,6 +404,9 @@ class FreshIndex:
         if not self._delta:
             return None
         if self._delta_cat is None:
+            # blocking host->device transfer: the race checker asserts
+            # this observe never fires while the engine's _cv is held
+            observe("index.delta_cat", self)
             self._delta_cat = jnp.asarray(
                 np.concatenate(self._delta, axis=0))
         return self._delta_cat

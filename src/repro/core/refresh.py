@@ -38,6 +38,8 @@ import time
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Sequence
 
+from repro.analysis.hooks import sync_point
+
 from .traverse import Executor, StageStats
 
 EXPEDITIVE = "expeditive"
@@ -66,6 +68,10 @@ class CounterObject:
         self.limit = limit
 
     def next_index(self) -> int:
+        # schedulable point BEFORE the FAI: the increment itself is one
+        # atomic op, but which thread performs it next is a real race the
+        # checker must control (repro.analysis, docs/ANALYSIS.md)
+        sync_point("refresh.fai", self)
         return next(self._c)
 
 
@@ -224,17 +230,20 @@ class RefreshRun:
                 if i >= self.L1.n:
                     break
                 self._process_chunk(tid, i)
+                sync_point("refresh.chunk.pre_done", i)
                 self.L1.done[i] = True
             # ---- helping phase (Alg. 2 lines 12-17)
             for j in range(self.L1.n):
                 if self.L1.done[j]:
                     continue
                 self._backoff(tid)
+                sync_point("refresh.help.scan", j)
                 if self.L1.done[j]:
                     continue
                 self.L1.help[j] = True          # alert owner -> standard mode
                 self.helped_parts.inc()
                 self._process_chunk(tid, j, helping=True)
+                sync_point("refresh.chunk.pre_done", j)
                 self.L1.done[j] = True
         except WorkerCrash:
             self.crashed.inc()
@@ -249,6 +258,7 @@ class RefreshRun:
             if g >= lvl.n:
                 break
             self._process_group(tid, ci, g)
+            sync_point("refresh.group.pre_done", (ci, g))
             lvl.done[g] = True
         # helping pass over groups of this chunk
         for g in range(lvl.n):
@@ -261,6 +271,7 @@ class RefreshRun:
             lvl.help[g] = True
             self.helped_parts.inc()
             self._process_group(tid, ci, g, helping=True)
+            sync_point("refresh.group.pre_done", (ci, g))
             lvl.done[g] = True
 
     def _process_group(self, tid: int, ci: int, gi: int,
@@ -284,10 +295,15 @@ class RefreshRun:
             if mode == STANDARD and self.done_elem[e]:
                 continue  # someone else already finished this element
             self._maybe_inject(tid, 3, e)
+            sync_point("refresh.elem", e)
             self.process(e, mode)
             self.applications.inc()
             with self._applied_lock:
                 self.applied_log.append(e)
+            # the payload-applied -> done-flag window: a thread stalled
+            # here forces helpers to re-execute e (at-least-once), the
+            # exact double-execution window the checker explores
+            sync_point("refresh.elem.pre_done", e)
             self.done_elem[e] = True
         dt = time.perf_counter() - t0
         # update running mean part time (backoff base, Section V-A)

@@ -31,6 +31,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
+from repro.analysis.hooks import observe, sync_point
+
 
 @dataclass
 class PartState:
@@ -53,10 +55,17 @@ class WorkJournal:
     cumulative stats survive pruning."""
 
     def __init__(self, path: Optional[str], n_parts: int,
-                 backoff_factor: float = 2.0):
+                 backoff_factor: float = 2.0, autopersist: bool = True):
         self.path = path
         self.n_parts = n_parts                  # total parts ever created
         self.backoff_factor = backoff_factor
+        # autopersist=False defers the on-disk write to an explicit
+        # persist() call: callers that mutate the journal under a lock
+        # (QueryEngine under its condition variable) must not do file
+        # I/O there — they persist after releasing it.  Durability is
+        # unchanged in kind: a part marked done but lost to a crash
+        # before persist() is simply re-executed (at-least-once helping).
+        self.autopersist = autopersist
         self.parts: List[PartState] = [PartState() for _ in range(n_parts)]
         self._base = 0                          # ids below this are pruned
         self._pruned_helped = 0                 # stats carried past pruning
@@ -74,6 +83,7 @@ class WorkJournal:
         streaming producers grow it one part per unit of work.  Construct
         with n_parts=0 for a purely dynamic journal (reloads then adopt
         the persisted part count)."""
+        sync_point("journal.add_part", self)
         self.parts.append(PartState())
         self.n_parts = self._base + len(self.parts)
         self._persist()
@@ -101,6 +111,7 @@ class WorkJournal:
         Ids stay global, cumulative stats are preserved — only the
         per-part state of long-finished work is released, keeping
         acquire()/unfinished() scans O(in-flight) on an endless stream."""
+        sync_point("journal.prune", self)
         n = 0
         while n < len(self.parts) and self.parts[n].done:
             self._pruned_helped += self.parts[n].helped
@@ -114,9 +125,18 @@ class WorkJournal:
 
     # ------------------------------------------------------------ owner
     def acquire(self, worker: int) -> Optional[int]:
-        """Next unowned part (FAI-style); None when all are owned."""
+        """Next unowned part (FAI-style); None when all are owned.
+
+        NOT internally synchronized: concurrent bare acquires can both
+        claim one part (benign — processing is idempotent and helpers
+        re-check is_done before delivering effects).  The serving engine
+        serializes journal calls under its condition variable; the
+        standalone race checker explores exactly this window via the
+        journal.acquire.claim sync point."""
+        sync_point("journal.acquire", worker)
         for i, p in enumerate(self.parts):
             if p.owner < 0 and not p.done:
+                sync_point("journal.acquire.claim", self._base + i)
                 p.owner = worker
                 p.acquired_at = time.time()
                 p.attempts += 1
@@ -125,6 +145,7 @@ class WorkJournal:
         return None
 
     def mark_done(self, part: int) -> None:
+        sync_point("journal.mark_done", part)
         p = self.part(part)
         if not p.done:
             p.done = True
@@ -154,6 +175,7 @@ class WorkJournal:
         return out
 
     def steal(self, part: int, helper: int) -> None:
+        sync_point("journal.steal", part)
         p = self.part(part)
         p.owner = helper
         p.acquired_at = time.time()
@@ -181,9 +203,20 @@ class WorkJournal:
         }
 
     # -------------------------------------------------------- persistence
+    def persist(self) -> None:
+        """Write the journal to disk now (no-op without a path).  The
+        explicit flush point for autopersist=False journals; call it
+        OUTSIDE any lock the journal is mutated under."""
+        self._write()
+
     def _persist(self) -> None:
+        if self.autopersist:
+            self._write()
+
+    def _write(self) -> None:
         if not self.path:
             return
+        observe("journal.persist", self.path)
         data = {"n_parts": self.n_parts, "base": self._base,
                 "pruned_helped": self._pruned_helped,
                 "pruned_attempts": self._pruned_attempts,

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.hooks import observe, sync_point
 from repro.core.refresh import WorkerCrash
 from repro.runtime import WorkJournal
 from repro.runtime.elastic import plan_serving_mesh
@@ -197,6 +198,7 @@ class SearchFuture:
     def _fill(self, src: int, d_rows: np.ndarray, i_rows: np.ndarray,
               now: float) -> bool:
         """Deliver rows [src, src+n).  True exactly once: on completion."""
+        completed = False
         with self._lock:
             n = d_rows.shape[0]
             self._d[src:src + n] = d_rows
@@ -205,8 +207,9 @@ class SearchFuture:
             if self._filled.all() and not self._event.is_set():
                 self.completed_at = now
                 self._event.set()
-                return True
-        return False
+                completed = True
+        observe("engine.future.fill", (self, src, n, completed))
+        return completed
 
     def done(self) -> bool:
         """True once every row of this future has been delivered."""
@@ -261,7 +264,12 @@ class QueryEngine:
         # compaction merge can run outside _cv without racing another
         # writer; readers keep going under _cv the whole time
         self._wlock = threading.Lock()
-        self._journal = WorkJournal(cfg.journal_path, n_parts=0)
+        # autopersist=False: journal mutations happen under _cv, so the
+        # on-disk write is deferred to explicit persist() calls made
+        # after the lock is released (no file I/O under the condition
+        # variable — enforced by repro.analysis.lint + checker tests)
+        self._journal = WorkJournal(cfg.journal_path, n_parts=0,
+                                    autopersist=False)
         self._batches: dict = {}            # part_id -> Batch (unfinished)
         self._pending: list = []            # [Pending]
         self._epoch = 0
@@ -297,9 +305,16 @@ class QueryEngine:
                         mesh=ix.mesh, mesh_axis=ix.mesh_axis)
 
     def _publish(self) -> None:
+        """Capture OUTSIDE _cv (capturing may materialize the pending
+        delta on device — a blocking transfer readers must not stall
+        behind), then publish under _cv as a pure pointer swap.  Callers
+        hold _wlock, so the capture cannot race another writer and the
+        epoch read below is stable."""
+        snap = self._capture(self._epoch + 1)
+        observe("engine.publish", snap)
         with self._cv:
-            self._epoch += 1
-            self._snapshots[self._epoch] = self._capture(self._epoch)
+            self._epoch = snap.epoch
+            self._snapshots[snap.epoch] = snap
             self._cv.notify_all()
 
     @property
@@ -326,13 +341,17 @@ class QueryEngine:
         OUTSIDE the engine condition variable, so concurrent
         submit()/result() never stall behind a compaction).
         """
+        sync_point("engine.add")
         cap = self.config.auto_compact_rows
         with self._wlock:
-            with self._cv:
-                self._index.add(batch)
-                if cap is None or self._index.n_pending < cap:
-                    self._publish()
-                    return self
+            # the index mutation and the host->device delta transfer run
+            # OUTSIDE _cv: writers are already serialized by _wlock and
+            # readers only ever see published snapshots, so only the
+            # publish pointer swap needs the condition variable
+            self._index.add(batch)
+            if cap is None or self._index.n_pending < cap:
+                self._publish()
+                return self
             self._compact_locked()
         return self
 
@@ -362,7 +381,10 @@ class QueryEngine:
             self._index.commit_compact(token)
             if token is not None:
                 self._compactions += 1
-            self._publish()
+        # the post-commit capture + publish run outside _cv (the caller
+        # still holds _wlock, so no writer can slip between commit and
+        # publish; readers keep draining previously published epochs)
+        self._publish()
 
     def refresh(self) -> "QueryEngine":
         """Publish a snapshot of out-of-band index mutations (direct
@@ -433,7 +455,7 @@ class QueryEngine:
                 ix.shard(mesh, axis=axis)
             with self._cv:
                 self._recoveries += 1
-                self._publish()
+            self._publish()
         return self
 
     # ------------------------------------------------------------------ #
@@ -454,6 +476,7 @@ class QueryEngine:
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
             q = q[None]
+        sync_point("engine.submit")
         with self._cv:
             if self._closed:
                 raise RuntimeError("engine is closed")
@@ -487,6 +510,7 @@ class QueryEngine:
         """
         self._form_and_register()
         while True:
+            sync_point("engine.flush.help")
             pid = self._next_part(worker=HELPER_ID, force_help=True)
             if pid is None:
                 return self
@@ -519,7 +543,9 @@ class QueryEngine:
     # dispatch internals
     # ------------------------------------------------------------------ #
     def _form_and_register(self) -> int:
-        """Drain pending into journal-registered batches; returns count."""
+        """Drain pending into journal-registered batches; returns count.
+        Journal durability is flushed AFTER _cv is released."""
+        sync_point("engine.form")
         with self._cv:
             if not self._pending:
                 return 0
@@ -529,7 +555,9 @@ class QueryEngine:
                 b.part_id = self._journal.add_part()
                 self._batches[b.part_id] = b
                 self._padded_slots += b.padded_slots
-            return len(batches)
+            n = len(batches)
+        self._journal.persist()
+        return n
 
     def _next_part(self, worker: int, force_help: bool = False
                    ) -> Optional[int]:
@@ -538,22 +566,35 @@ class QueryEngine:
         Stealing honours the paper's backoff rule (help only after the
         owner exceeds the measured-T_avg deadline) unless the owner
         thread is provably dead or `force_help` (flush) is set."""
+        got: Optional[int] = None
         with self._cv:
             pid = self._journal.acquire(worker)
             if pid is not None:
-                return pid
-            now = time.time()
-            ddl = self._journal.backoff_deadline()
-            for pid in self._journal.unfinished():
-                p = self._journal.part(pid)
-                if p.owner == worker:
-                    continue
-                owner_dead = (0 <= p.owner < len(self._workers)
-                              and not self._workers[p.owner].is_alive())
-                if force_help or owner_dead or (now - p.acquired_at) > ddl:
-                    self._journal.steal(pid, worker)
-                    return pid
-            return None
+                got = pid
+            else:
+                now = time.time()
+                ddl = self._journal.backoff_deadline()
+                for pid in self._journal.unfinished():
+                    p = self._journal.part(pid)
+                    # Never re-steal our own in-flight part — EXCEPT under
+                    # force_help, where "our" id is the shared HELPER_ID:
+                    # skipping would let one helper stalled mid-part wedge
+                    # every other flush()/result() forever (no live worker
+                    # exists in sync mode to age-out the orphan).  Racing
+                    # a live helper on the same part is benign: execution
+                    # is idempotent and delivery is guarded by is_done.
+                    if p.owner == worker and not force_help:
+                        continue
+                    owner_dead = (0 <= p.owner < len(self._workers)
+                                  and not self._workers[p.owner].is_alive())
+                    if (force_help or owner_dead
+                            or (now - p.acquired_at) > ddl):
+                        self._journal.steal(pid, worker)
+                        got = pid
+                        break
+        if got is not None:
+            self._journal.persist()     # outside _cv: no I/O under the cv
+        return got
 
     def _execute_part(self, pid: int, worker: int) -> None:
         """Run one batch through its snapshot's compiled plan and deliver
@@ -564,6 +605,11 @@ class QueryEngine:
             if batch is None or self._journal.is_done(pid):
                 return
             snap = self._snapshots[batch.epoch]
+        # mid-flight window (no locks held): a worker stalled or crashed
+        # anywhere from here to the delivery block below leaves an
+        # orphaned part any helper can re-execute — the checker's
+        # lock-freedom scenarios stall threads exactly here
+        sync_point("engine.execute.run", pid)
         if self._crash_hook is not None:
             self._crash_hook(worker, batch)      # may raise WorkerCrash
         plan = self.plans.get(snap, batch.queries.shape[0], batch.k,
@@ -573,6 +619,7 @@ class QueryEngine:
         i = np.asarray(i)
         rounds = int(rounds)
         now = time.monotonic()
+        sync_point("engine.execute.deliver", pid)
         with self._cv:
             if self._journal.is_done(pid):       # a racer beat us (and may
                 return                           # have pruned the part)
@@ -590,13 +637,17 @@ class QueryEngine:
             self._journal.prune_done()
             self._gc_snapshots()
             self._cv.notify_all()
+        self._journal.persist()          # durability flush outside _cv
 
     def _gc_snapshots(self) -> None:
         live = {self._epoch}
         live.update(p.epoch for p in self._pending)
         live.update(b.epoch for b in self._batches.values())
-        for e in [e for e in self._snapshots if e not in live]:
+        dead = [e for e in self._snapshots if e not in live]
+        for e in dead:
             del self._snapshots[e]
+        if dead:
+            observe("engine.gc", tuple(dead))
 
     def has_live_workers(self) -> bool:
         """True while at least one dispatch worker thread is alive.
@@ -608,6 +659,7 @@ class QueryEngine:
 
     def _make_progress(self) -> None:
         """One helping step for a blocked result() caller."""
+        sync_point("engine.help")
         if not self.has_live_workers():
             self.flush()
             return

@@ -1,0 +1,198 @@
+"""Schedule-exploring race checker: scheduler determinism, invariant
+scenarios over the real executor/journal/engine, lock-freedom under
+permanent stalls, seeded-bug meta-tests, and regression tests for the
+concurrency fixes the checker motivated (journal persistence moved
+outside _cv, snapshot capture moved outside _cv, flush able to rescue
+parts orphaned by a stalled helper)."""
+
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.analysis.buggy import (DoubleExecuteEngine,
+                                  MutableSnapshotEngine)
+from repro.analysis.checker import (ENGINE_STALL, REFRESH_STALL,
+                                    EngineScenario, JournalScenario,
+                                    RefreshScenario, StubIndex,
+                                    StubPlans, TrackedCondition, explore)
+from repro.analysis.hooks import SyncHook, installed
+from repro.analysis.schedules import DFSStrategy, RandomStrategy
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+# ----------------------------------------------------------- invariants
+def test_refresh_dfs_invariants():
+    rep = explore(RefreshScenario(n_threads=2),
+                  DFSStrategy(max_preemptions=2), budget=150)
+    assert rep.ok, rep.violations
+    assert rep.runs >= 50
+    assert rep.distinct == rep.runs          # DFS never repeats a schedule
+
+
+def test_refresh_lockfree_under_permanent_stalls():
+    """A worker stalled mid-element (half-done state visible forever!)
+    must not stop the survivors from finishing every chunk/group/flag."""
+    rep = explore(RefreshScenario(n_threads=3),
+                  RandomStrategy(seed=5, p_stall=0.3,
+                                 stall_points=REFRESH_STALL),
+                  budget=80)
+    assert rep.ok, rep.violations
+    assert rep.stalled_runs > 10
+
+
+def test_journal_dfs_invariants():
+    rep = explore(JournalScenario(), DFSStrategy(max_preemptions=2),
+                  budget=150)
+    assert rep.ok, rep.violations
+    assert rep.runs >= 50
+
+
+def test_journal_random_three_workers():
+    rep = explore(JournalScenario(n_workers=3), RandomStrategy(seed=9),
+                  budget=60)
+    assert rep.ok, rep.violations
+
+
+def test_engine_race_invariants():
+    """Concurrent submit/add/flush/flush against the real QueryEngine:
+    exactly-once delivery, epoch-bound oracle results, snapshot
+    immutability, GC correctness — across every explored interleaving."""
+    rep = explore(EngineScenario(name="race", auto_compact=2),
+                  RandomStrategy(seed=3), budget=80)
+    assert rep.ok, rep.violations
+    assert rep.runs == 80
+
+
+def test_engine_lockfree_under_permanent_stalls():
+    """A helper stalled mid-execution (owning a journal part) must not
+    block completion: live clients force-steal and deliver everything
+    BEFORE the schedule ends — no uncontrolled drain allowed."""
+    rep = explore(EngineScenario(name="lf", lockfree=True),
+                  RandomStrategy(seed=4, p_stall=0.35,
+                                 stall_points=ENGINE_STALL),
+                  budget=60)
+    assert rep.ok, rep.violations
+    assert rep.stalled_runs > 10
+
+
+def test_dfs_exploration_is_deterministic():
+    a = explore(RefreshScenario(n_threads=2),
+                DFSStrategy(max_preemptions=1), budget=60)
+    b = explore(RefreshScenario(n_threads=2),
+                DFSStrategy(max_preemptions=1), budget=60)
+    assert a.ok and b.ok
+    assert (a.runs, a.distinct, a.steps) == (b.runs, b.distinct, b.steps)
+
+
+# ------------------------------------------------- seeded-bug meta-tests
+def test_catches_double_execute():
+    """Dropping the is_done re-check before delivery must be caught as
+    an exactly-once violation within a bounded schedule budget."""
+    rep = explore(EngineScenario(name="bug.double", lockfree=True,
+                                 engine_cls=DoubleExecuteEngine),
+                  RandomStrategy(seed=11), budget=200, stop_after=1)
+    assert not rep.ok
+    assert any("delivered 2 times" in v for v in rep.violations), \
+        rep.violations
+    assert rep.runs <= 200
+
+
+def test_catches_mutable_snapshot():
+    """Mutating a published Snapshot in place must be caught by the
+    publish-fingerprint (and epoch-oracle) invariants within budget."""
+    rep = explore(EngineScenario(name="bug.mut",
+                                 engine_cls=MutableSnapshotEngine),
+                  RandomStrategy(seed=12), budget=50, stop_after=2)
+    assert not rep.ok
+    assert any("mutated after publish" in v for v in rep.violations), \
+        rep.violations
+    assert rep.runs <= 50
+
+
+# ------------------------------------------------------ regression tests
+def test_regression_no_blocking_work_under_cv():
+    """With an on-disk journal, every persist() and the delta
+    materialization must happen OUTSIDE _cv/_wlock.  Fails on the
+    pre-fix engine, which persisted from inside _form_and_register /
+    _next_part / _execute_part while holding the condition variable and
+    captured snapshots (device transfer) under _cv."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as tmp:
+        rep = explore(EngineScenario(name="durable", journal_dir=tmp,
+                                     auto_compact=3),
+                      RandomStrategy(seed=6), budget=25)
+    assert rep.ok, rep.violations
+
+
+def test_regression_flush_rescues_helper_orphan():
+    """A part acquired by a helper (shared HELPER_ID) that then stalls
+    forever must still be force-stolen by any later flush().  The
+    pre-fix _next_part skipped parts whose owner == HELPER_ID, wedging
+    every flush()/result() in synchronous mode."""
+    from repro.serve.engine import HELPER_ID, EngineConfig, QueryEngine
+    rng = np.random.RandomState(0)
+    eng = QueryEngine(StubIndex(rng.randn(5, 8).astype(np.float32)),
+                      EngineConfig(workers=0, linger_ms=0.0,
+                                   help_after_ms=0.0))
+    eng.plans = StubPlans()
+    fut = eng.submit(rng.randn(1, 8).astype(np.float32), k=1)
+    eng._form_and_register()
+    pid = eng._journal.acquire(HELPER_ID)   # a helper claims the part
+    assert pid is not None                  # ... then stalls forever
+    eng.flush()                             # another helper must rescue
+    assert fut.done()
+    d, i = fut.result(timeout=0)
+    assert i.shape == (1,)
+
+
+def test_regression_real_index_lock_discipline():
+    """Same lock-discipline invariant against the real FreshIndex (no
+    stubs): journal persistence and delta materialization stay outside
+    the engine locks through add/submit/flush."""
+    from repro.api import FreshIndex, IndexConfig
+    from repro.serve.engine import EngineConfig
+    import tempfile
+
+    events = []
+
+    class Recorder(SyncHook):
+        def __init__(self):
+            self.cv = None
+            self.wl = None
+
+        def observe(self, name, obj):
+            if name in ("journal.persist", "index.delta_cat"):
+                events.append((name, self.cv.held()))
+
+    rng = np.random.RandomState(1)
+    ix = FreshIndex.build(rng.randn(8, 16).astype(np.float32),
+                          IndexConfig(backend="ref"))
+    with tempfile.TemporaryDirectory() as tmp:
+        eng = ix.engine(EngineConfig(
+            workers=0, journal_path=str(Path(tmp) / "j.json")))
+        rec = Recorder()
+        rec.cv = eng._cv = TrackedCondition(eng._cv)
+        with installed(rec):
+            fut = eng.submit(rng.randn(1, 16).astype(np.float32), k=2)
+            eng.add(rng.randn(2, 16).astype(np.float32))
+            eng.flush()
+            fut.result(timeout=5)
+    assert events, "expected persist/delta_cat events to fire"
+    under_cv = [n for n, held in events if held]
+    assert not under_cv, f"blocking work under _cv: {under_cv}"
+
+
+# ------------------------------------------------------------------- CLI
+def test_checker_cli_quick():
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.checker",
+         "--budget", "60", "--scenario", "journal"],
+        cwd=REPO, capture_output=True, text=True, timeout=300,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "distinct" in r.stdout

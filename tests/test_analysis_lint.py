@@ -1,0 +1,262 @@
+"""AST concurrency lint: every rule fires on a violating fixture and
+stays quiet on the disciplined twin; the repo itself gates clean."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+from repro.analysis.lint import (Violation, lint_file, lint_paths,
+                                 load_allowlist)
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _lint_src(tmp_path, code: str):
+    f = tmp_path / "fixture.py"
+    f.write_text(textwrap.dedent(code))
+    return lint_file(f)
+
+
+def _rules(violations):
+    return {v.rule for v in violations}
+
+
+# --------------------------------------------------------- bare-acquire
+def test_bare_acquire_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def bad(self):
+                self._lock.acquire()
+                self.x = 1
+                self._lock.release()
+        """)
+    assert "bare-acquire" in _rules(vs)
+
+
+def test_disciplined_acquire_ok(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import threading
+        class S:
+            def __init__(self):
+                self._lock = threading.Lock()
+            def with_block(self):
+                with self._lock:
+                    self.x = 1
+            def try_finally(self):
+                self._lock.acquire()
+                try:
+                    self.x = 1
+                finally:
+                    self._lock.release()
+        """)
+    assert "bare-acquire" not in _rules(vs)
+
+
+def test_journal_acquire_is_not_a_lock(tmp_path):
+    # WorkJournal.acquire() claims a work part; it is not a mutex
+    vs = _lint_src(tmp_path, """
+        def drain(journal):
+            while True:
+                pid = journal.acquire(0)
+                if pid is None:
+                    return
+        """)
+    assert "bare-acquire" not in _rules(vs)
+
+
+# -------------------------------------------------- blocking-under-lock
+def test_blocking_io_under_cv_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import time
+        class E:
+            def bad(self):
+                with self._cv:
+                    open("/tmp/x", "w").write("a")
+                    time.sleep(0.1)
+                    self._journal.persist()
+                    self.result.block_until_ready()
+        """)
+    msgs = [v for v in vs if v.rule == "blocking-under-lock"]
+    assert len(msgs) >= 4
+
+
+def test_delta_cat_under_cv_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        class E:
+            def bad(self):
+                with self._cv:
+                    d = self._index.delta_cat
+        """)
+    assert "blocking-under-lock" in _rules(vs)
+
+
+def test_blocking_outside_lock_ok(tmp_path):
+    vs = _lint_src(tmp_path, """
+        class E:
+            def good(self):
+                with self._cv:
+                    n = len(self._pending)
+                self._journal.persist()
+                d = self._index.delta_cat
+                return n, d
+        """)
+    assert "blocking-under-lock" not in _rules(vs)
+
+
+# ---------------------------------------------------- snapshot-mutation
+def test_snapshot_field_write_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        def bad(snap, rows):
+            snap.delta = rows
+            snap.n_total = snap.n_total + 1
+        """)
+    assert sum(v.rule == "snapshot-mutation" for v in vs) == 2
+
+
+def test_object_setattr_flagged_outside_init(tmp_path):
+    vs = _lint_src(tmp_path, """
+        def smash(snap, rows):
+            object.__setattr__(snap, "delta", rows)
+        """)
+    assert "snapshot-mutation" in _rules(vs)
+
+
+def test_object_setattr_ok_in_post_init(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import dataclasses
+        @dataclasses.dataclass(frozen=True)
+        class C:
+            x: int
+            def __post_init__(self):
+                object.__setattr__(self, "x", max(0, self.x))
+        """)
+    assert "snapshot-mutation" not in _rules(vs)
+
+
+# ------------------------------------------------------ jit-side-effect
+def test_jit_side_effects_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import time
+        import jax
+        LOG = []
+        @jax.jit
+        def step(x):
+            print("tracing", x)
+            t = time.time()
+            LOG.append(t)
+            return x * 2
+        """)
+    assert sum(v.rule == "jit-side-effect" for v in vs) >= 3
+
+
+def test_fn_passed_to_jit_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import jax
+        def impl(x):
+            print(x)
+            return x
+        fast = jax.jit(impl)
+        """)
+    assert "jit-side-effect" in _rules(vs)
+
+
+def test_factory_inner_fn_flagged(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import time
+        def make_train_step(cfg):
+            def step(params, batch):
+                t0 = time.perf_counter()
+                return params
+            return step
+        """)
+    assert "jit-side-effect" in _rules(vs)
+
+
+def test_jax_debug_print_ok(tmp_path):
+    vs = _lint_src(tmp_path, """
+        import jax
+        @jax.jit
+        def step(x):
+            jax.debug.print("x={x}", x=x)
+            return x * 2
+        """)
+    assert "jit-side-effect" not in _rules(vs)
+
+
+# ---------------------------------------------------------- dead-module
+def test_dead_module_detection(tmp_path):
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("from . import used\n")
+    (pkg / "used.py").write_text("X = 1\n")
+    (pkg / "unused.py").write_text("Y = 2\n")
+    presets = pkg / "presets"
+    presets.mkdir()
+    (presets / "__init__.py").write_text("")
+    (presets / "preset_a.py").write_text("Z = 3\n")
+    (pkg / "registry.py").write_text(textwrap.dedent("""
+        import importlib
+        def load(name):
+            return importlib.import_module(f"pkg.presets.{name}")
+        if __name__ == "__main__":
+            load("preset_a")
+        """))
+    vs = [v for v in lint_paths([tmp_path / "src"])
+          if v.rule == "dead-module"]
+    dead = {Path(v.path).parent.name + "/" + Path(v.path).stem
+            for v in vs}
+    assert "pkg/unused" in dead
+    # preset_a is reachable via the dynamic-import f-string prefix,
+    # registry via its __main__ guard, used via the package __init__
+    assert not {"pkg/used", "presets/preset_a", "pkg/registry",
+                "pkg/__init__"} & dead
+
+
+def test_tests_dir_keeps_modules_alive(tmp_path):
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "__init__.py").write_text("")
+    (pkg / "only_tested.py").write_text("A = 1\n")
+    tests = tmp_path / "tests"
+    tests.mkdir()
+    (tests / "test_x.py").write_text("from pkg.only_tested import A\n")
+    vs = [v for v in lint_paths([tmp_path / "src"])
+          if v.rule == "dead-module"]
+    assert not any("only_tested" in v.path for v in vs)
+
+
+# ---------------------------------------------------- allowlist + gate
+def test_allowlist_parsing(tmp_path):
+    allow = tmp_path / ".lint-allow"
+    allow.write_text("# comment\n\nbare-acquire src/x.py  # why\n")
+    assert load_allowlist(allow) == [("bare-acquire", "src/x.py")]
+
+
+def test_repo_gates_clean():
+    """`python -m repro.analysis.lint src/` exits 0 on the repo itself
+    (with the committed allowlist) — the CI zero-violations gate."""
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", "src/"],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_gate_red_on_violating_fixture(tmp_path):
+    bad = tmp_path / "bad.py"
+    bad.write_text("def f(snap, r):\n    snap.delta = r\n")
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.analysis.lint", str(bad)],
+        cwd=REPO, capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert r.returncode == 1
+    assert "snapshot-mutation" in r.stdout
+
+
+def test_violation_str_format(tmp_path):
+    v = Violation("bare-acquire", "a/b.py", 7, "msg")
+    assert str(v) == "a/b.py:7: [bare-acquire] msg"

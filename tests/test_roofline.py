@@ -81,7 +81,12 @@ def test_collective_bytes_subprocess():
 
     x = jax.ShapeDtypeStruct((1024, 256), jnp.float32)
     sh = NamedSharding(mesh, P("data", None))
-    hlo = jax.jit(f, in_shardings=sh).lower(x).compile().as_text()
+    # out_shardings must pin the replicated layout: recent XLA propagates
+    # the constraint sharding to the output and elides the all-gather
+    # entirely when the output placement is left free.
+    hlo = jax.jit(f, in_shardings=sh,
+                  out_shardings=NamedSharding(mesh, P())
+                  ).lower(x).compile().as_text()
     cost = analyze_hlo(hlo)
     total = sum(cost.coll_by_kind.values())
     expect = 1024 * 256 * 4                    # gathered result bytes
