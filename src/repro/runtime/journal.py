@@ -19,7 +19,12 @@ series twice is deduplicated by series id).
 
 The journal is a JSON file updated with atomic rename, so a restarted
 worker (or a helper on another host) sees a consistent snapshot — the
-durable analogue of the paper's shared-memory done flags.
+durable analogue of the paper's shared-memory done flags.  Callers that
+defer the write (autopersist=False) capture `snapshot()` under the same
+lock that guards their mutations and hand it to `persist(state)` after
+release: the file write then touches only the captured copy, never the
+live journal, and a sequence stamp keeps a delayed older write from
+clobbering a newer one.
 """
 
 from __future__ import annotations
@@ -27,6 +32,7 @@ from __future__ import annotations
 import json
 import os
 import tempfile
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -72,6 +78,13 @@ class WorkJournal:
         self._pruned_attempts = 0
         self._t_avg = 0.0
         self._t_cnt = 0
+        # deferred-persist machinery: every snapshot() is stamped with a
+        # sequence number so a delayed write can never regress the file
+        # past a newer one; _wmu serializes only the compare-and-write
+        # (file I/O — mutators never take it)
+        self._seq = 0
+        self._written_seq = -1
+        self._wmu = threading.Lock()
         if path and os.path.exists(path):
             self._load()
 
@@ -156,6 +169,23 @@ class WorkJournal:
                 self._t_avg += (dt - self._t_avg) / self._t_cnt
             self._persist()
 
+    def discard(self, part: int) -> None:
+        """Retire `part` as done WITHOUT executing it — and without
+        feeding its wall-clock age into the T_avg helping estimate.
+
+        For work that can no longer produce an effect: a part reloaded
+        from a crashed process's journal whose consumer (the serving
+        engine's in-memory batch and the futures it fed) died with that
+        process.  Leaving such a part unfinished would make every helper
+        re-steal it forever — nobody can ever mark it done by executing
+        it."""
+        sync_point("journal.discard", part)
+        p = self.part(part)
+        if not p.done:
+            p.done = True
+            p.done_at = time.time()
+            self._persist()
+
     # ----------------------------------------------------------- helping
     def backoff_deadline(self) -> float:
         """Paper's rule: help only after backoff ∝ measured T_avg."""
@@ -203,31 +233,59 @@ class WorkJournal:
         }
 
     # -------------------------------------------------------- persistence
-    def persist(self) -> None:
-        """Write the journal to disk now (no-op without a path).  The
-        explicit flush point for autopersist=False journals; call it
-        OUTSIDE any lock the journal is mutated under."""
-        self._write()
+    def snapshot(self) -> Optional[dict]:
+        """A self-consistent serialized COPY of the journal state (None
+        when the journal has no backing path).
 
-    def _persist(self) -> None:
-        if self.autopersist:
-            self._write()
-
-    def _write(self) -> None:
+        Must be called under the same lock that guards this journal's
+        mutations (the engine's condition variable; single-threaded
+        callers trivially qualify).  The copy is what makes a deferred
+        persist safe: the later file write reads only this dict, never
+        the live journal, so racing mutators cannot tear base / n_parts
+        / part states apart mid-write and misalign part states with
+        their global ids in the file."""
         if not self.path:
-            return
-        observe("journal.persist", self.path)
-        data = {"n_parts": self.n_parts, "base": self._base,
+            return None
+        self._seq += 1
+        return {"seq": self._seq,
+                "n_parts": self.n_parts, "base": self._base,
                 "pruned_helped": self._pruned_helped,
                 "pruned_attempts": self._pruned_attempts,
                 "t_avg": self._t_avg, "t_cnt": self._t_cnt,
-                "parts": [vars(p) for p in self.parts]}
+                "parts": [vars(p).copy() for p in self.parts]}
+
+    def persist(self, state: Optional[dict] = None) -> None:
+        """Write the journal to disk now (no-op without a path) — the
+        explicit flush point for autopersist=False journals.  Call it
+        OUTSIDE any lock the journal is mutated under, passing the
+        `snapshot()` captured while that lock WAS held; `state=None`
+        captures one at the call (fine for single-threaded callers)."""
+        if not self.path:
+            return
+        self._write(state if state is not None else self.snapshot())
+
+    def _persist(self) -> None:
+        if self.autopersist:
+            # inline flush inside the mutator: the snapshot is built
+            # under whatever synchronization the caller mutates this
+            # journal under, so it is as consistent as the mutation
+            self._write(self.snapshot())
+
+    def _write(self, state: Optional[dict]) -> None:
+        if not self.path or state is None:
+            return
+        observe("journal.persist", self.path)
+        seq = state.pop("seq", self._seq)
         d = os.path.dirname(self.path) or "."
-        os.makedirs(d, exist_ok=True)
-        fd, tmp = tempfile.mkstemp(dir=d)
-        with os.fdopen(fd, "w") as f:
-            json.dump(data, f)
-        os.replace(tmp, self.path)          # atomic on POSIX
+        with self._wmu:
+            if seq < self._written_seq:
+                return      # a newer snapshot already reached the disk
+            self._written_seq = seq
+            os.makedirs(d, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=d)
+            with os.fdopen(fd, "w") as f:
+                json.dump(state, f)
+            os.replace(tmp, self.path)      # atomic on POSIX
 
     def _load(self) -> None:
         with open(self.path) as f:

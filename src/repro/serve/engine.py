@@ -85,7 +85,11 @@ class EngineConfig:
                     starts helping (journal steal of orphaned batches)
     latency_window  completed-query latencies kept for p50/p99
     journal_path    optional on-disk WorkJournal (crash-durable helping);
-                    None keeps the journal in memory
+                    None keeps the journal in memory.  A restarted
+                    engine retires unfinished parts it reloads: their
+                    batches and futures died with the crashed process,
+                    so clients must resubmit — the journal preserves
+                    ids/stats across restarts, not query payloads
     auto_compact_rows
                     when set, add() compacts the index as soon as the
                     pending delta reaches this many rows — an incremental
@@ -265,11 +269,23 @@ class QueryEngine:
         # writer; readers keep going under _cv the whole time
         self._wlock = threading.Lock()
         # autopersist=False: journal mutations happen under _cv, so the
-        # on-disk write is deferred to explicit persist() calls made
-        # after the lock is released (no file I/O under the condition
-        # variable — enforced by repro.analysis.lint + checker tests)
+        # on-disk write is deferred — each mutating section captures a
+        # consistent journal.snapshot() while it still holds _cv and
+        # hands it to persist() after release (no file I/O under the
+        # condition variable, and the file can never mix states from
+        # before and after a concurrent mutation — enforced by
+        # repro.analysis.lint + checker tests)
         self._journal = WorkJournal(cfg.journal_path, n_parts=0,
                                     autopersist=False)
+        # A journal reloaded after a crash can hold unfinished parts.
+        # Their batches — and the futures those batches fed — died with
+        # the old process, so no execution can ever deliver or finish
+        # them: retire them up front, or every helper (worker loops,
+        # flush(), a blocked result()) would re-steal them forever.
+        for pid in self._journal.unfinished():
+            self._journal.discard(pid)
+        self._journal.prune_done()
+        self._journal.persist()
         self._batches: dict = {}            # part_id -> Batch (unfinished)
         self._pending: list = []            # [Pending]
         self._epoch = 0
@@ -544,7 +560,8 @@ class QueryEngine:
     # ------------------------------------------------------------------ #
     def _form_and_register(self) -> int:
         """Drain pending into journal-registered batches; returns count.
-        Journal durability is flushed AFTER _cv is released."""
+        The journal state is captured under _cv (self-consistent) and
+        flushed to disk AFTER _cv is released (no I/O under the cv)."""
         sync_point("engine.form")
         with self._cv:
             if not self._pending:
@@ -556,7 +573,8 @@ class QueryEngine:
                 self._batches[b.part_id] = b
                 self._padded_slots += b.padded_slots
             n = len(batches)
-        self._journal.persist()
+            jstate = self._journal.snapshot()
+        self._journal.persist(jstate)
         return n
 
     def _next_part(self, worker: int, force_help: bool = False
@@ -567,6 +585,7 @@ class QueryEngine:
         owner exceeds the measured-T_avg deadline) unless the owner
         thread is provably dead or `force_help` (flush) is set."""
         got: Optional[int] = None
+        jstate = None
         with self._cv:
             pid = self._journal.acquire(worker)
             if pid is not None:
@@ -592,8 +611,10 @@ class QueryEngine:
                         self._journal.steal(pid, worker)
                         got = pid
                         break
+            if got is not None:
+                jstate = self._journal.snapshot()
         if got is not None:
-            self._journal.persist()     # outside _cv: no I/O under the cv
+            self._journal.persist(jstate)   # outside _cv: no I/O under it
         return got
 
     def _execute_part(self, pid: int, worker: int) -> None:
@@ -601,10 +622,25 @@ class QueryEngine:
         rows to the futures.  Pure + idempotent: a helper re-executing an
         orphan recomputes identical rows."""
         with self._cv:
-            batch = self._batches.get(pid)
-            if batch is None or self._journal.is_done(pid):
+            if self._journal.is_done(pid):
                 return
-            snap = self._snapshots[batch.epoch]
+            batch = self._batches.get(pid)
+            if batch is None:
+                # Unfinished in the journal yet no in-memory batch: the
+                # part was reloaded from a crashed process — its batch
+                # and futures died there, so nothing can ever be
+                # delivered.  Retire it, or force_help would re-steal it
+                # every iteration and flush() / a sync-mode result()
+                # would livelock.  __init__ already retires reloaded
+                # parts; this guard keeps the invariant local.
+                self._journal.discard(pid)
+                self._journal.prune_done()
+                jstate = self._journal.snapshot()
+            else:
+                snap = self._snapshots[batch.epoch]
+        if batch is None:
+            self._journal.persist(jstate)
+            return
         # mid-flight window (no locks held): a worker stalled or crashed
         # anywhere from here to the delivery block below leaves an
         # orphaned part any helper can re-execute — the checker's
@@ -635,9 +671,10 @@ class QueryEngine:
             # release the done prefix so journal scans and memory stay
             # O(in-flight batches) on an endless request stream
             self._journal.prune_done()
+            jstate = self._journal.snapshot()
             self._gc_snapshots()
             self._cv.notify_all()
-        self._journal.persist()          # durability flush outside _cv
+        self._journal.persist(jstate)    # durability flush outside _cv
 
     def _gc_snapshots(self) -> None:
         live = {self._epoch}

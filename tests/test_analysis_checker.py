@@ -3,7 +3,9 @@ scenarios over the real executor/journal/engine, lock-freedom under
 permanent stalls, seeded-bug meta-tests, and regression tests for the
 concurrency fixes the checker motivated (journal persistence moved
 outside _cv, snapshot capture moved outside _cv, flush able to rescue
-parts orphaned by a stalled helper)."""
+parts orphaned by a stalled helper, crash-reloaded journal parts retired
+instead of livelocking flush, deferred persists flushing the state
+captured under _cv rather than reading the live journal)."""
 
 import subprocess
 import sys
@@ -185,6 +187,109 @@ def test_regression_real_index_lock_discipline():
     assert events, "expected persist/delta_cat events to fire"
     under_cv = [n for n, held in events if held]
     assert not under_cv, f"blocking work under _cv: {under_cv}"
+
+
+def test_regression_flush_retires_batchless_journal_parts():
+    """An unfinished journal part with no in-memory batch (the shape a
+    crash-reloaded journal produces) can never be executed or marked
+    done; flush() must retire it and terminate.  The pre-fix engine
+    livelocked: _execute_part returned without mark_done and force_help
+    re-stole the same HELPER_ID-owned part every iteration."""
+    from repro.serve.engine import EngineConfig, QueryEngine
+    rng = np.random.RandomState(3)
+    eng = QueryEngine(StubIndex(rng.randn(5, 8).astype(np.float32)),
+                      EngineConfig(workers=0, help_after_ms=0.0))
+    eng.plans = StubPlans()
+    eng._journal.add_part()                 # a part nobody holds a batch for
+    done = threading.Event()
+    t = threading.Thread(target=lambda: (eng.flush(), done.set()),
+                         daemon=True)
+    t.start()
+    t.join(timeout=10)
+    assert done.is_set(), "flush() livelocked on a batchless journal part"
+    assert eng._journal.all_done()
+    # the engine still serves normally afterwards
+    fut = eng.submit(rng.randn(1, 8).astype(np.float32), k=1)
+    d, i = fut.result(timeout=10)
+    assert i.shape == (1,)
+
+
+def test_regression_restart_recovers_crashed_journal():
+    """A restarted engine reloading a journal with unfinished parts (the
+    crash-durable path) must retire them at construction — their batches
+    and futures died with the old process — and keep serving.  Pre-fix,
+    flush()/close(drain=True)/sync-mode result() hung forever on exactly
+    this recovery path."""
+    import tempfile
+    from repro.runtime.journal import WorkJournal
+    from repro.serve.engine import EngineConfig, QueryEngine
+    rng = np.random.RandomState(4)
+    with tempfile.TemporaryDirectory() as tmp:
+        path = str(Path(tmp) / "j.json")
+        crashed = WorkJournal(path, n_parts=0, autopersist=False)
+        crashed.add_part()                  # dispatched, in flight
+        crashed.add_part()                  # dispatched, never started
+        crashed.acquire(0)
+        crashed.persist()
+        eng = QueryEngine(StubIndex(rng.randn(5, 8).astype(np.float32)),
+                          EngineConfig(workers=0, help_after_ms=0.0,
+                                       journal_path=path))
+        eng.plans = StubPlans()
+        done = threading.Event()
+        t = threading.Thread(target=lambda: (eng.flush(), done.set()),
+                             daemon=True)
+        t.start()
+        t.join(timeout=10)
+        assert done.is_set(), "flush() livelocked on crash-reloaded parts"
+        fut = eng.submit(rng.randn(1, 8).astype(np.float32), k=1)
+        d, i = fut.result(timeout=10)       # sync mode drives the dispatch
+        assert i.shape == (1,)
+        eng.close()
+        # the retirement is durable: a second restart sees everything done
+        reloaded = WorkJournal(path, n_parts=0)
+        assert reloaded.n_parts == 3
+        assert all(reloaded.is_done(p) for p in range(3))
+
+
+def test_regression_deferred_persist_writes_capture_time_state():
+    """A deferred persist() racing journal mutators must flush the state
+    captured AT THE CALL, never a later mix: the pre-fix _write read
+    base/n_parts/parts live from the journal while other threads mutated
+    it under the engine lock, so the file could misalign part states
+    with their global ids (a live part reported done after reload)."""
+    import tempfile
+    from repro.runtime.journal import WorkJournal
+    in_write, resume = threading.Event(), threading.Event()
+
+    class StallWrite(SyncHook):
+        def observe(self, name, obj):
+            if name == "journal.persist":
+                in_write.set()
+                resume.wait(10)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        path = str(Path(tmp) / "j.json")
+        j = WorkJournal(path, n_parts=0, autopersist=False)
+        for _ in range(3):
+            j.add_part()
+        j.acquire(0)
+        j.mark_done(0)
+        with installed(StallWrite()):
+            t = threading.Thread(target=j.persist, daemon=True)
+            t.start()
+            assert in_write.wait(10)
+            # racing mutators advance the journal while the write is in
+            # flight (in the engine these run under _cv; the write does
+            # not, which is the race)
+            j.prune_done()
+            j.acquire(1)
+            j.mark_done(1)
+            resume.set()
+            t.join(10)
+        got = WorkJournal(path, n_parts=0)
+    # the file reflects persist-call time: part 0 done, 1 and 2 not
+    assert got._base == 0 and got.n_parts == 3
+    assert got.is_done(0) and not got.is_done(1) and not got.is_done(2)
 
 
 # ------------------------------------------------------------------- CLI

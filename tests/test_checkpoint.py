@@ -107,6 +107,55 @@ def test_journal_helping_after_backoff(tmp_path):
     assert j.stats()["helped"] == 1
 
 
+def test_journal_snapshot_is_isolated_copy(tmp_path):
+    """snapshot() captures a deep copy: mutations made after the capture
+    (by, in the engine, threads still holding _cv) never leak into a
+    deferred persist of that snapshot."""
+    p = str(tmp_path / "j.json")
+    j = WorkJournal(p, 3, autopersist=False)
+    j.acquire(0)
+    j.mark_done(0)
+    state = j.snapshot()
+    j.acquire(1)
+    j.mark_done(1)
+    j.prune_done()
+    j.persist(state)
+    got = WorkJournal(p, 3)
+    assert got._base == 0
+    assert got.parts[0].done
+    assert not got.parts[1].done and not got.parts[2].done
+
+
+def test_journal_persist_drops_stale_snapshots(tmp_path):
+    """A delayed write of an OLDER snapshot must not regress the file
+    past a newer one (the seq guard on out-of-order deferred flushes)."""
+    p = str(tmp_path / "j.json")
+    j = WorkJournal(p, 2, autopersist=False)
+    j.acquire(0)
+    j.mark_done(0)
+    older = j.snapshot()
+    j.acquire(1)
+    j.mark_done(1)
+    newer = j.snapshot()
+    j.persist(newer)
+    j.persist(older)        # a slower thread's write arrives late: dropped
+    got = WorkJournal(p, 2)
+    assert got.parts[0].done and got.parts[1].done
+
+
+def test_journal_discard_retires_without_stats(tmp_path):
+    """discard() marks a part done without executing it and without
+    feeding its wall-clock age into the T_avg helping estimate."""
+    p = str(tmp_path / "j.json")
+    j = WorkJournal(p, 2)
+    j.acquire(0)
+    j.discard(0)
+    assert j.is_done(0)
+    assert j.stats()["t_avg"] == 0.0
+    j2 = WorkJournal(p, 2)          # the retirement is durable
+    assert j2.parts[0].done and not j2.parts[1].done
+
+
 def test_journal_all_done_flow():
     j = WorkJournal(None, 5)
     while True:
