@@ -5,7 +5,9 @@
 # a 2-figure benchmark subset (fig3 query + fig5 scaling, both kernel
 # backends) PLUS the serving legs (--serve-quick: local QueryEngine and
 # the SHARDED engine on a forced 2-device host mesh, both driven by a
-# Poisson arrival stream) AND the build-pipeline leg (--build-quick:
+# Poisson arrival stream, plus the overload sweep — bounded admission
+# vs unbounded baseline at 0.5x-3x saturation) AND the build-pipeline
+# leg (--build-quick:
 # IndexBuilder single-shot vs multi-worker vs crash-injected, compact
 # merge vs rebuild) at --quick scale, emitting the machine-readable
 # BENCH_fresh.json perf record with p50/p99 latency + QPS rows.
@@ -93,6 +95,32 @@ for r in serve:
     for key in ("p50_us", "p99_us", "qps"):
         assert key in r, (r["name"], key)
 assert any(r["name"] == "serve/warmup_aot_compile" for r in rows)
+# overload sweep: bounded admission keeps admitted-query p99 and goodput
+# flat past the saturation knee (noise-tolerant bounds: the strict
+# within-20% claim is for quiet hardware; see EXPERIMENTS.md §Serving)
+# while the unbounded baseline's p99 diverges with offered load
+ov = {r["name"]: r for r in rows
+      if r["name"].startswith("serve/overload/")}
+for name in ("serve/overload/bounded/x0.5", "serve/overload/bounded/x1.0",
+             "serve/overload/bounded/x2.0", "serve/overload/bounded/x3.0",
+             "serve/overload/unbounded/x1.0",
+             "serve/overload/unbounded/x3.0", "serve/overload/cached/x3.0"):
+    assert name in ov, f"missing {name} row"
+    for key in ("goodput_qps", "shed_rate", "p99_us", "delivered"):
+        assert key in ov[name], (name, key)
+b1, b3 = ov["serve/overload/bounded/x1.0"], ov["serve/overload/bounded/x3.0"]
+u3 = ov["serve/overload/unbounded/x3.0"]
+assert b3["p99_us"] <= 1.5 * b1["p99_us"], (
+    "bounded p99 not flat past the knee", b1["p99_us"], b3["p99_us"])
+assert b3["goodput_qps"] >= 0.6 * b1["goodput_qps"], (
+    "bounded goodput collapsed past the knee",
+    b1["goodput_qps"], b3["goodput_qps"])
+assert b3["shed_rate"] > 0.2, ("3x overload must shed", b3["shed_rate"])
+assert u3["shed_rate"] == 0 and u3["p99_us"] > 1.5 * b3["p99_us"], (
+    "unbounded baseline p99 must diverge above bounded",
+    u3["p99_us"], b3["p99_us"])
+assert "cache_hits=0" not in ov["serve/overload/cached/x3.0"]["derived"], (
+    "cached overload leg recorded no cache hits")
 # build pipeline rows: single-shot vs builder vs crash-injected, plus
 # compact incremental-merge vs full-rebuild (merge must win)
 by_name = {r["name"]: r for r in rows}
@@ -105,7 +133,9 @@ merge = by_name["build/compact/merge"]["us_per_call"]
 rebuild = by_name["build/compact/rebuild"]["us_per_call"]
 assert merge < rebuild, (merge, rebuild)
 print(f"BENCH_fresh.json OK: {len(rows)} rows; fig3+fig5 both backends, "
-      f"serve p50/p99/QPS, build pipeline+compact rows present "
-      f"(merge {rebuild/merge:.2f}x faster than rebuild)")
+      f"serve p50/p99/QPS, overload sweep (bounded p99 "
+      f"{b3['p99_us']/b1['p99_us']:.2f}x 1x->3x, unbounded "
+      f"{u3['p99_us']/b3['p99_us']:.2f}x above), build pipeline+compact "
+      f"rows present (merge {rebuild/merge:.2f}x faster than rebuild)")
 EOF
 validate_sharded_rows

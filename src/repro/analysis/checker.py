@@ -23,7 +23,12 @@ interleaving:
                   still finish everything — no deadlock, no livelock;
   lock discipline blocking work (journal file persistence, host->device
                   delta transfer) never runs while the engine's _cv or
-                  _wlock is held.
+                  _wlock is held;
+  overload        a shed or deadline-expired future terminates exactly
+                  once — never both shed AND delivered, never stranded —
+                  and a result-cache entry never serves rows from a
+                  different epoch than its key (hits == the oracle over
+                  the key epoch's data).
 
 Engine scenarios run the real QueryEngine over a stub index + stub plan
 cache (pure-numpy brute force): every schedule then costs milliseconds,
@@ -59,7 +64,8 @@ from .schedules import (ControlledScheduler, DFSStrategy, RandomStrategy,
 __all__ = ["ExploreReport", "Scenario", "StubIndex", "StubPlans",
            "TrackedCondition", "TrackedLock", "engine_scenario",
            "explore", "journal_scenario", "main", "make_portfolio",
-           "refresh_scenario", "snapshot_fingerprint", "stub_topk"]
+           "overload_scenario", "refresh_scenario",
+           "snapshot_fingerprint", "stub_topk"]
 
 
 # ------------------------------------------------------------------ stubs
@@ -640,6 +646,227 @@ class EngineScenario(Scenario):
         return v
 
 
+OVERLOAD_PARK = ENGINE_PARK + ("engine.shed",)
+
+
+class OverloadScenario(Scenario):
+    """Real QueryEngine under admission pressure: a tiny max_pending
+    budget, mixed interactive/batch priorities, deadlines, and the
+    epoch-keyed result cache, with a writer racing epoch publishes.
+
+    Invariants (the overload additions to the catalog):
+
+    * TERMINATE-EXACTLY-ONCE — every future observed anywhere ends in
+      exactly one terminal event: delivered-complete, OR failed
+      (AdmissionError / DeadlineExceeded).  Never both shed AND
+      delivered, never zero (a stranded caller), never double.
+    * CACHE-EPOCH COHERENCE — every cache fill and every cache hit
+      serves rows equal to the brute-force oracle over the data of the
+      EPOCH IN ITS KEY; a hit's epoch always equals the future's bound
+      epoch.  Cross-epoch contamination cannot hide.
+    * counter conservation — engine shed/evicted/expired counters match
+      the observed terminal failure events by type.
+    * bit-identity across schedules for delivered hot-query results per
+      (epoch, k) — a cache hit is indistinguishable from cold execution.
+    * the same lock-discipline probes as EngineScenario.
+    """
+
+    def __init__(self, name: str = "overload",
+                 max_pending: int = 3, cache_entries: int = 8):
+        self.name = name
+        self.park_on = OVERLOAD_PARK
+        self.max_pending = max_pending
+        self.cache_entries = cache_entries
+        self._identity: Dict[Tuple, Tuple[bytes, bytes]] = {}
+        rng = np.random.RandomState(11)
+        self.base = rng.randn(6, 8).astype(np.float32)
+        self.qh = rng.randn(1, 8).astype(np.float32)   # hot (cacheable)
+        self.qb = rng.randn(2, 8).astype(np.float32)   # batch priority
+        self.qd = rng.randn(1, 8).astype(np.float32)   # deadline-stamped
+        self.extra = rng.randn(2, 8).astype(np.float32)
+
+    def setup(self):
+        from repro.serve.engine import EngineConfig, QueryEngine
+        ix = StubIndex(self.base)
+        eng = QueryEngine(ix, EngineConfig(
+            workers=0, linger_ms=0.0, help_after_ms=0.0, max_batch=4,
+            max_pending=self.max_pending,
+            cache_entries=self.cache_entries))
+        eng.plans = StubPlans()
+        cv = TrackedCondition(eng._cv)
+        wl = TrackedLock(eng._wlock)
+        eng._cv = cv
+        eng._wlock = wl
+        return {
+            "eng": eng, "cv": cv, "wl": wl,
+            "hot": [],                  # delivered-path futures to verify
+            "all_futs": {},             # id -> fut (keeps ids stable)
+            "completions": {},          # id -> completed-True count
+            "failures": {},             # id -> {exc_name: count}
+            "pub": {0: self.base.copy()},
+            "cache_fills": [],          # (epoch, k, q, d, i)
+            "cache_hits": [],           # (fut, epoch, k, q, d, i)
+            "lock_violations": [],
+        }
+
+    def observer(self, ctx):
+        cv, wl = ctx["cv"], ctx["wl"]
+
+        def remember(fut) -> int:
+            ctx["all_futs"][id(fut)] = fut
+            return id(fut)
+
+        def obs(name: str, obj: Any) -> None:
+            if name == "journal.persist" and (cv.held() or wl.held()):
+                where = "_cv" if cv.held() else "_wlock"
+                ctx["lock_violations"].append(f"{name} while {where} held")
+            elif name == "index.delta_cat" and cv.held():
+                ctx["lock_violations"].append(f"{name} while _cv held")
+            elif name == "engine.publish":
+                ctx["pub"][obj.epoch] = np.concatenate(
+                    [np.asarray(obj.core.series)]
+                    + ([np.asarray(obj.delta)]
+                       if obj.delta is not None else []), axis=0).copy()
+            elif name == "engine.future.fill":
+                fut, src, n, completed = obj
+                fid = remember(fut)
+                if completed:
+                    c = ctx["completions"]
+                    c[fid] = c.get(fid, 0) + 1
+            elif name == "engine.future.fail":
+                fut, exc_name, failed = obj
+                fid = remember(fut)
+                if failed:
+                    f = ctx["failures"].setdefault(fid, {})
+                    f[exc_name] = f.get(exc_name, 0) + 1
+            elif name == "engine.cache.fill":
+                key, epoch, k, q, d, i = obj
+                ctx["cache_fills"].append(
+                    (epoch, k, q.copy(), d.copy(), i.copy()))
+            elif name == "engine.cache.hit":
+                fut, epoch, k, q, d, i = obj
+                remember(fut)
+                ctx["cache_hits"].append(
+                    (fut, epoch, k, q.copy(), d.copy(), i.copy()))
+        return obs
+
+    # ----------------------------------------------------------- threads
+    def _hot(self, ctx) -> None:
+        from repro.serve.engine import AdmissionError
+        eng = ctx["eng"]
+        for _ in range(2):              # second submit may hit the cache
+            try:
+                ctx["hot"].append(eng.submit(self.qh, k=2))
+            except AdmissionError:
+                pass
+            eng.flush()
+
+    def _batch_client(self, ctx) -> None:
+        from repro.serve.engine import AdmissionError
+        eng = ctx["eng"]
+        try:
+            eng.submit(self.qb, k=1, priority="batch")
+        except AdmissionError:
+            pass
+        eng.flush()
+
+    def _deadline_client(self, ctx) -> None:
+        from repro.serve.engine import AdmissionError
+        eng = ctx["eng"]
+        try:                            # expires before any form() runs
+            eng.submit(self.qd, k=1, deadline_ms=1e-3)
+        except AdmissionError:
+            pass
+        try:                            # never expires
+            eng.submit(self.qd, k=1, deadline_ms=60_000.0)
+        except AdmissionError:
+            pass
+        eng.flush()
+
+    def threads(self, ctx):
+        return [("hot", lambda: self._hot(ctx)),
+                ("batch", lambda: self._batch_client(ctx)),
+                ("ddl", lambda: self._deadline_client(ctx)),
+                ("add", lambda: ctx["eng"].add(self.extra)),
+                ("flush", lambda: ctx["eng"].flush())]
+
+    def finish(self, ctx, result):
+        ctx["eng"].flush()              # uncontrolled drain
+
+    # ------------------------------------------------------------ checks
+    def check(self, ctx, result):
+        eng = ctx["eng"]
+        v = list(ctx["lock_violations"])
+        # terminate-exactly-once: delivered XOR failed, exactly one
+        for fid, fut in ctx["all_futs"].items():
+            comp = ctx["completions"].get(fid, 0)
+            nfail = sum(ctx["failures"].get(fid, {}).values())
+            if comp and nfail:
+                v.append(f"future both delivered ({comp}) and "
+                         f"shed/expired ({nfail})")
+            elif comp + nfail > 1:
+                v.append(f"future terminated {comp + nfail} times")
+            elif comp + nfail == 0 and fut.done():
+                v.append("future done() with no terminal event observed")
+            elif not fut.done():
+                v.append(f"stranded caller: future never terminated "
+                         f"(stalled={result.stalled})")
+        # cache-epoch coherence: rows == oracle over the KEY's epoch
+        for epoch, k, q, d, i in ctx["cache_fills"]:
+            data = ctx["pub"].get(epoch)
+            if data is None:
+                v.append(f"cache fill keyed to unpublished epoch {epoch}")
+                continue
+            d_exp, i_exp = stub_topk(q[None], data, k)
+            if not (np.array_equal(d, d_exp[0])
+                    and np.array_equal(i, i_exp[0])):
+                v.append(f"cache fill rows != epoch-{epoch} oracle")
+        for fut, epoch, k, q, d, i in ctx["cache_hits"]:
+            if epoch != fut.epoch:
+                v.append(f"cache hit served epoch {epoch} to a future "
+                         f"bound to epoch {fut.epoch}")
+            data = ctx["pub"].get(epoch)
+            if data is None:
+                v.append(f"cache hit keyed to unpublished epoch {epoch}")
+                continue
+            d_exp, i_exp = stub_topk(q[None], data, k)
+            if not (np.array_equal(d, d_exp[0])
+                    and np.array_equal(i, i_exp[0])):
+                v.append(f"cache hit rows != epoch-{epoch} oracle "
+                         f"(cross-epoch contamination)")
+        # counter conservation vs observed terminal failures by type
+        adm = sum(f.get("AdmissionError", 0)
+                  for f in ctx["failures"].values())
+        ddl = sum(f.get("DeadlineExceeded", 0)
+                  for f in ctx["failures"].values())
+        if eng._shed + eng._evicted_batch != adm:
+            v.append(f"shed counters {eng._shed}+{eng._evicted_batch} != "
+                     f"{adm} observed AdmissionError terminations")
+        if eng._deadline_expired != ddl:
+            v.append(f"deadline_expired={eng._deadline_expired} != "
+                     f"{ddl} observed DeadlineExceeded terminations")
+        # delivered hot results: oracle + bit-identity across schedules
+        for fut in ctx["hot"]:
+            if ctx["failures"].get(id(fut)):
+                continue
+            data = ctx["pub"].get(fut.epoch)
+            if data is None:
+                v.append(f"hot future bound to unpublished epoch "
+                         f"{fut.epoch}")
+                continue
+            d_exp, i_exp = stub_topk(self.qh, data, fut.k)
+            if not (np.array_equal(fut._d, d_exp)
+                    and np.array_equal(fut._i, i_exp)):
+                v.append(f"hot result != oracle for epoch {fut.epoch}")
+            key = (fut.epoch, fut.k)
+            sig = (fut._d.tobytes(), fut._i.tobytes())
+            prev = self._identity.setdefault(key, sig)
+            if prev != sig:
+                v.append(f"bit-identity broken across schedules for "
+                         f"epoch {fut.epoch} (cache hit != cold run?)")
+        return v
+
+
 # shortcut constructors (importable names for tests / portfolio)
 def refresh_scenario(**kw) -> RefreshScenario:
     return RefreshScenario(**kw)
@@ -651,6 +878,10 @@ def journal_scenario(**kw) -> JournalScenario:
 
 def engine_scenario(**kw) -> EngineScenario:
     return EngineScenario(**kw)
+
+
+def overload_scenario(**kw) -> OverloadScenario:
+    return OverloadScenario(**kw)
 
 
 # ---------------------------------------------------------------- driver
@@ -747,14 +978,18 @@ def make_portfolio(budget: int, seed: int = 0,
          RandomStrategy(seed=seed + 2), int(b * 0.10)),
         ("engine.race",
          EngineScenario(name="engine.race", auto_compact=2),
-         RandomStrategy(seed=seed + 3), int(b * 0.14)),
+         RandomStrategy(seed=seed + 3), int(b * 0.13)),
         ("engine.lockfree",
          EngineScenario(name="engine.lockfree", lockfree=True),
          RandomStrategy(seed=seed + 4, p_stall=0.35,
-                        stall_points=ENGINE_STALL), int(b * 0.09)),
+                        stall_points=ENGINE_STALL), int(b * 0.08)),
         ("engine.durable",
          EngineScenario(name="engine.durable", journal_dir=journal_dir),
          RandomStrategy(seed=seed + 5), int(b * 0.03)),
+        ("engine.overload",
+         OverloadScenario(name="engine.overload"),
+         RandomStrategy(seed=seed + 6, p_stall=0.15,
+                        stall_points=ENGINE_STALL), int(b * 0.07)),
     ]
     return mix
 

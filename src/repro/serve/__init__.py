@@ -14,19 +14,32 @@ snapshot-consistent concurrent inserts.
         print(engine.stats())              # p50/p99, epoch lag, hit rate
 
 Module map: `engine` (QueryEngine/futures/epoch snapshots), `batcher`
-(shape-bucketed padding), `plan_cache` (jit lower/compile AOT plans).
-The compute itself lives in `repro.core.search` — the engine executes
-the exact same `search_plan` / `snapshot_search` programs the
-`FreshIndex` facade dispatches through.
+(shape-bucketed padding), `plan_cache` (jit lower/compile AOT plans),
+`result_cache` (epoch-keyed LRU over delivered rows).  The compute
+itself lives in `repro.core.search` — the engine executes the exact
+same `search_plan` / `snapshot_search` programs the `FreshIndex`
+facade dispatches through.
+
+Overload behavior is opt-in and typed: `EngineConfig.max_pending`
+bounds admission (AdmissionError, batch priority shed first),
+`submit(deadline_ms=...)` bounds queueing (DeadlineExceeded), and
+`result(timeout=...)` raises ResultTimeout while leaving the future
+completable — see docs/SERVING.md "Overload & degradation".
 """
 
-from .batcher import Batch, MicroBatcher, Pending, bucket_for, shape_buckets
-from .engine import EngineConfig, QueryEngine, SearchFuture, Snapshot
+from .batcher import (Batch, MicroBatcher, Pending, bucket_for,
+                      earliest_deadline, shape_buckets)
+from .engine import (AdmissionError, DeadlineExceeded, EngineConfig,
+                     QueryEngine, ResultTimeout, SearchFuture, Snapshot)
 from .plan_cache import (CompiledPlan, Knobs, PlanCache,
                          ShardedCompiledPlan)
+from .result_cache import ResultCache, query_fingerprint
 
 __all__ = [
-    "Batch", "MicroBatcher", "Pending", "bucket_for", "shape_buckets",
-    "EngineConfig", "QueryEngine", "SearchFuture", "Snapshot",
+    "Batch", "MicroBatcher", "Pending", "bucket_for",
+    "earliest_deadline", "shape_buckets",
+    "AdmissionError", "DeadlineExceeded", "EngineConfig", "QueryEngine",
+    "ResultTimeout", "SearchFuture", "Snapshot",
     "CompiledPlan", "Knobs", "PlanCache", "ShardedCompiledPlan",
+    "ResultCache", "query_fingerprint",
 ]

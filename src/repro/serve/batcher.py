@@ -52,12 +52,35 @@ def bucket_for(n: int, buckets: Sequence[int]) -> int:
 
 @dataclasses.dataclass
 class Pending:
-    """One submit() call waiting to be batched."""
+    """One submit() call (or the cache-missed slice of one) waiting to
+    be batched.
+
+    `row0` is the first row of `future` these queries correspond to: a
+    submit whose leading rows were served from the result cache enqueues
+    only the missed run, and form() offsets the segment map by `row0` so
+    delivery still lands in the right future rows.  `deadline` is an
+    absolute `time.monotonic()` instant (None = wait forever); the
+    engine fails pendings past it with DeadlineExceeded instead of
+    forming them, and its linger loop dispatches early rather than
+    lingering past the earliest deadline."""
     queries: np.ndarray                 # (m, L) float32
     k: int
     epoch: int
     future: object                      # SearchFuture
     submitted_at: float
+    deadline: Optional[float] = None    # absolute monotonic, None = never
+    row0: int = 0                       # first future row of this slice
+    priority: str = "interactive"       # admission class; batch sheds first
+
+
+def earliest_deadline(pending: Sequence[Pending]) -> Optional[float]:
+    """The soonest absolute deadline in `pending` (None when none set).
+
+    The engine's linger loop caps its bucket-fill wait at this instant
+    so a nearly-due query dispatches in a partial bucket instead of
+    expiring while the batcher waits for padding to fill."""
+    ddls = [p.deadline for p in pending if p.deadline is not None]
+    return min(ddls) if ddls else None
 
 
 @dataclasses.dataclass
@@ -91,13 +114,27 @@ class MicroBatcher:
         self.max_batch = max_batch
         self.buckets = tuple(buckets) if buckets else shape_buckets(max_batch)
 
-    def form(self, pending: Sequence[Pending]) -> List[Batch]:
-        """Group by (epoch, k) in arrival order, chunk, pad to buckets."""
+    def form(self, pending: Sequence[Pending],
+             now: Optional[float] = None) -> List[Batch]:
+        """Group by (epoch, k) in arrival order, chunk, pad to buckets.
+
+        Deadline semantics: a pending whose `deadline` has passed `now`
+        is dropped here (never formed) — the engine fails its future
+        with DeadlineExceeded *before* calling form(), so the skip is a
+        belt-and-braces guard against racing clocks, not the primary
+        expiry path.  Live deadlines don't change grouping: closing a
+        bucket early happens in the engine's linger loop (which stops
+        waiting for padding at `earliest_deadline`), because by the time
+        form() runs the decision to dispatch now has already been made.
+        """
+        if now is None:
+            now = time.monotonic()
+        pending = [p for p in pending
+                   if p.deadline is None or p.deadline > now]
         groups: Dict[Tuple[int, int], List[Pending]] = {}
         for p in pending:
             groups.setdefault((p.epoch, p.k), []).append(p)
 
-        now = time.monotonic()
         batches: List[Batch] = []
         for (epoch, k), items in groups.items():
             rows: List[np.ndarray] = []
@@ -121,7 +158,7 @@ class MicroBatcher:
                 m = p.queries.shape[0]
                 while src < m:
                     take = min(self.max_batch - n, m - src)
-                    segments.append((p.future, n, src, take))
+                    segments.append((p.future, n, p.row0 + src, take))
                     rows.append(p.queries[src:src + take])
                     n += take
                     src += take

@@ -59,15 +59,42 @@ from repro.runtime import WorkJournal
 from repro.runtime.elastic import plan_serving_mesh
 from repro.runtime.sharding import mesh_sig
 
-from .batcher import Batch, MicroBatcher, Pending, shape_buckets
+from .batcher import (Batch, MicroBatcher, Pending, earliest_deadline,
+                      shape_buckets)
 from .plan_cache import Knobs, PlanCache
+from .result_cache import ResultCache, query_fingerprint
 
 _BACKENDS = (None, "ref", "pallas")
+_PRIORITIES = ("interactive", "batch")
+_OVERFLOW_POLICIES = ("shed", "deadline")
 
 # Journal owner id used by helping callers (flush / a blocked result()).
 # Must be >= 0: WorkJournal treats owner < 0 as "unowned", so a negative
 # helper id would leave helped parts re-acquirable by live workers.
 HELPER_ID = 1 << 30
+
+
+class AdmissionError(RuntimeError):
+    """A submit was shed by admission control: the pending-queue budget
+    (`EngineConfig.max_pending` / `max_pending_per_class`) was exhausted
+    and the overflow policy is "shed" — or a queued batch-priority
+    submit was evicted to make room for an interactive one.  The query
+    was never enqueued (or was removed before forming); resubmit later
+    or at lower offered load."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A submitted query expired in the pending queue: its
+    `deadline_ms` passed before the micro-batcher formed it into a
+    dispatch.  The future is terminally failed — `result()` raises this
+    instead of stranding the caller — and the query never executed."""
+
+
+class ResultTimeout(TimeoutError):
+    """`SearchFuture.result(timeout=...)` gave up waiting.  Unlike
+    AdmissionError/DeadlineExceeded this is NOT a terminal state: the
+    future stays registered and completable, and a later worker, helper
+    or `result()` call can still deliver the rows."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +127,31 @@ class EngineConfig:
     sync_every      SHARDED serving only: refinement rounds between the
                     all-reduce-min that publishes the global k-th bound
                     (expeditive -> standard cadence); local plans ignore it
+    max_pending     admission budget: total queued query ROWS (across
+                    both priority classes) a submit may not push past.
+                    Over budget, batch-priority pendings are evicted
+                    first to admit interactive work; what still does not
+                    fit is handled per overflow_policy.  None (default)
+                    = unbounded queue (the pre-admission behavior)
+    max_pending_per_class
+                    optional {"interactive": n, "batch": n} per-class
+                    row budgets checked before the shared max_pending;
+                    classes absent from the mapping are uncapped
+    overflow_policy "shed": an over-budget submit raises AdmissionError
+                    immediately (never enqueued).  "deadline": it is
+                    admitted anyway but stamped with a deadline of at
+                    most overflow_deadline_ms, so it either dispatches
+                    promptly or expires with DeadlineExceeded — the
+                    queue stays bounded in time instead of in space
+    overflow_deadline_ms
+                    the deadline stamped on over-budget submits under
+                    overflow_policy="deadline" (tightened to the
+                    submit's own deadline_ms when that is sooner)
+    cache_entries   capacity (in rows) of the epoch-keyed result cache
+                    consulted before batching; 0 (default) disables it.
+                    Entries are keyed by (query-hash, epoch, k, knobs),
+                    so every add()/compact()/recover() invalidates for
+                    free by advancing the epoch
     round_leaves / pq_budget / max_rounds / backend
                     per-engine search-knob overrides; None defers to the
                     index's IndexConfig (max_rounds: exact search)
@@ -114,6 +166,11 @@ class EngineConfig:
     journal_path: Optional[str] = None
     auto_compact_rows: Optional[int] = None
     sync_every: int = 1
+    max_pending: Optional[int] = None
+    max_pending_per_class: Optional[dict] = None
+    overflow_policy: str = "shed"
+    overflow_deadline_ms: float = 50.0
+    cache_entries: int = 0
     round_leaves: Optional[int] = None
     pq_budget: Optional[int] = None
     max_rounds: Optional[int] = None
@@ -122,6 +179,25 @@ class EngineConfig:
     def __post_init__(self):
         if self.max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if self.max_pending is not None and self.max_pending < 1:
+            raise ValueError("max_pending must be >= 1 or None")
+        if self.max_pending_per_class is not None:
+            for cls, cap in self.max_pending_per_class.items():
+                if cls not in _PRIORITIES:
+                    raise ValueError(
+                        f"max_pending_per_class keys must be in "
+                        f"{_PRIORITIES}, got {cls!r}")
+                if cap < 1:
+                    raise ValueError(
+                        f"max_pending_per_class[{cls!r}] must be >= 1")
+        if self.overflow_policy not in _OVERFLOW_POLICIES:
+            raise ValueError(f"overflow_policy must be one of "
+                             f"{_OVERFLOW_POLICIES}, got "
+                             f"{self.overflow_policy!r}")
+        if self.overflow_deadline_ms <= 0:
+            raise ValueError("overflow_deadline_ms must be > 0")
+        if self.cache_entries < 0:
+            raise ValueError("cache_entries must be >= 0")
         if self.auto_compact_rows is not None and self.auto_compact_rows < 1:
             raise ValueError("auto_compact_rows must be >= 1 or None")
         if self.sync_every < 1:
@@ -196,15 +272,21 @@ class SearchFuture:
         self._d = np.empty((n_rows, k), np.float32)
         self._i = np.empty((n_rows, k), np.int32)
         self._filled = np.zeros((n_rows,), bool)
+        self._error: Optional[Exception] = None
         self._lock = threading.Lock()
         self._event = threading.Event()
 
     def _fill(self, src: int, d_rows: np.ndarray, i_rows: np.ndarray,
               now: float) -> bool:
-        """Deliver rows [src, src+n).  True exactly once: on completion."""
+        """Deliver rows [src, src+n).  True exactly once: on completion.
+        A future already terminally failed (_fail) absorbs nothing — a
+        shed or expired query can never ALSO be delivered."""
         completed = False
         with self._lock:
             n = d_rows.shape[0]
+            if self._error is not None:
+                observe("engine.future.fill", (self, src, n, False))
+                return False
             self._d[src:src + n] = d_rows
             self._i[src:src + n] = i_rows
             self._filled[src:src + n] = True
@@ -215,8 +297,25 @@ class SearchFuture:
         observe("engine.future.fill", (self, src, n, completed))
         return completed
 
+    def _fail(self, exc: Exception, now: float) -> bool:
+        """Terminally fail the future (shed / deadline-expired): result()
+        raises `exc` instead of returning rows.  True exactly once — a
+        future that already completed (or already failed) is untouched,
+        so a delivered query can never ALSO be shed."""
+        failed = False
+        with self._lock:
+            if not self._event.is_set():
+                self._error = exc
+                self.completed_at = now
+                self._event.set()
+                failed = True
+        observe("engine.future.fail",
+                (self, type(exc).__name__, failed))
+        return failed
+
     def done(self) -> bool:
-        """True once every row of this future has been delivered."""
+        """True once the future has terminated: every row delivered, or
+        terminally failed (shed / deadline-expired)."""
         return self._event.is_set()
 
     def result(self, timeout: Optional[float] = None
@@ -224,21 +323,42 @@ class SearchFuture:
         """(dist, ids), shaped exactly like FreshIndex.search: (Q, k),
         with the k dimension squeezed when k == 1.  Blocks; in sync mode
         (workers=0) this drives the dispatch itself, in async mode it
-        waits `help_after_ms` then starts helping via the journal."""
+        waits `help_after_ms` then starts helping via the journal.
+
+        Raises ResultTimeout when `timeout` seconds elapse first — never
+        partial rows — and the future stays completable: a later worker,
+        helper, or result() call can still deliver it.  Raises the
+        terminal AdmissionError / DeadlineExceeded if the engine shed or
+        expired this query."""
         deadline = None if timeout is None else time.monotonic() + timeout
+
+        def _timed_out() -> bool:
+            return deadline is not None and time.monotonic() > deadline
+
         grace = self._engine.config.help_after_ms / 1e3
         if not self._event.is_set():
             if self._engine.has_live_workers():
-                self._event.wait(grace)
+                wait = grace
+                if deadline is not None:
+                    wait = max(0.0, min(grace,
+                                        deadline - time.monotonic()))
+                self._event.wait(wait)
             while not self._event.is_set():
+                if _timed_out():
+                    raise ResultTimeout(
+                        f"search result not ready within {timeout}s "
+                        f"({int(self._filled.sum())}/{len(self._filled)} "
+                        f"rows filled); the future remains completable")
                 self._engine._make_progress()
                 if self._event.wait(0.005):
                     break
-                if deadline is not None and time.monotonic() > deadline:
-                    raise TimeoutError(
+                if _timed_out():
+                    raise ResultTimeout(
                         f"search result not ready within {timeout}s "
                         f"({int(self._filled.sum())}/{len(self._filled)} "
-                        f"rows filled)")
+                        f"rows filled); the future remains completable")
+        if self._error is not None:
+            raise self._error
         if self.k == 1:
             return self._d[:, 0], self._i[:, 0]
         return self._d, self._i
@@ -288,6 +408,9 @@ class QueryEngine:
         self._journal.persist()
         self._batches: dict = {}            # part_id -> Batch (unfinished)
         self._pending: list = []            # [Pending]
+        # epoch-keyed result cache; get/put only under _cv (O(1) work)
+        self._cache = (ResultCache(cfg.cache_entries)
+                       if cfg.cache_entries else None)
         self._epoch = 0
         self._snapshots = {0: self._capture(0)}
         self._closed = False
@@ -300,6 +423,11 @@ class QueryEngine:
         self._padded_slots = 0
         self._compactions = 0
         self._recoveries = 0
+        self._shed = 0                      # submits refused admission
+        self._shed_rows = 0
+        self._evicted_batch = 0             # queued batch submits evicted
+        self._overflow_queued = 0           # admitted-with-deadline submits
+        self._deadline_expired = 0          # futures expired in the queue
         self._first_submit: Optional[float] = None
         self._crashed_workers = 0
         self._crash_hook = None             # test injection: fn(wid, batch)
@@ -477,22 +605,48 @@ class QueryEngine:
     # ------------------------------------------------------------------ #
     # query path
     # ------------------------------------------------------------------ #
-    def submit(self, queries, k: int = 1) -> SearchFuture:
+    def submit(self, queries, k: int = 1, *,
+               priority: str = "interactive",
+               deadline_ms: Optional[float] = None) -> SearchFuture:
         """Enqueue `queries` — one (L,) query or an (m, L) batch — for
         top-`k` search on the CURRENT epoch; returns a SearchFuture.
 
+        `priority` is the admission class ("interactive" or "batch"):
+        when a `max_pending` budget is set, queued batch work is evicted
+        first so interactive work admits.  `deadline_ms` bounds QUEUE
+        time — a query still unformed after that many milliseconds
+        expires and its future raises DeadlineExceeded (a formed batch
+        always completes).  Rows already in the result cache for this
+        epoch are served immediately, bit-identical to a cold plan
+        execution, and consume no admission budget.
+
         Raises:
             ValueError: shape mismatch, empty batch, k < 1 or k beyond
-                the snapshot's series count (mirrors FreshIndex.search).
+                the snapshot's series count (mirrors FreshIndex.search),
+                unknown priority, or deadline_ms <= 0.
             RuntimeError: the engine is closed.
+            AdmissionError: the pending-queue budget is exhausted and
+                overflow_policy is "shed" (the query was never queued).
 
-        Concurrency: a reader; lock-held work is O(1) bookkeeping, so
-        submits never wait on compactions or plan compiles.
+        Concurrency: a reader; lock-held work is O(1) bookkeeping plus
+        O(rows) cache dict lookups and O(evicted) shedding — query
+        hashing runs BEFORE the lock — so submits never wait on
+        compactions or plan compiles.
         """
         q = np.asarray(queries, np.float32)
         if q.ndim == 1:
             q = q[None]
+        if priority not in _PRIORITIES:
+            raise ValueError(f"priority must be one of {_PRIORITIES}, "
+                             f"got {priority!r}")
+        if deadline_ms is not None and deadline_ms <= 0:
+            raise ValueError(f"deadline_ms must be > 0 or None, "
+                             f"got {deadline_ms}")
+        fps = None
+        if self._cache is not None and q.ndim == 2 and q.shape[0] >= 1:
+            fps = [query_fingerprint(row) for row in q]
         sync_point("engine.submit")
+        shed_exc: Optional[Exception] = None
         with self._cv:
             if self._closed:
                 raise RuntimeError("engine is closed")
@@ -509,11 +663,111 @@ class QueryEngine:
                                  f"indexed series")
             now = time.monotonic()
             fut = SearchFuture(self, q.shape[0], k, self._epoch, now)
-            self._pending.append(Pending(q, k, self._epoch, fut, now))
             if self._first_submit is None:
                 self._first_submit = now
-            self._cv.notify_all()
+            # 1. consult the epoch-keyed result cache, row by row
+            missed = list(range(q.shape[0]))
+            if fps is not None:
+                missed = []
+                for r, fp in enumerate(fps):
+                    ent = self._cache.get((fp, self._epoch, k,
+                                           self._knobs))
+                    if ent is None:
+                        missed.append(r)
+                        continue
+                    observe("engine.cache.hit",
+                            (fut, self._epoch, k, q[r], ent[0], ent[1]))
+                    if fut._fill(r, ent[0][None], ent[1][None], now):
+                        self._latencies.append(now - fut.submitted_at)
+                        self._completed += 1
+            if not missed:
+                return fut
+            # 2. admission control over the rows actually enqueued
+            deadline = (None if deadline_ms is None
+                        else now + deadline_ms / 1e3)
+            shed_exc, deadline = self._admit_locked(
+                priority, len(missed), deadline, now)
+            if shed_exc is None:
+                for r0, r1 in _runs(missed):
+                    self._pending.append(Pending(
+                        q[r0:r1], k, self._epoch, fut, now,
+                        deadline=deadline, row0=r0, priority=priority))
+                self._cv.notify_all()
+            else:
+                self._shed += 1
+                self._shed_rows += len(missed)
+                fut._fail(shed_exc, now)
+                observe("engine.shed", (fut, priority, len(missed)))
+        if shed_exc is not None:
+            sync_point("engine.shed")
+            raise shed_exc
         return fut
+
+    def _admit_locked(self, priority: str, rows: int,
+                      deadline: Optional[float], now: float):
+        """Admission decision under _cv.  Returns (exc, deadline): exc
+        is the AdmissionError to shed with (None = admitted), deadline
+        is the possibly-tightened absolute deadline (overflow_policy
+        "deadline" stamps over-budget submits instead of shedding)."""
+        cfg = self.config
+        over = False
+        cls_cap = (cfg.max_pending_per_class or {}).get(priority)
+        if cls_cap is not None:
+            queued_cls = sum(p.queries.shape[0] for p in self._pending
+                             if p.priority == priority)
+            over = queued_cls + rows > cls_cap
+        if not over and cfg.max_pending is not None:
+            queued = sum(p.queries.shape[0] for p in self._pending)
+            if queued + rows > cfg.max_pending:
+                if priority == "interactive":
+                    queued -= self._evict_batch_locked(
+                        queued + rows - cfg.max_pending, now)
+                over = queued + rows > cfg.max_pending
+        if not over:
+            return None, deadline
+        if cfg.overflow_policy == "deadline":
+            cap = now + cfg.overflow_deadline_ms / 1e3
+            self._overflow_queued += 1
+            return None, cap if deadline is None else min(deadline, cap)
+        return AdmissionError(
+            f"pending-queue budget exhausted ({rows} rows refused, "
+            f"priority={priority!r}, max_pending={cfg.max_pending}, "
+            f"per_class={cfg.max_pending_per_class})"), deadline
+
+    def _evict_batch_locked(self, need: int, now: float) -> int:
+        """Evict queued batch-priority submits (newest first — least
+        time invested) to free >= `need` rows for an interactive
+        arrival; returns rows freed.  Every pending slice of a victim
+        future is removed and the future terminally fails with
+        AdmissionError, so an evicted query can never also deliver."""
+        victims: set = set()
+        freed = 0
+        for p in reversed(self._pending):
+            if freed >= need:
+                break
+            if p.priority == "batch":
+                victims.add(id(p.future))
+                freed += p.queries.shape[0]
+        if not victims:
+            return 0
+        kept, dropped = [], []
+        for p in self._pending:
+            (dropped if id(p.future) in victims else kept).append(p)
+        self._pending = kept
+        freed = 0
+        failed: set = set()
+        for p in dropped:
+            freed += p.queries.shape[0]
+            if id(p.future) in failed:
+                continue
+            failed.add(id(p.future))
+            if p.future._fail(AdmissionError(
+                    "evicted from the pending queue to admit "
+                    "interactive work (max_pending budget)"), now):
+                self._evicted_batch += 1
+            observe("engine.shed",
+                    (p.future, "batch", p.queries.shape[0]))
+        return freed
 
     def flush(self) -> "QueryEngine":
         """Dispatch everything now: form pending into batches, then run
@@ -567,7 +821,21 @@ class QueryEngine:
             if not self._pending:
                 return 0
             pending, self._pending = self._pending, []
-            batches = self._batcher.form(pending)
+            now = time.monotonic()
+            live = []
+            expired_futs: dict = {}
+            for p in pending:
+                if p.deadline is not None and p.deadline <= now:
+                    expired_futs.setdefault(id(p.future), p)
+                else:
+                    live.append(p)
+            for p in expired_futs.values():
+                if p.future._fail(DeadlineExceeded(
+                        f"query expired in the pending queue before "
+                        f"forming (priority={p.priority!r})"), now):
+                    self._deadline_expired += 1
+                observe("engine.expire", (p.future, p.priority))
+            batches = self._batcher.form(live, now)
             for b in batches:
                 b.part_id = self._journal.add_part()
                 self._batches[b.part_id] = b
@@ -654,6 +922,12 @@ class QueryEngine:
         d = np.asarray(d)
         i = np.asarray(i)
         rounds = int(rounds)
+        # fingerprint the real query rows OUTSIDE the locks — hashing is
+        # the only non-O(1) part of the cache fill below
+        fps = None
+        if self._cache is not None:
+            fps = {dst + j: query_fingerprint(batch.queries[dst + j])
+                   for _, dst, _, n in batch.segments for j in range(n)}
         now = time.monotonic()
         sync_point("engine.execute.deliver", pid)
         with self._cv:
@@ -664,6 +938,15 @@ class QueryEngine:
             self._rounds_sum += rounds * batch.n_real
             self._rounds_n += batch.n_real
             for fut, dst, src, n in batch.segments:
+                if fps is not None:
+                    for j in range(n):
+                        key = (fps[dst + j], batch.epoch, batch.k,
+                               self._knobs)
+                        self._cache.put(key, d[dst + j], i[dst + j])
+                        observe("engine.cache.fill",
+                                (key, batch.epoch, batch.k,
+                                 batch.queries[dst + j],
+                                 d[dst + j], i[dst + j]))
                 if fut._fill(src, d[dst:dst + n], i[dst:dst + n], now):
                     self._latencies.append(now - fut.submitted_at)
                     self._completed += 1
@@ -719,6 +1002,13 @@ class QueryEngine:
                         return
                     if self._pending and linger > 0:
                         deadline = time.monotonic() + linger
+                        # deadline-aware early close: stop waiting for
+                        # the padding bucket to fill once the oldest
+                        # queued deadline is (nearly) due — dispatch a
+                        # partial bucket instead of expiring the query
+                        edl = earliest_deadline(self._pending)
+                        if edl is not None:
+                            deadline = min(deadline, edl - 1e-3)
                         while (sum(p.queries.shape[0]
                                    for p in self._pending)
                                < self.config.max_batch):
@@ -764,8 +1054,10 @@ class QueryEngine:
     def stats(self) -> dict:
         """Serving telemetry: queue depth, latency percentiles (ms),
         rounds-per-query, epoch lag, mesh placement, recoveries,
-        plan-cache and batching counters — see docs/SERVING.md for how
-        to read each field.
+        plan-cache and batching counters, plus the overload counters
+        (shed / evicted_batch / overflow_queued / deadline_expired) and
+        the result_cache hit/miss/fill/eviction rates — see
+        docs/SERVING.md for how to read each field.
 
         Concurrency: takes the condition variable briefly for one
         consistent cut; safe from any thread at any rate.
@@ -802,6 +1094,18 @@ class QueryEngine:
                 },
                 "rounds_per_query": (self._rounds_sum / self._rounds_n
                                      if self._rounds_n else 0.0),
+                "overload": {
+                    "shed": self._shed,
+                    "shed_rows": self._shed_rows,
+                    "evicted_batch": self._evicted_batch,
+                    "overflow_queued": self._overflow_queued,
+                    "deadline_expired": self._deadline_expired,
+                },
+                "result_cache": (self._cache.stats() if self._cache
+                                 is not None else
+                                 {"hits": 0, "misses": 0, "fills": 0,
+                                  "evictions": 0, "entries": 0,
+                                  "capacity": 0}),
                 "plan_cache": self.plans.stats(),
                 "batches": {
                     "dispatched": self._dispatched,
@@ -820,6 +1124,18 @@ class QueryEngine:
                 f"buckets={self._batcher.buckets}, "
                 f"workers={self.config.workers}, "
                 f"backend={self._knobs.backend!r})")
+
+
+def _runs(rows) -> list:
+    """Contiguous (start, stop) runs of an ascending row-index list —
+    one Pending per run when a submit partially hits the result cache."""
+    out: list = []
+    for r in rows:
+        if out and out[-1][1] == r:
+            out[-1][1] = r + 1
+        else:
+            out.append([r, r + 1])
+    return [(a, b) for a, b in out]
 
 
 def _pctl(sorted_vals, p: float) -> float:

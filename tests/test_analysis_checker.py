@@ -19,8 +19,9 @@ from repro.analysis.buggy import (DoubleExecuteEngine,
                                   MutableSnapshotEngine)
 from repro.analysis.checker import (ENGINE_STALL, REFRESH_STALL,
                                     EngineScenario, JournalScenario,
-                                    RefreshScenario, StubIndex,
-                                    StubPlans, TrackedCondition, explore)
+                                    OverloadScenario, RefreshScenario,
+                                    StubIndex, StubPlans,
+                                    TrackedCondition, explore)
 from repro.analysis.hooks import SyncHook, installed
 from repro.analysis.schedules import DFSStrategy, RandomStrategy
 
@@ -80,6 +81,77 @@ def test_engine_lockfree_under_permanent_stalls():
                   budget=60)
     assert rep.ok, rep.violations
     assert rep.stalled_runs > 10
+
+
+def test_engine_overload_invariants():
+    """Admission shedding, batch-priority eviction, deadline expiry and
+    the epoch-keyed result cache racing submits/add/flush: every future
+    terminates exactly once (never both shed AND delivered), cache fills
+    and hits always match the oracle of the epoch in their key, and the
+    shed/expired counters conserve the observed terminal events."""
+    rep = explore(OverloadScenario(name="overload"),
+                  RandomStrategy(seed=6), budget=80)
+    assert rep.ok, rep.violations
+    assert rep.runs == 80
+
+
+def test_engine_overload_under_permanent_stalls():
+    """A thread stalled mid-execution must not strand any future: the
+    drain delivers or expires everything, and a stalled shed path still
+    terminates its future exactly once."""
+    rep = explore(OverloadScenario(name="overload.stall"),
+                  RandomStrategy(seed=7, p_stall=0.3,
+                                 stall_points=ENGINE_STALL),
+                  budget=60)
+    assert rep.ok, rep.violations
+    assert rep.stalled_runs > 10
+
+
+def test_regression_shed_future_never_also_delivered():
+    """Direct (schedule-free) regression: a batch future evicted by an
+    interactive arrival is terminally failed — a later flush of the
+    same queue must not ALSO deliver rows into it."""
+    from repro.serve.engine import AdmissionError, EngineConfig, QueryEngine
+    rng = np.random.RandomState(3)
+    eng = QueryEngine(StubIndex(rng.randn(6, 8).astype(np.float32)),
+                      EngineConfig(workers=0, max_batch=4, max_pending=2))
+    eng.plans = StubPlans()
+    q = rng.randn(1, 8).astype(np.float32)
+    fb = eng.submit(q, k=1, priority="batch")
+    fb2 = eng.submit(q, k=1, priority="batch")
+    fi = eng.submit(rng.randn(2, 8).astype(np.float32), k=1)  # evicts both
+    assert fb.done() and fb2.done()
+    eng.flush()
+    for f in (fb, fb2):
+        with pytest.raises(AdmissionError):
+            f.result(timeout=1)
+        assert not f._filled.any()           # no rows ever landed
+    d, i = fi.result(timeout=5)
+    assert d.shape == (2,)
+    assert eng.stats()["overload"]["evicted_batch"] == 2
+
+
+def test_regression_cache_hit_serves_submit_time_epoch():
+    """A hit races a concurrent add(): the rows served must be the ones
+    cached for the SUBMIT-time epoch, and a post-add submit must miss
+    (its key carries the new epoch)."""
+    from repro.serve.engine import EngineConfig, QueryEngine
+    rng = np.random.RandomState(4)
+    base = rng.randn(6, 8).astype(np.float32)
+    eng = QueryEngine(StubIndex(base),
+                      EngineConfig(workers=0, max_batch=4,
+                                   cache_entries=8))
+    eng.plans = StubPlans()
+    q = rng.randn(1, 8).astype(np.float32)
+    d0, i0 = eng.submit(q, k=2).result(timeout=5)
+    d1, i1 = eng.submit(q, k=2).result(timeout=5)      # epoch-0 hit
+    np.testing.assert_array_equal(d1, d0)
+    np.testing.assert_array_equal(i1, i0)
+    assert eng.stats()["result_cache"]["hits"] == 1
+    eng.add(rng.randn(2, 8).astype(np.float32))        # epoch 1
+    d2, i2 = eng.submit(q, k=2).result(timeout=5)      # key differs: miss
+    st = eng.stats()["result_cache"]
+    assert st["hits"] == 1 and st["misses"] == 2
 
 
 def test_dfs_exploration_is_deterministic():

@@ -296,3 +296,244 @@ def test_sharded_engine_on_single_device_mesh(small):
         db, ib = search_bruteforce(jnp.asarray(both),
                                    jnp.asarray(queries[:4]), k=5)
         np.testing.assert_array_equal(i2, np.asarray(ib))
+
+
+# --------------------------------------------------------------------- #
+# overload safety: result cache, admission control, deadlines, timeouts
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("k", [1, 5, 10])
+def test_cache_hit_bit_identical_to_cold(small, backend, k):
+    """A result-cache hit must be indistinguishable from re-running the
+    compiled plan on the same epoch — byte for byte, on both backends."""
+    walks, queries = small
+    ix = FreshIndex.build(walks[:256], IndexConfig(leaf_capacity=32,
+                                                   backend=backend))
+    q = queries[:4]
+    with ix.engine(EngineConfig(max_batch=4, cache_entries=64)) as eng:
+        d_cold, i_cold = eng.submit(q, k=k).result(timeout=120)
+        assert eng.stats()["result_cache"]["hits"] == 0
+        d_hot, i_hot = eng.submit(q, k=k).result(timeout=120)
+        st = eng.stats()["result_cache"]
+        assert st["hits"] == 4 and st["fills"] == 4
+    np.testing.assert_array_equal(d_hot, d_cold)
+    np.testing.assert_array_equal(i_hot, i_cold)
+    df, if_ = ix.search(jnp.asarray(q), k=k)
+    np.testing.assert_array_equal(i_hot, np.asarray(if_))
+    np.testing.assert_array_equal(d_hot, np.asarray(df))
+
+
+def test_cache_add_advances_epoch_and_misses_stale_entry(small):
+    walks, queries = small
+    ix = FreshIndex.build(walks[:256], IndexConfig(leaf_capacity=32))
+    extra = random_walk(8, 128, seed=41)
+    q = queries[:2]
+    with ix.engine(EngineConfig(max_batch=4, cache_entries=64)) as eng:
+        d0, i0 = eng.submit(q, k=3).result(timeout=60)
+        eng.add(extra)                       # epoch 1: keys can't alias
+        d1, i1 = eng.submit(q, k=3).result(timeout=60)
+        st = eng.stats()["result_cache"]
+        assert st["hits"] == 0 and st["misses"] == 4
+        assert st["entries"] == 4            # both epochs resident
+    both = np.concatenate([walks[:256], extra])
+    db, ib = search_bruteforce(jnp.asarray(both), jnp.asarray(q), k=3)
+    np.testing.assert_array_equal(i1, np.asarray(ib))
+
+
+def test_cache_partial_hit_row_mapping(small):
+    """A submit whose rows partially hit the cache enqueues only the
+    missed runs; delivered rows must land in the right future slots."""
+    walks, queries = small
+    ix = FreshIndex.build(walks[:256], IndexConfig(leaf_capacity=32))
+    with ix.engine(EngineConfig(max_batch=8, cache_entries=64)) as eng:
+        eng.submit(queries[1], k=3).result(timeout=60)   # prime row 1
+        eng.submit(queries[3], k=3).result(timeout=60)   # prime row 3
+        d, i = eng.submit(queries[:5], k=3).result(timeout=60)
+        st = eng.stats()["result_cache"]
+        assert st["hits"] == 2
+    db, ib = search_bruteforce(jnp.asarray(walks[:256]),
+                               jnp.asarray(queries[:5]), k=3)
+    np.testing.assert_array_equal(i, np.asarray(ib))
+    np.testing.assert_array_equal(d, np.asarray(db))
+
+
+def test_cache_lru_eviction_respects_capacity(small):
+    walks, queries = small
+    ix = FreshIndex.build(walks[:256], IndexConfig(leaf_capacity=32))
+    with ix.engine(EngineConfig(max_batch=4, cache_entries=2)) as eng:
+        for r in range(3):                   # 3 distinct rows, capacity 2
+            eng.submit(queries[r], k=1).result(timeout=60)
+        st = eng.stats()["result_cache"]
+        assert st["entries"] == 2 and st["evictions"] == 1
+        # oldest entry (row 0) was evicted: resubmit misses and refills
+        eng.submit(queries[0], k=1).result(timeout=60)
+        st = eng.stats()["result_cache"]
+        assert st["hits"] == 0 and st["evictions"] == 2
+        # row 2 is still resident: hit
+        eng.submit(queries[2], k=1).result(timeout=60)
+        assert eng.stats()["result_cache"]["hits"] == 1
+
+
+def test_cache_recover_epochs_never_alias(small, tmp_path):
+    """recover() publishes a strictly newer epoch, so post-recovery keys
+    can never alias (and therefore never serve) pre-crash entries."""
+    walks, queries = small
+    ix = FreshIndex.build(walks[:256], IndexConfig(leaf_capacity=32))
+    ix.save(str(tmp_path / "ckpt"))
+    q = queries[:2]
+    with ix.engine(EngineConfig(max_batch=4, cache_entries=64)) as eng:
+        d0, i0 = eng.submit(q, k=3).result(timeout=60)
+        e0 = eng.epoch
+        eng.recover(str(tmp_path / "ckpt"))
+        assert eng.epoch > e0                # strictly newer epoch
+        d1, i1 = eng.submit(q, k=3).result(timeout=60)
+        st = eng.stats()["result_cache"]
+        assert st["hits"] == 0 and st["misses"] == 4
+        assert eng.stats()["recoveries"] == 1
+    np.testing.assert_array_equal(i1, i0)    # same data, fresh entry
+    np.testing.assert_array_equal(d1, d0)
+
+
+def test_admission_shed_and_batch_priority_evicted_first(index, small):
+    from repro.serve import AdmissionError
+    _, queries = small
+    eng = index.engine(EngineConfig(max_batch=4, max_pending=4))
+    try:
+        batch_futs = [eng.submit(queries[i], k=1, priority="batch")
+                      for i in range(4)]
+        with pytest.raises(AdmissionError, match="budget exhausted"):
+            eng.submit(queries[4], k=1, priority="batch")
+        assert eng.stats()["overload"]["shed"] == 1
+        # an interactive arrival evicts queued batch work to admit
+        fi = eng.submit(queries[:3], k=1)
+        ov = eng.stats()["overload"]
+        assert ov["evicted_batch"] >= 3
+        eng.flush()
+        fi.result(timeout=60)                # interactive delivered
+        n_shed = 0
+        for f in batch_futs:
+            assert f.done()                  # terminated exactly once
+            try:
+                f.result(timeout=5)
+            except AdmissionError:
+                n_shed += 1
+        assert n_shed == ov["evicted_batch"]
+    finally:
+        eng.close()
+
+
+def test_admission_per_class_budget(index, small):
+    from repro.serve import AdmissionError
+    _, queries = small
+    eng = index.engine(EngineConfig(
+        max_batch=4, max_pending_per_class={"batch": 2}))
+    try:
+        eng.submit(queries[:2], k=1, priority="batch")
+        with pytest.raises(AdmissionError):
+            eng.submit(queries[2], k=1, priority="batch")
+        # interactive class is uncapped here
+        f = eng.submit(queries[3], k=1)
+        eng.flush()
+        f.result(timeout=60)
+    finally:
+        eng.close()
+
+
+def test_overflow_policy_deadline_queues_with_deadline(index, small):
+    """overflow_policy='deadline' admits over-budget submits but stamps
+    them: they either dispatch promptly or expire typed."""
+    from repro.serve import DeadlineExceeded
+    _, queries = small
+    eng = index.engine(EngineConfig(
+        max_batch=4, max_pending=1, overflow_policy="deadline",
+        overflow_deadline_ms=1.0))
+    try:
+        f0 = eng.submit(queries[0], k=1)     # fills the budget
+        f1 = eng.submit(queries[1], k=1)     # over budget: stamped
+        assert eng.stats()["overload"]["overflow_queued"] == 1
+        time.sleep(0.01)                     # let the stamp expire
+        eng.flush()
+        f0.result(timeout=60)
+        with pytest.raises(DeadlineExceeded):
+            f1.result(timeout=5)
+        assert eng.stats()["overload"]["deadline_expired"] == 1
+    finally:
+        eng.close()
+
+
+def test_deadline_expiry_is_typed_and_counted(index, small):
+    from repro.serve import DeadlineExceeded
+    _, queries = small
+    with index.engine(EngineConfig(max_batch=4)) as eng:
+        f = eng.submit(queries[0], k=1, deadline_ms=0.5)
+        time.sleep(0.005)
+        eng.flush()                          # expiry happens at form time
+        assert f.done()
+        with pytest.raises(DeadlineExceeded, match="expired"):
+            f.result(timeout=5)
+        assert eng.stats()["overload"]["deadline_expired"] == 1
+        # a comfortable deadline is never spuriously expired
+        d, i = eng.submit(queries[0], k=1,
+                          deadline_ms=60_000.0).result(timeout=60)
+        assert d.shape == (1,)
+
+
+def test_result_timeout_typed_and_future_stays_completable(index, small):
+    """Regression (satellite): a timed-out result() must raise a typed
+    error — never partial rows — and leave the future completable by a
+    later helper."""
+    from repro.serve import ResultTimeout
+    _, queries = small
+    eng = index.engine(EngineConfig(max_batch=4))
+    try:
+        f = eng.submit(queries[:2], k=3)
+        orig = eng._make_progress
+        eng._make_progress = lambda: None    # starve the sync-mode helper
+        t0 = time.monotonic()
+        with pytest.raises(ResultTimeout, match="remains completable"):
+            f.result(timeout=0.05)
+        assert time.monotonic() - t0 < 5.0
+        assert not f.done()                  # not terminally failed
+        eng._make_progress = orig
+        d, i = f.result(timeout=60)          # a later call completes it
+        df, if_ = index.search(jnp.asarray(queries[:2]), k=3)
+        np.testing.assert_array_equal(i, np.asarray(if_))
+        np.testing.assert_array_equal(d, np.asarray(df))
+        assert isinstance(ResultTimeout(), TimeoutError)  # typed subclass
+    finally:
+        eng.close()
+
+
+def test_batcher_deadline_plumbing():
+    from repro.serve import earliest_deadline
+    rng = np.random.default_rng(1)
+    mk = lambda m: rng.standard_normal((m, 16)).astype(np.float32)
+    live = Pending(mk(2), 1, 0, object(), 0.0, deadline=1e18)
+    dead = Pending(mk(1), 1, 0, object(), 0.0, deadline=1.0)
+    assert earliest_deadline([live, dead]) == 1.0
+    assert earliest_deadline([Pending(mk(1), 1, 0, object(), 0.0)]) is None
+    batches = MicroBatcher(4).form([live, dead], now=2.0)
+    assert len(batches) == 1 and batches[0].n_real == 2   # expired dropped
+    # row0 offsets the future-row mapping for cache-missed slices
+    off = Pending(mk(2), 1, 0, object(), 0.0, row0=3)
+    seg = MicroBatcher(4).form([off])[0].segments
+    assert [s[1:] for s in seg] == [(0, 3, 2)]
+
+
+def test_engine_overload_validation(index, small):
+    _, queries = small
+    with index.engine() as eng:
+        with pytest.raises(ValueError, match="priority"):
+            eng.submit(queries[0], k=1, priority="bulk")
+        with pytest.raises(ValueError, match="deadline_ms"):
+            eng.submit(queries[0], k=1, deadline_ms=0.0)
+    with pytest.raises(ValueError, match="max_pending"):
+        EngineConfig(max_pending=0)
+    with pytest.raises(ValueError, match="max_pending_per_class"):
+        EngineConfig(max_pending_per_class={"bulk": 3})
+    with pytest.raises(ValueError, match="overflow_policy"):
+        EngineConfig(overflow_policy="drop")
+    with pytest.raises(ValueError, match="overflow_deadline_ms"):
+        EngineConfig(overflow_deadline_ms=0.0)
+    with pytest.raises(ValueError, match="cache_entries"):
+        EngineConfig(cache_entries=-1)
