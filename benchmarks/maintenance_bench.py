@@ -1,0 +1,137 @@
+"""Lifecycle maintenance benchmark (`benchmarks/run.py --maint-quick`).
+
+Measures the three costs the lifecycle subsystem (`repro.maintenance`)
+introduces, as BENCH_fresh.json rows next to the figure rows:
+
+* ``maint/mask_overhead``   — tombstone-masked search vs the clean index
+  on the SAME arrays.  The masked core swaps only the sq_norms vector
+  (sentinel norms, identical shapes → no recompiles), so the claim under
+  test is that deletion costs a vector copy per lifecycle change, not a
+  per-query penalty.
+* ``maint/compact_reclaim`` — `compact()` with tombstones: one sorted
+  merge physically drops every dead row exactly once; reports rows/s
+  through the merge and the reclaim rate (dropped / total).
+* ``maint/ttl_sweep``       — `expire_ttl()` over a delta full of
+  expired TTLs: per-entry sweep cost (the hot-tier `MaintenancePolicy`
+  runs this every `sweep_interval_s`).
+
+Timings follow the figure benches: median wall seconds via
+`common.timeit`, results forced with np.asarray before the clock stops.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.api import FreshIndex, IndexConfig
+from repro.data.synthetic import query_workload, random_walk
+
+from .common import row, timeit
+
+N_SERIES = 4_000
+N_DELTA = 512
+N_QUERIES = 32
+DEAD_FRAC = 0.15
+K = 10
+
+
+def set_quick() -> None:
+    """CI smoke scale: fewer series, same shape of work."""
+    global N_SERIES, N_DELTA, N_QUERIES
+    N_SERIES = 1_500
+    N_DELTA = 256
+    N_QUERIES = 16
+
+
+def _dataset():
+    walks = random_walk(N_SERIES, 256, seed=51)
+    extra = random_walk(N_DELTA, 256, seed=52)
+    queries = query_workload(walks, N_QUERIES, noise_sigma=0.05, seed=53)
+    return walks, extra, queries
+
+
+def _dead_ids(rng: np.random.Generator) -> np.ndarray:
+    """DEAD_FRAC of the id space, spread over core AND delta rows."""
+    n = N_SERIES + N_DELTA
+    return rng.choice(n, size=int(n * DEAD_FRAC), replace=False)
+
+
+def maint_mask_overhead() -> List[dict]:
+    walks, extra, queries = _dataset()
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+    ix.add(extra)
+
+    def search():
+        d, i = ix.search(queries, k=K)
+        np.asarray(d), np.asarray(i)
+
+    t_clean = timeit(search, repeat=5)
+    dead = _dead_ids(np.random.default_rng(54))
+    ix.delete(dead)
+    ix.search_view()                      # build the masked view once
+    t_masked = timeit(search, repeat=5)
+    overhead = (t_masked - t_clean) / t_clean if t_clean else 0.0
+    return [row(
+        "maint/mask_overhead", t_masked,
+        f"n={N_SERIES}+{N_DELTA} q={N_QUERIES} k={K} "
+        f"dead={dead.size} ({DEAD_FRAC:.0%})",
+        clean_us=round(t_clean * 1e6, 1),
+        overhead_pct=round(100.0 * overhead, 1))]
+
+
+def maint_compact_reclaim() -> List[dict]:
+    walks, extra, _ = _dataset()
+    n_total = N_SERIES + N_DELTA
+    dead = _dead_ids(np.random.default_rng(55))
+
+    def fresh():
+        ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+        ix.add(extra)
+        ix.delete(dead)
+        return ix
+
+    samples = []
+    for _ in range(3):
+        ix = fresh()
+        t0 = time.perf_counter()
+        ix.compact()
+        samples.append(time.perf_counter() - t0)
+        assert ix.n_series == n_total - dead.size and ix.n_deleted == 0
+    t = sorted(samples)[len(samples) // 2]
+    return [row(
+        "maint/compact_reclaim", t,
+        f"n={n_total} dropped={dead.size} delta={N_DELTA}",
+        reclaim_rate=round(dead.size / n_total, 3),
+        rows_per_s=round(n_total / t, 1) if t else 0.0)]
+
+
+def maint_ttl_sweep() -> List[dict]:
+    walks, extra, _ = _dataset()
+    samples = []
+    for _ in range(3):
+        ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=64))
+        ix.add(extra, ttl_s=1e-6)
+        t0 = time.perf_counter()
+        n = ix.expire_ttl(now=time.monotonic() + 1.0)
+        samples.append(time.perf_counter() - t0)
+        assert n == N_DELTA and ix.n_ttl == 0
+    t = sorted(samples)[len(samples) // 2]
+    return [row(
+        "maint/ttl_sweep", t,
+        f"entries={N_DELTA} expired={N_DELTA}",
+        per_entry_us=round(t / N_DELTA * 1e6, 2))]
+
+
+ALL = [maint_mask_overhead, maint_compact_reclaim, maint_ttl_sweep]
+
+
+if __name__ == "__main__":
+    import sys
+    if "--quick" in sys.argv:
+        set_quick()
+    for fn in ALL:
+        for r in fn():
+            print(r)

@@ -37,6 +37,10 @@ def main() -> None:
                     help="also run the IndexBuilder pipeline bench "
                          "(build/* rows: single-shot vs builder vs "
                          "crash-injected, compact merge vs rebuild)")
+    ap.add_argument("--maint-quick", action="store_true",
+                    help="also run the lifecycle maintenance bench "
+                         "(maint/* rows: tombstone-mask search overhead, "
+                         "compaction reclaim rate, TTL sweep cost)")
     args = ap.parse_args()
 
     from . import fresh_bench
@@ -62,6 +66,11 @@ def main() -> None:
         if args.quick:
             build_bench.set_quick()
         benches += build_bench.ALL
+    if args.maint_quick:
+        from . import maintenance_bench
+        if args.quick:
+            maintenance_bench.set_quick()
+        benches += maintenance_bench.ALL
     for fn in benches:
         tag = fn.__name__.split("_")[0]
         if only and tag not in only:

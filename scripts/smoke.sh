@@ -9,7 +9,9 @@
 # vs unbounded baseline at 0.5x-3x saturation) AND the build-pipeline
 # leg (--build-quick:
 # IndexBuilder single-shot vs multi-worker vs crash-injected, compact
-# merge vs rebuild) at --quick scale, emitting the machine-readable
+# merge vs rebuild) AND the lifecycle maintenance leg (--maint-quick:
+# tombstone-mask search overhead, compaction reclaim rate, TTL sweep
+# cost) at --quick scale, emitting the machine-readable
 # BENCH_fresh.json perf record with p50/p99 latency + QPS rows.
 #
 #   scripts/smoke.sh                  full smoke
@@ -80,8 +82,8 @@ python -W error::DeprecationWarning -m pytest -q -x \
     tests/test_api.py tests/test_builder.py tests/test_index_search.py \
     tests/test_docs.py tests/test_system.py
 
-python -m benchmarks.run --only fig3,fig5,serve,build --quick \
-    --serve-quick --build-quick --json BENCH_fresh.json
+python -m benchmarks.run --only fig3,fig5,serve,build,maint --quick \
+    --serve-quick --build-quick --maint-quick --json BENCH_fresh.json
 python - <<'EOF'
 import json
 rows = json.load(open("BENCH_fresh.json"))["rows"]
@@ -132,10 +134,18 @@ assert "bit_identical=1" in by_name["build/pipeline/w4_crash"]["derived"]
 merge = by_name["build/compact/merge"]["us_per_call"]
 rebuild = by_name["build/compact/rebuild"]["us_per_call"]
 assert merge < rebuild, (merge, rebuild)
+# lifecycle maintenance rows: tombstone-mask overhead, physical reclaim,
+# TTL sweep (docs/SERVING.md "Maintenance & freshness tiers")
+assert "overhead_pct" in by_name["maint/mask_overhead"]
+reclaim = by_name["maint/compact_reclaim"]
+assert reclaim["reclaim_rate"] > 0 and reclaim["rows_per_s"] > 0, reclaim
+assert "per_entry_us" in by_name["maint/ttl_sweep"]
 print(f"BENCH_fresh.json OK: {len(rows)} rows; fig3+fig5 both backends, "
       f"serve p50/p99/QPS, overload sweep (bounded p99 "
       f"{b3['p99_us']/b1['p99_us']:.2f}x 1x->3x, unbounded "
       f"{u3['p99_us']/b3['p99_us']:.2f}x above), build pipeline+compact "
-      f"rows present (merge {rebuild/merge:.2f}x faster than rebuild)")
+      f"rows present (merge {rebuild/merge:.2f}x faster than rebuild), "
+      f"maint mask overhead "
+      f"{by_name['maint/mask_overhead']['overhead_pct']}%")
 EOF
 validate_sharded_rows

@@ -28,7 +28,13 @@ interleaving:
                   once — never both shed AND delivered, never stranded —
                   and a result-cache entry never serves rows from a
                   different epoch than its key (hits == the oracle over
-                  the key epoch's data).
+                  the key epoch's data);
+  lifecycle       a deleted series never resurrects (every delivered
+                  result equals the tombstone-aware oracle over its
+                  bound epoch's view; dead ids never appear), each
+                  tombstone is physically dropped by compaction exactly
+                  once, and identical tombstone views yield
+                  byte-identical answers across schedules.
 
 Engine scenarios run the real QueryEngine over a stub index + stub plan
 cache (pure-numpy brute force): every schedule then costs milliseconds,
@@ -63,9 +69,9 @@ from .schedules import (ControlledScheduler, DFSStrategy, RandomStrategy,
 
 __all__ = ["ExploreReport", "Scenario", "StubIndex", "StubPlans",
            "TrackedCondition", "TrackedLock", "engine_scenario",
-           "explore", "journal_scenario", "main", "make_portfolio",
-           "overload_scenario", "refresh_scenario",
-           "snapshot_fingerprint", "stub_topk"]
+           "explore", "journal_scenario", "main", "maintenance_scenario",
+           "make_portfolio", "overload_scenario", "refresh_scenario",
+           "snapshot_fingerprint", "stub_topk", "stub_topk_alive"]
 
 
 # ------------------------------------------------------------------ stubs
@@ -78,13 +84,19 @@ class StubConfig:
 
 
 class _StubCore:
-    """Stands in for FlatIndex: just the fields Snapshot.plan_sig reads."""
+    """Stands in for FlatIndex: the fields Snapshot.plan_sig reads, plus
+    the stable row ids and (for tombstone-masked views) an alive mask —
+    the stub spelling of the real core's sentinel-norm masking."""
 
-    __slots__ = ("series", "n_leaves")
+    __slots__ = ("series", "n_leaves", "ids", "alive")
 
-    def __init__(self, series: np.ndarray):
+    def __init__(self, series: np.ndarray, ids: Optional[np.ndarray] = None,
+                 alive: Optional[np.ndarray] = None):
         self.series = series
         self.n_leaves = 1
+        self.ids = (np.arange(series.shape[0], dtype=np.int64)
+                    if ids is None else np.asarray(ids, np.int64))
+        self.alive = None if alive is None else np.asarray(alive, bool)
 
 
 class StubIndex:
@@ -93,9 +105,14 @@ class StubIndex:
     Mirrors the facade's concurrency-relevant contract exactly: add()
     buffers immutable delta batches, delta_cat materializes lazily (and
     emits the same `index.delta_cat` observe as the real facade — the
-    lock-discipline invariant watches for it), prepare/commit_compact
-    split heavy work from the O(1) swap, and every published array is
-    replaced, never mutated."""
+    lock-discipline invariant watches for it), search_view() is the
+    tombstone-masked read surface the engine captures (a masked core
+    VIEW plus a delta alive-mask plus the delta id offset — the stored
+    arrays are never touched), prepare/commit_compact split heavy work
+    from the O(1) swap, ids are stable and never reused, and every
+    published array is replaced, never mutated.  `dropped_log` records
+    the ids each compaction physically removed so the exactly-once-drop
+    invariant can be machine-checked."""
 
     def __init__(self, base: np.ndarray):
         base = np.asarray(base, np.float32)
@@ -103,6 +120,12 @@ class StubIndex:
         self._delta: List[np.ndarray] = []
         self._dcat: Optional[np.ndarray] = None
         self._n_base = base.shape[0]
+        self._next_id = base.shape[0]
+        self._delta_id0 = base.shape[0]
+        self._tombstones: set = set()
+        self._ttl: Dict[int, float] = {}
+        self._first_tombstone_at: Optional[float] = None
+        self.dropped_log: List[Tuple[int, ...]] = []
         self.config = StubConfig()
         self.mesh = None
         self.mesh_axis = "data"
@@ -113,11 +136,25 @@ class StubIndex:
 
     @property
     def n_series(self) -> int:
-        return self._n_base + self.n_pending
+        return self._n_base + self.n_pending - len(self._tombstones)
 
     @property
     def n_pending(self) -> int:
         return sum(b.shape[0] for b in self._delta)
+
+    @property
+    def n_deleted(self) -> int:
+        return len(self._tombstones)
+
+    @property
+    def n_ttl(self) -> int:
+        return len(self._ttl)
+
+    @property
+    def tombstone_age_s(self) -> Optional[float]:
+        if self._first_tombstone_at is None:
+            return None
+        return time.monotonic() - self._first_tombstone_at
 
     @property
     def series_len(self) -> int:
@@ -132,34 +169,110 @@ class StubIndex:
             self._dcat = np.concatenate(self._delta, axis=0)
         return self._dcat
 
-    def add(self, batch) -> "StubIndex":
+    def search_view(self):
+        """(core_view, delta, delta_alive, delta_id0) — the facade's
+        tombstone-masked read surface.  The masked core is a NEW object
+        over the same series array (replace, never mutate)."""
+        core = self._core
+        delta = self.delta_cat
+        alive = None
+        if self._tombstones:
+            dead_ids = np.fromiter(self._tombstones, np.int64)
+            cdead = np.isin(core.ids, dead_ids)
+            if cdead.any():
+                core = _StubCore(core.series, ids=core.ids, alive=~cdead)
+            if delta is not None:
+                did = self._delta_id0 + np.arange(delta.shape[0],
+                                                  dtype=np.int64)
+                da = ~np.isin(did, dead_ids)
+                if not da.all():
+                    alive = da
+        return core, delta, alive, self._delta_id0
+
+    def add(self, batch, *, ttl_s: Optional[float] = None) -> "StubIndex":
         b = np.array(batch, np.float32)
         if b.ndim == 1:
             b = b[None]
         if b.ndim != 2 or b.shape[1] != self.series_len:
             raise ValueError(f"batch must be (m, {self.series_len})")
+        if ttl_s is not None:
+            if ttl_s <= 0:
+                raise ValueError("ttl_s must be > 0")
+            first = self._delta_id0 + self.n_pending
+            ddl = time.monotonic() + ttl_s
+            for sid in range(first, first + b.shape[0]):
+                self._ttl[sid] = ddl
         self._delta.append(b)
+        self._next_id += b.shape[0]
         self._dcat = None
         return self
 
+    def delete(self, ids) -> int:
+        if isinstance(ids, (int, np.integer)):
+            ids = [ids]
+        live = set(self._core.ids.tolist())
+        live.update(range(self._delta_id0, self._delta_id0 + self.n_pending))
+        new = 0
+        for sid in ids:
+            sid = int(sid)
+            if sid < 0 or sid >= self._next_id:
+                raise ValueError(f"unknown series id {sid}")
+            if sid in self._tombstones or sid not in live:
+                continue            # already deleted / already dropped
+            self._tombstones.add(sid)
+            self._ttl.pop(sid, None)
+            if self._first_tombstone_at is None:
+                self._first_tombstone_at = time.monotonic()
+            new += 1
+        return new
+
+    def expire_ttl(self, now: Optional[float] = None) -> int:
+        now = time.monotonic() if now is None else now
+        expired = [sid for sid, ddl in self._ttl.items() if ddl <= now]
+        return self.delete(expired) if expired else 0
+
     def prepare_compact(self):
-        if not self._delta:
+        drops = frozenset(self._tombstones)
+        if not self._delta and not drops:
             return None
-        delta = np.concatenate(self._delta, axis=0)
-        merged = np.concatenate([self._core.series, delta], axis=0)
-        return (merged, delta.shape[0], len(self._delta))
+        dead_ids = np.fromiter(drops, np.int64) if drops \
+            else np.empty(0, np.int64)
+        ckeep = ~np.isin(self._core.ids, dead_ids)
+        n_rows = self.n_pending
+        if self._delta:
+            delta = np.concatenate(self._delta, axis=0)
+            did = self._delta_id0 + np.arange(n_rows, dtype=np.int64)
+            dkeep = ~np.isin(did, dead_ids)
+            merged = np.concatenate([self._core.series[ckeep],
+                                     delta[dkeep]], axis=0)
+            mids = np.concatenate([self._core.ids[ckeep], did[dkeep]])
+        else:
+            merged = self._core.series[ckeep]
+            mids = self._core.ids[ckeep]
+        # delete() only tombstones LIVE ids, so every tombstone maps to
+        # exactly one physically removed row (core or delta)
+        dropped = tuple(sorted(drops))
+        return (merged, mids, n_rows, len(self._delta), drops, dropped)
 
     def commit_compact(self, token) -> "StubIndex":
         if token is None:
             return self
-        merged, n_rows, n_batches = token
+        merged, mids, n_rows, n_batches, drops, dropped = token
         if (len(self._delta) != n_batches
                 or sum(b.shape[0] for b in self._delta) != n_rows):
             raise RuntimeError("delta changed between prepare and commit")
-        self._core = _StubCore(merged)
-        self._n_base += n_rows
+        if frozenset(self._tombstones) != drops:
+            raise RuntimeError("tombstones changed between prepare and "
+                               "commit")
+        self._core = _StubCore(merged, ids=mids)
+        self._n_base = merged.shape[0]
         self._delta = []
         self._dcat = None
+        self._delta_id0 = self._next_id
+        self._tombstones = set()
+        self._first_tombstone_at = None
+        if dropped:
+            self.dropped_log.append(dropped)
         return self
 
 
@@ -172,6 +285,26 @@ def stub_topk(q: np.ndarray, data: np.ndarray, k: int
             order.astype(np.int32))
 
 
+def stub_topk_alive(q: np.ndarray, data: np.ndarray,
+                    ids: Optional[np.ndarray], alive: Optional[np.ndarray],
+                    k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Tombstone-aware brute-force oracle: a dead row can never win (its
+    distance is masked to +inf before selection), and a dead row that is
+    selected anyway — only possible when fewer than k rows are alive —
+    reports (inf, -1).  With `ids`/`alive` None this reduces bit-exactly
+    to `stub_topk` (positional ids), which is what keeps the mask-free
+    engine scenarios byte-stable across this addition."""
+    d = ((q[:, None, :] - data[None, :, :]) ** 2).sum(-1)
+    if alive is not None:
+        d = np.where(alive[None, :], d, np.inf)
+    order = np.argsort(d, axis=1, kind="stable")[:, :k]
+    dd = np.take_along_axis(d, order, axis=1).astype(np.float32)
+    ii = (order if ids is None else ids[order]).astype(np.int32)
+    if alive is not None:
+        ii = np.where(alive[order], ii, -1).astype(np.int32)
+    return dd, ii
+
+
 class _StubPlan:
     __slots__ = ("k",)
 
@@ -180,10 +313,23 @@ class _StubPlan:
 
     def run(self, snap, queries):
         q = np.asarray(queries, np.float32)
-        rows = [np.asarray(snap.core.series)]
+        core = snap.core
+        n_core = core.series.shape[0]
+        data = [np.asarray(core.series)]
+        ids = [np.asarray(core.ids, np.int64)]
+        alive = [np.ones(n_core, bool) if core.alive is None
+                 else np.asarray(core.alive, bool)]
         if snap.delta is not None:
-            rows.append(np.asarray(snap.delta))
-        d, i = stub_topk(q, np.concatenate(rows, axis=0), self.k)
+            m = snap.delta.shape[0]
+            data.append(np.asarray(snap.delta))
+            ids.append(snap.n_base + np.arange(m, dtype=np.int64))
+            da = getattr(snap, "delta_alive", None)
+            alive.append(np.ones(m, bool) if da is None
+                         else np.asarray(da, bool))
+        a = np.concatenate(alive)
+        d, i = stub_topk_alive(q, np.concatenate(data, axis=0),
+                               np.concatenate(ids),
+                               None if a.all() else a, self.k)
         return d, i, 1
 
 
@@ -271,11 +417,17 @@ class _ObserveForwarder(SyncHook):
 
 
 def snapshot_fingerprint(snap) -> Tuple:
-    """Byte-level identity of a published Snapshot (immutability check)."""
+    """Byte-level identity of a published Snapshot (immutability check).
+    Covers the tombstone view too: the core alive mask and the delta
+    alive mask are part of what a bound batch must keep seeing."""
     core = np.asarray(snap.core.series)
     delta = None if snap.delta is None else np.asarray(snap.delta).tobytes()
+    calive = getattr(snap.core, "alive", None)
+    dalive = getattr(snap, "delta_alive", None)
     return (snap.epoch, core.tobytes(), delta, snap.n_base, snap.n_total,
-            int(snap.core.n_leaves))
+            int(snap.core.n_leaves),
+            None if calive is None else np.asarray(calive).tobytes(),
+            None if dalive is None else np.asarray(dalive).tobytes())
 
 
 # -------------------------------------------------------------- scenarios
@@ -867,6 +1019,187 @@ class OverloadScenario(Scenario):
         return v
 
 
+MAINT_PARK = ENGINE_PARK + ("engine.delete",)
+
+
+def _snapshot_view(snap) -> Tuple[np.ndarray, np.ndarray, Optional[np.ndarray]]:
+    """(data, ids, alive) copies of everything a snapshot's plan reads —
+    the recorded ground truth the tombstone-aware oracle runs over."""
+    core = snap.core
+    data = [np.asarray(core.series)]
+    ids = [np.asarray(core.ids, np.int64)]
+    alive = [np.ones(core.series.shape[0], bool) if core.alive is None
+             else np.asarray(core.alive, bool)]
+    if snap.delta is not None:
+        m = snap.delta.shape[0]
+        data.append(np.asarray(snap.delta))
+        ids.append(snap.n_base + np.arange(m, dtype=np.int64))
+        da = getattr(snap, "delta_alive", None)
+        alive.append(np.ones(m, bool) if da is None
+                     else np.asarray(da, bool))
+    a = np.concatenate(alive)
+    return (np.concatenate(data, axis=0).copy(), np.concatenate(ids).copy(),
+            None if a.all() else a.copy())
+
+
+class MaintenanceScenario(Scenario):
+    """Real QueryEngine over the lifecycle-aware StubIndex: a deleter
+    (two core ids), an add-then-delete writer (one delta id), a
+    searching client, a compactor, and a flusher, all racing under
+    schedule exploration.
+
+    Invariants (the lifecycle additions to the catalog):
+
+    * NO RESURRECTED TOMBSTONE — a delivered result bound to epoch e
+      never contains an id that is dead in e's view; every delivered
+      result equals the tombstone-aware brute-force oracle over exactly
+      that view (dead rows masked to +inf, never winning).
+    * EXACTLY-ONCE PHYSICAL DROP — across every compaction in the run,
+      each deleted id is physically removed exactly once (dropped_log),
+      only requested ids are ever dropped, and after the final
+      quiescent compaction no tombstone survives and no deleted row is
+      physically present.
+    * bit-identity ACROSS SCHEDULES keyed by the epoch's VIEW bytes
+      (not the epoch number — racing writers make epoch numbering
+      schedule-dependent): identical visible data + masks must yield
+      byte-identical answers in every interleaving.
+    * the same lock-discipline probes as EngineScenario.
+    """
+
+    def __init__(self, name: str = "maintenance"):
+        self.name = name
+        self.park_on = MAINT_PARK
+        self._identity: Dict[Tuple, Tuple[bytes, bytes]] = {}
+        rng = np.random.RandomState(13)
+        self.base = rng.randn(6, 8).astype(np.float32)
+        self.q0 = rng.randn(2, 8).astype(np.float32)
+        self.extra = rng.randn(2, 8).astype(np.float32)
+        self.core_dels = [1, 3]         # always-core ids
+        self.delta_del = 6              # first id the add publishes
+
+    def setup(self):
+        from repro.serve.engine import EngineConfig, QueryEngine
+        ix = StubIndex(self.base)
+        eng = QueryEngine(ix, EngineConfig(
+            workers=0, linger_ms=0.0, help_after_ms=0.0, max_batch=4))
+        eng.plans = StubPlans()
+        cv = TrackedCondition(eng._cv)
+        wl = TrackedLock(eng._wlock)
+        eng._cv = cv
+        eng._wlock = wl
+        return {
+            "eng": eng, "cv": cv, "wl": wl,
+            "futs": [],
+            "views": {0: _snapshot_view(eng._snapshots[0])},
+            "deleted": [],              # ids whose delete() call returned
+            "lock_violations": [],
+        }
+
+    def observer(self, ctx):
+        cv, wl = ctx["cv"], ctx["wl"]
+
+        def obs(name: str, obj: Any) -> None:
+            if name == "journal.persist" and (cv.held() or wl.held()):
+                where = "_cv" if cv.held() else "_wlock"
+                ctx["lock_violations"].append(f"{name} while {where} held")
+            elif name == "index.delta_cat" and cv.held():
+                ctx["lock_violations"].append(f"{name} while _cv held")
+            elif name == "engine.publish":
+                ctx["views"][obj.epoch] = _snapshot_view(obj)
+        return obs
+
+    # ----------------------------------------------------------- threads
+    def _client(self, ctx) -> None:
+        eng = ctx["eng"]
+        for _ in range(2):              # two submits bracket the races
+            ctx["futs"].append(eng.submit(self.q0, k=2))
+            eng.flush()
+
+    def _deleter(self, ctx) -> None:
+        ctx["eng"].delete(self.core_dels)
+        ctx["deleted"].extend(self.core_dels)
+
+    def _add_deleter(self, ctx) -> None:
+        eng = ctx["eng"]
+        eng.add(self.extra)
+        eng.delete([self.delta_del])    # delta row (core if compacted)
+        ctx["deleted"].append(self.delta_del)
+
+    def threads(self, ctx):
+        return [("c0", lambda: self._client(ctx)),
+                ("del", lambda: self._deleter(ctx)),
+                ("addel", lambda: self._add_deleter(ctx)),
+                ("compact", lambda: ctx["eng"].compact()),
+                ("flush", lambda: ctx["eng"].flush())]
+
+    def finish(self, ctx, result):
+        eng = ctx["eng"]
+        eng.flush()                     # uncontrolled drain
+        eng.compact()                   # quiescent: drop every tombstone
+
+    # ------------------------------------------------------------ checks
+    def check(self, ctx, result):
+        eng = ctx["eng"]
+        ix = eng._index
+        v = list(ctx["lock_violations"])
+        # exactly-once physical drop, across every compaction in the run
+        dropped = [i for batch in ix.dropped_log for i in batch]
+        if len(dropped) != len(set(dropped)):
+            dupes = sorted(i for i in set(dropped) if dropped.count(i) > 1)
+            v.append(f"tombstones physically dropped twice: {dupes}")
+        requested = set(self.core_dels) | {self.delta_del}
+        stray = set(dropped) - requested
+        if stray:
+            v.append(f"never-deleted ids physically dropped: "
+                     f"{sorted(stray)}")
+        # the finish() compaction is quiescent: nothing may survive it
+        if ix._tombstones:
+            v.append(f"tombstones survived the final compaction: "
+                     f"{sorted(ix._tombstones)}")
+        deleted = set(ctx["deleted"])
+        resident = set(np.asarray(ix._core.ids).tolist()) & deleted
+        if resident:
+            v.append(f"deleted ids still physically present after final "
+                     f"compaction: {sorted(resident)}")
+        if set(dropped) != deleted:
+            v.append(f"dropped ids {sorted(dropped)} != applied deletes "
+                     f"{sorted(deleted)} (stalled={result.stalled})")
+        # delivered results: tombstone-aware oracle + no resurrection +
+        # bit-identity across schedules keyed by the VIEW bytes
+        for ci, fut in enumerate(ctx["futs"]):
+            if not fut.done():
+                v.append(f"future {ci} incomplete after drain "
+                         f"(stalled={result.stalled})")
+                continue
+            view = ctx["views"].get(fut.epoch)
+            if view is None:
+                v.append(f"future {ci} bound to unpublished epoch "
+                         f"{fut.epoch}")
+                continue
+            data, ids, alive = view
+            d_exp, i_exp = stub_topk_alive(self.q0, data, ids, alive,
+                                           fut.k)
+            if not (np.array_equal(fut._d, d_exp)
+                    and np.array_equal(fut._i, i_exp)):
+                v.append(f"future {ci} != tombstone-aware oracle for "
+                         f"epoch {fut.epoch}")
+            dead = set() if alive is None else \
+                set(int(x) for x in ids[~alive])
+            got = set(int(x) for x in fut._i.ravel() if x >= 0)
+            zombies = got & dead
+            if zombies:
+                v.append(f"resurrected tombstone(s) {sorted(zombies)} in "
+                         f"a result bound to epoch {fut.epoch}")
+            key = (data.tobytes(), ids.tobytes(),
+                   None if alive is None else alive.tobytes(), fut.k)
+            sig = (fut._d.tobytes(), fut._i.tobytes())
+            prev = self._identity.setdefault(key, sig)
+            if prev != sig:
+                v.append("bit-identity broken across schedules for an "
+                         "identical tombstone view")
+        return v
+
+
 # shortcut constructors (importable names for tests / portfolio)
 def refresh_scenario(**kw) -> RefreshScenario:
     return RefreshScenario(**kw)
@@ -882,6 +1215,10 @@ def engine_scenario(**kw) -> EngineScenario:
 
 def overload_scenario(**kw) -> OverloadScenario:
     return OverloadScenario(**kw)
+
+
+def maintenance_scenario(**kw) -> MaintenanceScenario:
+    return MaintenanceScenario(**kw)
 
 
 # ---------------------------------------------------------------- driver
@@ -978,7 +1315,7 @@ def make_portfolio(budget: int, seed: int = 0,
          RandomStrategy(seed=seed + 2), int(b * 0.10)),
         ("engine.race",
          EngineScenario(name="engine.race", auto_compact=2),
-         RandomStrategy(seed=seed + 3), int(b * 0.13)),
+         RandomStrategy(seed=seed + 3), int(b * 0.11)),
         ("engine.lockfree",
          EngineScenario(name="engine.lockfree", lockfree=True),
          RandomStrategy(seed=seed + 4, p_stall=0.35,
@@ -989,7 +1326,10 @@ def make_portfolio(budget: int, seed: int = 0,
         ("engine.overload",
          OverloadScenario(name="engine.overload"),
          RandomStrategy(seed=seed + 6, p_stall=0.15,
-                        stall_points=ENGINE_STALL), int(b * 0.07)),
+                        stall_points=ENGINE_STALL), int(b * 0.06)),
+        ("engine.maint",
+         MaintenanceScenario(name="engine.maint"),
+         RandomStrategy(seed=seed + 7), int(b * 0.08)),
     ]
     return mix
 

@@ -88,7 +88,8 @@ exact, with or without a pending delta.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import time
+from typing import Iterable, Optional, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -101,6 +102,8 @@ from repro.core.index import (FlatIndex, build_index, index_stats,
                               pad_leaves)
 from repro.core.search import (build_sharded_search, merge_delta_topk,
                                run_search, shard_index, squeeze_k)
+from repro.maintenance.tombstones import (core_dead_mask, delta_alive_mask,
+                                          mask_core)
 from repro.runtime.sharding import mesh_sig
 
 _BOUNDS = ("prefix", "symbox", "paabox")
@@ -193,6 +196,18 @@ class FreshIndex:
         self._mesh = None
         self._mesh_axis = "data"
         self._sharded_fns: dict = {}            # (k, round_leaves, ...) -> fn
+        # ---- lifecycle (repro.maintenance): ids are STABLE and never
+        # reused — `_next_id` only grows, delta position p holds id
+        # `_delta_id0 + p`, and after a tombstone-dropping compaction the
+        # id space is sparse (a dropped id can never resurrect).
+        self._next_id = self._n_base
+        self._delta_id0 = self._n_base
+        self._tombstones: set = set()           # logically-deleted ids
+        self._ttl: dict = {}                    # id -> monotonic deadline
+        self._first_tombstone_at: Optional[float] = None
+        self._masked = None                     # search_view cache ...
+        self._masked_key = None                 # ... keyed (ver, pending)
+        self._lifecycle_ver = 0
 
     # ------------------------------------------------------------------ #
     # construction
@@ -278,13 +293,27 @@ class FreshIndex:
 
     @property
     def n_series(self) -> int:
-        """Total searchable series: compacted core + pending delta."""
-        return self._n_base + self.n_pending
+        """Total searchable series: compacted core + pending delta,
+        MINUS logically-deleted (tombstoned) series — what k may not
+        exceed.  Tombstoned rows stay physical until compact()."""
+        return self._n_base + self.n_pending - len(self._tombstones)
 
     @property
     def n_pending(self) -> int:
-        """Rows sitting in the uncompacted delta buffer."""
+        """Rows sitting in the uncompacted delta buffer (tombstoned
+        delta rows included — they are still physically pending)."""
         return sum(b.shape[0] for b in self._delta)
+
+    @property
+    def n_deleted(self) -> int:
+        """Live tombstones: logically deleted, not yet physically
+        dropped by compact()."""
+        return len(self._tombstones)
+
+    @property
+    def n_ttl(self) -> int:
+        """Series carrying a pending TTL deadline."""
+        return len(self._ttl)
 
     @property
     def series_len(self) -> int:
@@ -312,6 +341,8 @@ class FreshIndex:
         st = index_stats(self._idx)
         st["n_pending"] = self.n_pending
         st["sharded"] = self._mesh is not None
+        st["n_deleted"] = self.n_deleted
+        st["n_ttl"] = self.n_ttl
         return st
 
     def __repr__(self) -> str:
@@ -333,10 +364,13 @@ class FreshIndex:
             (dist, ids): shape (Q,) for k == 1, (Q, k) ascending by
             distance otherwise.  Any pending delta buffer is scanned
             exactly and merged in, so adds are visible immediately,
-            before compact().
+            before compact().  Logically-deleted / TTL-expired series
+            never appear: the search runs over the tombstone-masked
+            view (`search_view`), bit-identical to the tombstone-aware
+            brute-force oracle.
         Raises:
             ValueError: query length != series_len, k < 1, or k exceeds
-                n_series.
+                n_series (which excludes tombstoned series).
 
         `max_rounds` caps the refinement loop (approximate search:
         distances become upper bounds).  round_leaves / pq_budget / the
@@ -362,6 +396,7 @@ class FreshIndex:
         if k > self.n_series:
             raise ValueError(f"k={k} exceeds the {self.n_series} indexed "
                              f"series")
+        core, delta, alive, id0 = self.search_view()
         if self._mesh is not None:
             # the mesh placement is part of the key (not just cleared on
             # shard()): a compiled shard_map search can never be replayed
@@ -377,13 +412,13 @@ class FreshIndex:
                     pq_budget=pq_budget, backend=backend,
                     config=self.config)
                 self._sharded_fns[key] = fn
-            d, i = fn(self._idx, q)
+            d, i = fn(core, q)
         else:
-            d, i = run_search(self._idx, q, k=k, round_leaves=round_leaves,
+            d, i = run_search(core, q, k=k, round_leaves=round_leaves,
                               znorm=self.config.znorm,
                               max_rounds=max_rounds, pq_budget=pq_budget,
                               backend=backend, config=self.config)
-        if not self._delta:
+        if delta is None:
             return d, i
         # fold the exact delta scan into the core answer.  The core
         # search program stays cached across add() calls; only the small
@@ -392,10 +427,47 @@ class FreshIndex:
         # published epoch — same math, different compile amortization.)
         d2 = d[:, None] if k == 1 else d
         i2 = i[:, None] if k == 1 else i
-        md, mi = merge_delta_topk(self.delta_cat, q, d2, i2, k=k,
-                                  n_base=self._n_base,
-                                  znorm=self.config.znorm)
+        md, mi = merge_delta_topk(delta, q, d2, i2, alive, k=k,
+                                  n_base=id0, znorm=self.config.znorm)
         return squeeze_k(md, mi, k)
+
+    def search_view(self):
+        """The tombstone-masked search inputs, as one consistent tuple
+        `(core, delta, delta_alive, delta_id0)`:
+
+        core         the FlatIndex to search — the stored index itself
+                     when nothing is deleted, else a derived view whose
+                     dead rows carry the never-wins sentinel norm
+                     (`maintenance.mask_core`; stored arrays untouched,
+                     shapes unchanged, so compiled plans are reusable)
+        delta        pending rows as one (m, L) device array (None when
+                     empty) — `delta_cat`
+        delta_alive  (m,) bool device mask, False on tombstoned delta
+                     rows (None when all alive)
+        delta_id0    the delta id offset: delta position p is series id
+                     `delta_id0 + p`
+
+        This is what `search()` consumes and what the serving engine
+        captures into each published Snapshot.  The masked view is
+        cached until the next lifecycle change (delete / TTL expiry /
+        add / compact).
+
+        Concurrency: a reader; serialize against writers like search().
+        """
+        key = (self._lifecycle_ver, self.n_pending)
+        if self._masked_key != key:
+            if self._tombstones:
+                dead = core_dead_mask(np.asarray(self._idx.perm),
+                                      self._tombstones)
+                core = mask_core(self._idx, dead)
+                alive = delta_alive_mask(self.n_pending, self._delta_id0,
+                                         self._tombstones)
+            else:
+                core, alive = self._idx, None
+            self._masked = (core, alive)
+            self._masked_key = key
+        core, alive = self._masked
+        return core, self.delta_cat, alive, self._delta_id0
 
     @property
     def delta_cat(self) -> Optional[jnp.ndarray]:
@@ -442,18 +514,29 @@ class FreshIndex:
     # ------------------------------------------------------------------ #
     # incremental updates (Jiffy-style batch delta)
     # ------------------------------------------------------------------ #
-    def add(self, batch) -> "FreshIndex":
+    def add(self, batch, *, ttl_s: Optional[float] = None) -> "FreshIndex":
         """Append `batch` ((L,) or (m, L)) to the delta buffer.  O(1),
         no rebuild; the rows are immediately visible to search() via an
-        exact delta scan.  Ids continue after the existing series.
+        exact delta scan.  Ids continue from the monotone id counter
+        (contiguous with the existing series until the first
+        tombstone-dropping compaction makes the id space sparse).
+
+        `ttl_s` gives every row of THIS batch a time-to-live: after
+        `ttl_s` seconds the rows become tombstones at the next
+        `expire_ttl()` sweep (the engine's MaintenancePolicy schedules
+        sweeps; a TTL'd series thus stays visible at most
+        ttl_s + sweep_interval).
 
         Raises:
-            ValueError: batch shape does not match (m, series_len).
+            ValueError: batch shape does not match (m, series_len), or
+                ttl_s is not positive.
 
         Concurrency: a writer.  Not safe against concurrent readers or
         writers on this facade — the engine's add() wraps it in the
         writer lock and publishes an epoch instead.
         """
+        if ttl_s is not None and ttl_s <= 0:
+            raise ValueError(f"ttl_s must be > 0 or None, got {ttl_s}")
         # np.array (not asarray): the delta buffer must own its rows — a
         # caller reusing its batch buffer between add()s would otherwise
         # silently rewrite pending series before search/compact reads them
@@ -463,9 +546,86 @@ class FreshIndex:
         if b.ndim != 2 or b.shape[1] != self.series_len:
             raise ValueError(
                 f"batch must be (m, {self.series_len}), got {b.shape}")
+        first_id = self._delta_id0 + self.n_pending
         self._delta.append(b)
         self._delta_cat = None
+        self._next_id += b.shape[0]
+        if ttl_s is not None:
+            deadline = time.monotonic() + ttl_s
+            for sid in range(first_id, first_id + b.shape[0]):
+                self._ttl[sid] = deadline
         return self
+
+    # ------------------------------------------------------------------ #
+    # lifecycle (repro.maintenance): logical deletion + TTL expiry
+    # ------------------------------------------------------------------ #
+    def delete(self, ids: Union[int, Iterable[int]]) -> int:
+        """Logically delete series by id: tombstoned rows stop matching
+        any search immediately (masked to the never-wins sentinel, see
+        `repro.maintenance.tombstones`) and are physically dropped —
+        exactly once — by the next compact().  Ids are never reused, so
+        a deleted id can never resurrect.
+
+        Idempotent: already-tombstoned or already-dropped ids are
+        skipped.  Returns the number of NEWLY tombstoned series.
+
+        Raises:
+            ValueError: an id is negative or was never assigned.
+
+        Concurrency: a writer — serialize like add() (the engine's
+        delete() wraps this in its writer lock and publishes an epoch).
+        """
+        if isinstance(ids, (int, np.integer)):
+            ids = (int(ids),)
+        core_ids = None                     # host perm pulled at most once
+        d_lo, d_hi = self._delta_id0, self._delta_id0 + self.n_pending
+        newly = 0
+        for sid in ids:
+            sid = int(sid)
+            if sid < 0 or sid >= self._next_id:
+                raise ValueError(
+                    f"id {sid} was never assigned (ids run 0.."
+                    f"{self._next_id - 1})")
+            if sid in self._tombstones:
+                continue
+            if not d_lo <= sid < d_hi:
+                if core_ids is None:
+                    perm = np.asarray(self._idx.perm)
+                    valid = np.asarray(self._idx.valid)
+                    core_ids = set(perm[valid].tolist())
+                if sid not in core_ids:
+                    continue                # already dropped by a compact
+            self._tombstones.add(sid)
+            self._ttl.pop(sid, None)
+            newly += 1
+        if newly:
+            if self._first_tombstone_at is None:
+                self._first_tombstone_at = time.monotonic()
+            self._lifecycle_ver += 1
+        return newly
+
+    def expire_ttl(self, now: Optional[float] = None) -> int:
+        """Convert every TTL whose deadline has passed into a tombstone
+        (the TTL expiry sweep — `MaintenancePolicy` schedules this on
+        the freshness class's `sweep_interval_s`).  `now` is a
+        `time.monotonic()` value (None = current time; tests pass an
+        explicit clock).  Returns the number of series expired.
+
+        Concurrency: a writer — serialize like delete().
+        """
+        if now is None:
+            now = time.monotonic()
+        expired = [sid for sid, dl in self._ttl.items() if dl <= now]
+        return self.delete(expired) if expired else 0
+
+    @property
+    def tombstone_age_s(self) -> float:
+        """Seconds since the oldest live tombstone was created (0.0 when
+        none) — what `MaintenancePolicy.due` compares to the freshness
+        class's `staleness_budget_s`."""
+        if self._first_tombstone_at is None:
+            return 0.0
+        return time.monotonic() - self._first_tombstone_at
 
     def compact(self) -> "FreshIndex":
         """Merge the delta buffer into the main index with ONE incremental
@@ -492,16 +652,26 @@ class FreshIndex:
         """Compute the compacted core WITHOUT mutating this index — the
         heavy merge can then run outside a serving lock (QueryEngine.add
         does this for auto-compaction).  Returns an opaque token for
-        commit_compact(), or None when there is no pending delta.
+        commit_compact(), or None when there is no pending delta AND no
+        live tombstone (nothing to merge, nothing to drop).
+
+        Tombstoned ids are passed to the merge as `drop_ids`, so the
+        prepared core has them physically removed; commit_compact()
+        refuses the token if the tombstone set changed in between
+        (exactly-once drop).
 
         Concurrency: read-only preparation; the caller must prevent any
-        writer from changing the delta between prepare and commit (the
-        engine holds its writer lock across the pair).
+        writer from changing the delta or tombstones between prepare and
+        commit (the engine holds its writer lock across the pair).
         """
-        if not self._delta:
+        drops = frozenset(self._tombstones)
+        if not self._delta and not drops:
             return None
-        delta = np.concatenate(self._delta, axis=0)
-        merged = merge_sorted_delta(self._idx, delta, self.config)
+        delta = (np.concatenate(self._delta, axis=0) if self._delta
+                 else np.zeros((0, self.series_len), np.float32))
+        merged = merge_sorted_delta(self._idx, delta, self.config,
+                                    drop_ids=drops or None,
+                                    delta_id0=self._delta_id0)
         if self._mesh is not None:
             # pre-place the merged core over the current mesh HERE, in
             # the heavy phase: commit_compact's re-shard then finds the
@@ -511,15 +681,20 @@ class FreshIndex:
             n_dev = self._mesh.shape[self._mesh_axis]
             merged = shard_index(pad_leaves(merged, n_dev), self._mesh,
                                  axis=self._mesh_axis)
-        return (merged, delta.shape[0], len(self._delta))
+        return (merged, delta.shape[0], len(self._delta), drops)
 
     def commit_compact(self, token) -> "FreshIndex":
         """Install a prepare_compact() result `token` (O(1) pointer swap
-        plus, for sharded indexes, the re-shard device_puts).
+        plus, for sharded indexes, the re-shard device_puts).  Clears
+        the tombstone set the merge dropped and advances the delta id
+        offset to the monotone high-water mark, so dropped ids stay
+        retired forever.
 
         Raises:
-            RuntimeError: the delta changed since the token was prepared
-                (a raced add) — raised instead of dropping newer series.
+            RuntimeError: the delta or the tombstone set changed since
+                the token was prepared (a raced add/delete) — raised
+                instead of dropping newer series or dropping a
+                tombstone zero or two times.
 
         Concurrency: a writer; the caller must serialize the
         prepare/commit pair against every other writer (the engine's
@@ -527,16 +702,27 @@ class FreshIndex:
         """
         if token is None:
             return self
-        merged, n_rows, n_batches = token
+        merged, n_rows, n_batches, drops = token
         if (len(self._delta) != n_batches
                 or sum(b.shape[0] for b in self._delta) != n_rows):
             raise RuntimeError(
                 "delta changed between prepare_compact and commit_compact; "
                 "serialize writers around the prepare/commit pair")
+        if frozenset(self._tombstones) != drops:
+            raise RuntimeError(
+                "tombstones changed between prepare_compact and "
+                "commit_compact; serialize writers around the "
+                "prepare/commit pair")
         self._idx = merged
-        self._n_base += n_rows
+        self._n_base = int(jnp.sum(merged.valid))
         self._delta = []
         self._delta_cat = None
+        self._tombstones = set()
+        self._first_tombstone_at = None
+        self._delta_id0 = self._next_id
+        self._masked = None
+        self._masked_key = None
+        self._lifecycle_ver += 1
         if self._mesh is not None:
             mesh, axis = self._mesh, self._mesh_axis
             self._mesh = None
@@ -561,6 +747,10 @@ class FreshIndex:
         self._mesh = mesh
         self._mesh_axis = axis
         self._sharded_fns = {}
+        # the masked search view wraps the (now stale) placement
+        self._masked = None
+        self._masked_key = None
+        self._lifecycle_ver += 1
         return self
 
     # ------------------------------------------------------------------ #
@@ -580,9 +770,21 @@ class FreshIndex:
         delta = (np.concatenate(self._delta, axis=0) if self._delta
                  else np.zeros((0, L), np.float32))
         tree = {"index": self._idx._asdict(), "delta": delta}
+        # TTL deadlines are monotonic-clock absolutes, meaningless in
+        # another process: persist REMAINING seconds and re-anchor on
+        # load (a restart therefore extends a TTL by at most the
+        # downtime — the conservative direction: nothing expires early).
+        now = time.monotonic()
         extra = {"config": self.config.to_dict(),
                  "n_series": self._n_base,
-                 "format": "fresh-index-v1"}
+                 "format": "fresh-index-v1",
+                 "lifecycle": {
+                     "next_id": self._next_id,
+                     "delta_id0": self._delta_id0,
+                     "tombstones": sorted(self._tombstones),
+                     "ttl": [[int(sid), max(0.0, dl - now)]
+                             for sid, dl in sorted(self._ttl.items())],
+                 }}
         return save_checkpoint(directory, step, tree, extra=extra)
 
     @classmethod
@@ -617,6 +819,21 @@ class FreshIndex:
         delta = arrays.get("delta")
         if delta is not None and delta.shape[0]:
             out._delta = [np.asarray(delta, np.float32)]
+        life = extra.get("lifecycle")
+        if life is not None:
+            now = time.monotonic()
+            out._next_id = int(life["next_id"])
+            out._delta_id0 = int(life["delta_id0"])
+            out._tombstones = {int(t) for t in life["tombstones"]}
+            out._ttl = {int(s): now + float(r) for s, r in life["ttl"]}
+            if out._tombstones:
+                # age restarts at load: conservative (drops no later
+                # than staleness_budget_s after the restart)
+                out._first_tombstone_at = now
+        else:
+            # pre-lifecycle checkpoint: ids were contiguous
+            out._next_id = out._n_base + out.n_pending
+            out._delta_id0 = out._n_base
         return out
 
     def reload(self, directory: str, step: Optional[int] = None
@@ -657,5 +874,13 @@ class FreshIndex:
         self._delta_cat = None
         self._mesh = None
         self._sharded_fns = {}
+        self._next_id = loaded._next_id
+        self._delta_id0 = loaded._delta_id0
+        self._tombstones = loaded._tombstones
+        self._ttl = loaded._ttl
+        self._first_tombstone_at = loaded._first_tombstone_at
+        self._masked = None
+        self._masked_key = None
+        self._lifecycle_ver += 1
         return self
 

@@ -498,6 +498,7 @@ class IndexBuilder:
 
 
 def merge_sorted_delta(core: FlatIndex, delta, config, *,
+                       drop_ids=None, delta_id0: Optional[int] = None,
                        workers: int = 0, part_rows: int = 2048,
                        injectors: Optional[Injectors] = None,
                        executor: Optional[Executor] = None) -> FlatIndex:
@@ -511,12 +512,25 @@ def merge_sorted_delta(core: FlatIndex, delta, config, *,
     already-stored series.  Only the delta is normalized + summarized
     (once, in float32) and cast to the storage dtype (once).  With
     float32 storage the result is bit-identical to a fresh `IndexBuilder`
-    build over the concatenated data; delta ids continue after the core's.
+    build over the concatenated data; delta ids continue at the
+    `delta_id0` offset (default: the core's valid row count — the
+    historical contiguous-id behavior).
+
+    `drop_ids` (iterable of series ids) is the PHYSICAL half of logical
+    deletion: tombstoned core rows are filtered out of the merge input
+    (removing a row from an already-sorted run keeps it sorted) and
+    tombstoned delta rows never enter the delta run, so each dropped id
+    disappears exactly once and the output arrays shrink by exactly the
+    dropped count.  Ids are never reused, so compacting an already
+    drop-free index with the same `drop_ids` is the identity —
+    compact∘compact == compact holds with or without drops.
     """
     delta = np.asarray(delta, np.float32)
     if delta.ndim != 2:
         raise ValueError(f"delta must be (m, L), got shape {delta.shape}")
-    if delta.shape[0] == 0:
+    drops = (np.unique(np.fromiter(drop_ids, np.int64))
+             if drop_ids else np.empty(0, np.int64))
+    if delta.shape[0] == 0 and drops.size == 0:
         return core
 
     perm_np = np.asarray(core.perm)
@@ -525,39 +539,63 @@ def merge_sorted_delta(core: FlatIndex, delta, config, *,
     if not bool(valid_np[:n_base].all()):
         raise ValueError("core index has non-trailing padding rows; "
                          "cannot merge incrementally")
+    if delta_id0 is None:
+        delta_id0 = n_base
 
-    # ---- delta run: the builder's own summarize/key/sort/merge phases ----
+    # ---- core run: the valid prefix minus tombstoned rows (a filtered
+    # sorted run is still sorted) --------------------------------------
+    core_perm = perm_np[:n_base].astype(np.int32)
+    keep = (~np.isin(core_perm, drops) if drops.size
+            else np.ones(n_base, bool))
+    core_series = np.asarray(core.series)[:n_base][keep]
+    core_paa = np.asarray(core.paa)[:n_base][keep]
+    core_words = np.asarray(core.words)[:n_base][keep]
+    core_sqn = np.asarray(core.sq_norms)[:n_base][keep]
+    core_perm = core_perm[keep]
+    n_core = int(keep.sum())
+
+    # ---- delta rows: tombstoned ids never enter the run ---------------
+    pos = np.arange(delta.shape[0], dtype=np.int64)
+    dkeep = (~np.isin(delta_id0 + pos, drops) if drops.size
+             else np.ones(delta.shape[0], bool))
+    delta_kept = delta[dkeep]
+    delta_ids = (delta_id0 + pos[dkeep]).astype(np.int32)
+
     b = IndexBuilder(config, workers=workers, part_rows=part_rows,
                      injectors=injectors, executor=executor)
+    if delta_kept.shape[0] == 0:
+        # Drops-only compaction: the filtered core is already in key
+        # order, so re-finalize it directly (re-blocks leaves, re-pads).
+        return _finalize_from_order(
+            core_series, core_paa, core_words, core_sqn,
+            np.arange(n_core, dtype=np.int64), core_perm, config,
+            b._run_phase, b.part_rows)
+
+    # ---- delta run: the builder's own summarize/key/sort/merge phases ----
     d_order, d_xn, d_paa, d_words, d_sqn, d_keys = \
-        b.feed(delta)._sorted_run()
+        b.feed(delta_kept)._sorted_run()
     d_keys = d_keys[d_order]
     d_series = b._cast_series(d_xn)[d_order]
     d_paa = d_paa[d_order]
     d_words = d_words[d_order]
     d_sqn = d_sqn[d_order]
 
-    # ---- core run: keys recomputed from the STORED words (exact ints) ----
-    core_series = np.asarray(core.series)[:n_base]
-    core_paa = np.asarray(core.paa)[:n_base]
-    core_words = np.asarray(core.words)[:n_base]
-    core_sqn = np.asarray(core.sq_norms)[:n_base]
-    core_perm = perm_np[:n_base].astype(np.int32)
-
+    # ---- core keys recomputed from the STORED words (exact ints) ----
     n_lanes = d_keys.shape[1]
-    core_keys = np.empty((n_base, n_lanes), np.int32)
-    n_kparts = -(-n_base // b.part_rows)
+    core_keys = np.empty((n_core, n_lanes), np.int32)
+    n_kparts = -(-n_core // b.part_rows)
 
     def p_core_key(i: int) -> None:
         lo = i * b.part_rows
-        hi = min(lo + b.part_rows, n_base)
+        hi = min(lo + b.part_rows, n_core)
         core_keys[lo:hi] = isax.interleaved_key_np(core_words[lo:hi],
                                                    config.bits)
     b._run_phase("key", n_kparts, p_core_key)
 
     # ---- one stable two-run merge: binary-search each sorted delta key
     # into the sorted core (side='right' -> core wins key ties, which
-    # preserves the global original-id tie order: core ids < delta ids;
+    # preserves the global original-id tie order: core ids < delta ids
+    # because ids are monotone and delta_id0 follows every core id;
     # equal delta keys stay in fed order since d_order is stable).  This
     # is O(m log n) — no global re-sort of the core ever happens. --------
     out: dict = {}
@@ -565,8 +603,8 @@ def merge_sorted_delta(core: FlatIndex, delta, config, *,
     def p_merge(_: int) -> None:
         m = d_keys.shape[0]
         out["order"] = _merge_two_sorted(
-            np.arange(n_base, dtype=np.int64),
-            np.arange(n_base, n_base + m, dtype=np.int64),
+            np.arange(n_core, dtype=np.int64),
+            np.arange(n_core, n_core + m, dtype=np.int64),
             isax.pack_keys_bytes(core_keys), isax.pack_keys_bytes(d_keys))
     b._run_phase("merge", 1, p_merge)
 
@@ -574,8 +612,7 @@ def merge_sorted_delta(core: FlatIndex, delta, config, *,
     paa_src = np.concatenate([core_paa, d_paa])
     words_src = np.concatenate([core_words, d_words])
     sqn_src = np.concatenate([core_sqn, d_sqn])
-    perm_src = np.concatenate(
-        [core_perm, (n_base + d_order).astype(np.int32)])
+    perm_src = np.concatenate([core_perm, delta_ids[d_order]])
 
     return _finalize_from_order(series_src, paa_src, words_src, sqn_src,
                                 out["order"], perm_src, config,

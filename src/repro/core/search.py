@@ -297,10 +297,19 @@ search_plan.__doc__ = search_plan_impl.__doc__
 
 
 def _bruteforce_topk(raw: jnp.ndarray, queries: jnp.ndarray,
-                     *, k: int, znorm: bool
+                     *, k: int, znorm: bool,
+                     alive: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """(Q, k) exact scan over all series (matmul-form selection, direct-form
-    reported distances) — the traceable body of `search_bruteforce`."""
+    reported distances) — the traceable body of `search_bruteforce`.
+
+    `alive` (an (n,) bool mask, None = all rows) makes the scan
+    tombstone-aware: masking happens on the DISTANCES, after
+    normalization, because mangling a dead row's values would hit the
+    zero-variance znorm path and produce small (wrong) distances.  A
+    dead row can still be *selected* when k exceeds the alive count;
+    such slots report the BIG sentinel distance and id -1, exactly like
+    the index search's not-found slots."""
     x = isax.znormalize(raw).astype(jnp.float32) if znorm \
         else raw.astype(jnp.float32)
     q = isax.znormalize(queries).astype(jnp.float32) if znorm \
@@ -308,11 +317,17 @@ def _bruteforce_topk(raw: jnp.ndarray, queries: jnp.ndarray,
     d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(x * x, -1)[None, :]
           - 2.0 * q @ x.T)
     d2 = jnp.maximum(d2, 0.0)
+    if alive is not None:
+        d2 = jnp.where(alive[None, :], d2, BIG)
     _, i = jax.lax.top_k(-d2, k)                        # (Q, k)
     d_exact = jnp.sum(jnp.square(q[:, None, :] - x[i]), axis=-1)
+    if alive is not None:
+        d_exact = jnp.where(alive[i], d_exact, BIG)
     resort = jnp.argsort(d_exact, axis=1)               # see search(): exact
     d = jnp.sqrt(jnp.take_along_axis(d_exact, resort, axis=1))
     i = jnp.take_along_axis(i.astype(jnp.int32), resort, axis=1)
+    if alive is not None:
+        i = jnp.where(alive[i], i, -1)
     return d, i
 
 
@@ -324,8 +339,23 @@ def _merge_topk(d_a, i_a, d_b, i_b, k: int):
     return -neg, jnp.take_along_axis(alli, pos, axis=1)
 
 
+def _shift_delta_ids(di: jnp.ndarray, n_base: int,
+                     delta_alive: Optional[jnp.ndarray]) -> jnp.ndarray:
+    """Delta scan position -> series id.  `n_base` is the DELTA ID
+    OFFSET: delta position p holds series id `n_base + p` (historically
+    equal to the core row count; after a tombstone-dropping compaction
+    ids are sparse and the offset keeps counting from the high-water
+    mark).  With a tombstone mask, not-found slots carry position -1 and
+    must stay -1 rather than alias id `n_base - 1`."""
+    if delta_alive is None:
+        return di + n_base
+    return jnp.where(di >= 0, di + n_base, -1)
+
+
 def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
-                         queries: jnp.ndarray, *, k: int, n_base: int,
+                         queries: jnp.ndarray,
+                         delta_alive: Optional[jnp.ndarray] = None,
+                         *, k: int, n_base: int,
                          round_leaves: int = 8, znorm: bool = True,
                          max_rounds: Optional[int] = None,
                          backend: str = "ref",
@@ -336,18 +366,25 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
     The Jiffy-style snapshot the serving layer publishes on add(): the
     pruned core index answers via `search_plan_impl`, the unsorted (m, L)
     delta is scanned EXACTLY, and the two candidate sets merge into one
-    (Q, k) result whose delta ids continue after the `n_base` core series.
+    (Q, k) result whose delta ids continue at the `n_base` id offset.
     One fused program, AOT-compiled once per published epoch by
     serve.PlanCache.  (The facade instead keeps its cached core program
     and re-jits only `merge_delta_topk` — cheaper for add-heavy one-shot
     use, where every add would otherwise recompile the whole plan.)
+
+    Tombstones: dead CORE rows arrive pre-masked (the caller passes a
+    `maintenance.mask_core` view whose dead norms are the BIG sentinel);
+    dead DELTA rows are masked here via `delta_alive` (an (m,) bool
+    mask, None = all alive).
     """
     d, i, rounds = search_plan_impl(
         idx, queries, k=k, round_leaves=round_leaves, znorm=znorm,
         max_rounds=max_rounds, backend=backend, pq_budget=pq_budget)
     kd = min(k, delta.shape[0])
-    dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm)
-    md, mi = _merge_topk(d, i, dd, di + n_base, k)
+    dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm,
+                              alive=delta_alive)
+    md, mi = _merge_topk(d, i, dd,
+                         _shift_delta_ids(di, n_base, delta_alive), k)
     return md, mi, rounds
 
 
@@ -360,15 +397,20 @@ snapshot_search.__doc__ = snapshot_search_impl.__doc__
 
 @functools.partial(jax.jit, static_argnames=("k", "n_base", "znorm"))
 def merge_delta_topk(delta: jnp.ndarray, queries: jnp.ndarray,
-                     d: jnp.ndarray, i: jnp.ndarray, *, k: int,
+                     d: jnp.ndarray, i: jnp.ndarray,
+                     delta_alive: Optional[jnp.ndarray] = None, *, k: int,
                      n_base: int, znorm: bool = True
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fold an exact delta scan into already-computed (Q, k) main-index
     results — the sharded facade path, where the core answer comes from a
-    separate shard_map program and only the merge runs here."""
+    separate shard_map program and only the merge runs here.  `n_base`
+    is the delta id offset and `delta_alive` the optional tombstone
+    mask (see `snapshot_search_impl`)."""
     kd = min(k, delta.shape[0])
-    dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm)
-    return _merge_topk(d, i, dd, di + n_base, k)
+    dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm,
+                              alive=delta_alive)
+    return _merge_topk(d, i, dd,
+                       _shift_delta_ids(di, n_base, delta_alive), k)
 
 
 def squeeze_k(d: jnp.ndarray, i: jnp.ndarray, k: int):
@@ -426,7 +468,8 @@ def search(idx: FlatIndex, queries: jnp.ndarray, *,
 
 @functools.partial(jax.jit, static_argnames=("k", "znorm"))
 def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
-                      *, k: int = 1, znorm: bool = True
+                      *, k: int = 1, znorm: bool = True,
+                      alive: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Top-k oracle: exact scan over all series (matmul form).
 
@@ -436,8 +479,12 @@ def search_bruteforce(raw: jnp.ndarray, queries: jnp.ndarray,
     keyword-only: the old signature had znorm third, and a positional k
     would silently reinterpret those call sites.  NOT deprecated: this is
     the testing oracle the migration table keeps.
+
+    `alive` ((n,) bool, None = all rows) makes it the TOMBSTONE-AWARE
+    oracle: dead rows never win, over-large k reports (BIG, -1) slots —
+    what the lifecycle tests compare every search layer against.
     """
-    d, i = _bruteforce_topk(raw, queries, k=k, znorm=znorm)
+    d, i = _bruteforce_topk(raw, queries, k=k, znorm=znorm, alive=alive)
     return squeeze_k(d, i, k)
 
 

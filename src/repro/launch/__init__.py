@@ -1,1 +1,1 @@
-"""Launchers: production mesh, multi-pod dry-run, train/serve drivers."""
+"""Deployment sizing: production mesh specs + HLO roofline cost walker."""

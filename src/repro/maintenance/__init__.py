@@ -1,0 +1,34 @@
+"""Lifecycle subsystem: delete/TTL tombstones + policy-driven maintenance.
+
+The index can now FORGET.  Two halves, mirroring how Jiffy
+(arXiv:2102.01044) rides batch *removals* on the same lock-free snapshot
+machinery as batch inserts:
+
+* `tombstones` — logical deletion.  `FreshIndex.delete(ids)` and
+  TTL expiry record tombstoned series ids on the host; searches run
+  against a derived MASKED view (dead core rows get the padding-row
+  sentinel norm, dead delta rows an explicit alive mask) so a deleted
+  series can never win a top-k slot, while the stored arrays stay
+  byte-identical — the same trick the builder already uses for padding
+  rows.  Compaction (`core.builder.merge_sorted_delta(drop_ids=...)`)
+  physically drops tombstoned rows exactly once.
+
+* `policy` — `MaintenancePolicy` + per-index freshness classes
+  (HOT / STANDARD / ARCHIVE) that schedule TTL sweeps, auto-compaction
+  and checkpointing by STALENESS BUDGET instead of the single
+  `auto_compact_rows` row count.  The serving engine runs each due task
+  as a journal-registered part, so a dead maintainer is helped by any
+  surviving worker — never wedged — exactly like a dispatched batch.
+
+See docs/SERVING.md "Maintenance & freshness tiers" for knob semantics.
+"""
+
+from .policy import (ARCHIVE, HOT, STANDARD, FreshnessClass,
+                     MaintenancePolicy, MaintenanceState)
+from .tombstones import core_dead_mask, delta_alive_mask, mask_core
+
+__all__ = [
+    "ARCHIVE", "HOT", "STANDARD", "FreshnessClass", "MaintenancePolicy",
+    "MaintenanceState",
+    "core_dead_mask", "delta_alive_mask", "mask_core",
+]

@@ -1,0 +1,90 @@
+"""Tombstone masking: a logically-deleted series must never win top-k.
+
+The search computation reads exactly five core fields — series,
+sq_norms, perm, leaf_lo, leaf_hi — and already has a row class it
+provably never selects: builder padding rows, whose squared norm is the
+1e30 sentinel (matmul-form distances come out >= BIG, so they lose every
+BSF fold and every brute-force top-k).  Tombstoning reuses that
+invariant instead of inventing a parallel one:
+
+* CORE rows: a derived view replaces `sq_norms` with the sentinel on
+  dead rows (`mask_core`).  All other arrays are shared, the stored
+  index stays byte-identical, compiled plan SHAPES are unchanged, so
+  deleting recompiles nothing.  Leaf bounds keep counting dead rows —
+  a stale bound is merely a less tight LOWER bound, so exactness holds.
+
+* DELTA rows: the delta is scanned raw and z-normalized inside the
+  plan, so value-mangling a dead row would hit the zero-variance znorm
+  path and produce small (wrong) distances.  Dead delta rows instead
+  carry an explicit boolean alive mask (`delta_alive_mask`) that
+  `core.search._bruteforce_topk` applies AFTER normalization, masking
+  their distances to BIG before selection.
+
+Both masks derive from one host-side tombstone id set owned by
+`FreshIndex`; ids are stable and never reused (monotone `_next_id`), so
+a compacted-away id can never resurrect.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import FlatIndex
+
+# must match core.search.BIG / the builder's padding-row sentinel
+DEAD_NORM = np.float32(1e30)
+
+
+def _ids_array(ids: Iterable[int]) -> np.ndarray:
+    return np.fromiter(ids, dtype=np.int64)
+
+
+def core_dead_mask(perm: np.ndarray, tombstones: Iterable[int]
+                   ) -> np.ndarray:
+    """(n_rows,) bool: True where the core row's series id is tombstoned.
+
+    `perm` is the core's row -> original-id map (host array, padding
+    rows carry -1 and never match a real id).
+    """
+    tomb = _ids_array(tombstones)
+    if tomb.size == 0:
+        return np.zeros(perm.shape[0], bool)
+    return np.isin(perm, tomb)
+
+
+def mask_core(core: FlatIndex, dead_rows: np.ndarray) -> FlatIndex:
+    """A search view of `core` whose dead rows can never be selected.
+
+    Replaces `sq_norms` with the padding sentinel on dead rows; every
+    other field (series bytes, paa, words, perm, leaf bounds) is shared
+    with the stored index.  The masked norms are re-placed with the
+    original array's sharding, so a mesh-sharded core stays sharded.
+    """
+    if not dead_rows.any():
+        return core
+    sqn = np.asarray(core.sq_norms)
+    sqn = np.where(dead_rows, DEAD_NORM, sqn).astype(np.float32)
+    masked = jax.device_put(sqn, core.sq_norms.sharding)
+    return core._replace(sq_norms=masked)
+
+
+def delta_alive_mask(n_rows: int, delta_id0: int,
+                     tombstones: Iterable[int]) -> Optional[jnp.ndarray]:
+    """(n_rows,) bool device array, False on tombstoned delta positions.
+
+    Delta position p holds series id `delta_id0 + p`.  Returns None when
+    every row is alive (the common case), so plans without deletions
+    trace the maskless program.
+    """
+    alive = np.ones(n_rows, bool)
+    for t in tombstones:
+        p = t - delta_id0
+        if 0 <= p < n_rows:
+            alive[p] = False
+    if alive.all():
+        return None
+    return jnp.asarray(alive)

@@ -1,4 +1,4 @@
-"""Distributed runtime: work journal + helping, elasticity, sharding plan.
+"""Distributed runtime: work journal + helping, elasticity, mesh identity.
 
 One import surface over the three runtime modules, so the serving layer
 (`repro.serve` registers every dispatched batch as a journal part) and
@@ -9,21 +9,18 @@ module paths:
                 paper's backoff-then-help rule (T_avg, Section V-A)
     elastic   — ElasticController / StragglerMonitor / plan_mesh_for:
                 re-mesh on pod loss, EWMA straggler flagging
-    sharding  — ShardingPlan / make_plan / constrain: logical-axis ->
-                mesh-axis placement for the model stack
+    sharding  — mesh_sig: hashable mesh-placement identity every
+                per-mesh compiled-plan cache keys on
 """
 
 from .elastic import (ElasticController, MeshSpec,  # noqa: F401
                       StragglerMonitor, plan_mesh_for, plan_serving_mesh)
 from .journal import PartState, WorkJournal  # noqa: F401
-from .sharding import (ShardingPlan, active_plan, batch_axes_for,  # noqa: F401
-                       constrain, make_plan, mesh_sig, seq_attn_specs,
-                       tree_param_shardings)
+from .sharding import mesh_sig  # noqa: F401
 
 __all__ = [
     "ElasticController", "MeshSpec", "StragglerMonitor", "plan_mesh_for",
     "plan_serving_mesh",
     "PartState", "WorkJournal",
-    "ShardingPlan", "active_plan", "batch_axes_for", "constrain",
-    "make_plan", "mesh_sig", "seq_attn_specs", "tree_param_shardings",
+    "mesh_sig",
 ]

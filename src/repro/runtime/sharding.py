@@ -1,279 +1,20 @@
-"""Sharding planner: logical axes -> mesh axes, per (arch, mesh).
+"""Mesh placement identity for the sharded index + serving layer.
 
-Every parameter is created with a tuple of LOGICAL axis names (layers.py's
-`param()`), and activations are constrained through `constrain(x, kind)`.
-This module decides, once per (ModelConfig, Mesh), how each logical axis
-maps onto physical mesh axes — including the fallbacks that make all ten
-assigned architectures shardable on a fixed (data=16, model=16) mesh:
-
-  * attention TP on the *head* axis when n_heads % model == 0, otherwise
-    SEQUENCE sharding of q (heads replicated, KV gathered) — llama4's 40
-    heads and musicgen's 24 heads don't divide 16;
-  * KV heads sharded only when divisible (else replicated — MQA-style TP);
-  * MoE expert-parallel when n_experts % model == 0 (llama4 128, jamba 16),
-    otherwise per-expert d_ff TP (qwen2's 60 experts, d_ff 1408 = 16*88);
-  * Mamba/SSD TP over the SSM *head_dim* (P) axis — every SSD einsum keeps
-    P as a pass-through output axis, so cutting P is collective-free inside
-    the mixer (this also gives mamba2-130m a real TP dimension);
-  * vocab always sharded over model (padded to 128*model lanes upstream);
-  * FSDP: d_model-sized param dims shard over 'data' (ZeRO-3 style
-    all-gather-on-use), enabled per-arch (the 400B needs it; 130M doesn't).
-
-The plan is trace-time state: `with plan.activate():` installs it for the
-duration of a jit trace; layers call constrain()/param_spec() against the
-active plan.  No plan active => everything is a no-op (smoke tests).
+Historically this module carried a full logical-axis -> mesh-axis
+placement planner for an LLM layer stack; that scaffolding left with
+the model stack (see CHANGES.md).  What the data-series index actually
+keys on is the one primitive below: a hashable fingerprint of a mesh
+PLACEMENT, so every per-mesh compiled-program cache can tell an elastic
+re-mesh apart from the mesh it was compiled for.
 """
 
 from __future__ import annotations
 
-import re
-import threading
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from typing import Tuple
 
-import jax
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.configs.base import ModelConfig
-
-_STATE = threading.local()
-
-
-def active_plan() -> Optional["ShardingPlan"]:
-    return getattr(_STATE, "plan", None)
-
-
-@dataclass
-class ShardingPlan:
-    mesh: Mesh
-    cfg: ModelConfig
-    dp_axes: Tuple[str, ...]            # ('pod', 'data') or ('data',)
-    model_axis: Optional[str]           # 'model' (None = single-axis mesh)
-    logical_map: Dict[str, Optional[object]] = field(default_factory=dict)
-    attn_mode: str = "heads"            # heads|seq
-    ep_mode: str = "experts"            # experts|ff_expert|none
-    fsdp: bool = True
-    seq_parallel_norms: bool = False    # beyond-paper: Megatron-SP residuals
-    bf16_reduce: bool = False           # bf16 TP psums (half wire bytes)
-    moe_a2a: bool = False               # token-a2a EP (weights never move)
-
-    # ------------------------------------------------------------------
-    def spec_for_logical(self, axes: Tuple[Optional[str], ...]) -> P:
-        return P(*[self.logical_map.get(a) if a else None for a in axes])
-
-    def param_sharding(self, axes: Tuple[Optional[str], ...]) -> NamedSharding:
-        return NamedSharding(self.mesh, self.spec_for_logical(axes))
-
-    # trace-time context -----------------------------------------------
-    def activate(self):
-        plan = self
-
-        class _Ctx:
-            def __enter__(self):
-                _STATE.plan = plan
-                return plan
-
-            def __exit__(self, *a):
-                _STATE.plan = None
-
-        return _Ctx()
-
-
-# activation kinds -> logical axes per array dim (None = unsharded)
-_ACT_KINDS: Dict[str, Tuple[Optional[str], ...]] = {
-    "btd":        ("batch", "seq_sp", None),
-    "bt":         ("batch", None),
-    "q_heads":    ("batch", "q_seq", "heads_act", None),
-    "kv":         ("batch", None, "kv_heads_act", None),
-    "kv_cache":   ("batch", "kv_seq", "kv_heads_act", None),
-    # NB: ff/vocab already use 'model'; the seq dim must stay unsharded here
-    # or the spec would name 'model' twice (Megatron-SP gathers seq at the
-    # first TP matmul anyway — GSPMD infers that from this constraint pair).
-    "ff_act":     ("batch", None, "ff"),
-    "logits":     ("batch", None, "vocab"),
-    "moe_disp":   ("batch", None, "experts", None),
-    "moe_act":    ("batch", "experts", None, "ff_expert"),
-    "ssm_xh":     ("batch", "seq_sp", "ssm_h", "ssm_p"),  # (B,S,H,P)
-    "ssm_state":  ("batch", "ssm_h", None, "ssm_p"),      # (B,H,N,P)
-}
-
-
-def _axes_size(mesh: Mesh, entry) -> int:
-    if entry is None:
-        return 1
-    if isinstance(entry, str):
-        return mesh.shape[entry]
-    return int(np.prod([mesh.shape[a] for a in entry]))
-
-
-def constrain(x: jax.Array, kind: str) -> jax.Array:
-    """Apply the active plan's sharding constraint for this activation kind.
-
-    Dims whose size is not divisible by the mapped mesh axes are left
-    unconstrained (e.g. global_batch=1 for long_500k cannot shard over
-    'data'; GSPMD would pad — we prefer explicit replication)."""
-    plan = active_plan()
-    if plan is None:
-        return x
-    axes = _ACT_KINDS[kind]
-    assert len(axes) == x.ndim, (kind, axes, x.shape)
-    entries = []
-    for i, a in enumerate(axes):
-        e = plan.logical_map.get(a) if a else None
-        if isinstance(e, tuple):              # dp axes: best divisible subset
-            e = batch_axes_for(plan, x.shape[i])
-        elif e and x.shape[i] % _axes_size(plan.mesh, e) != 0:
-            e = None
-        entries.append(e)
-    spec = P(*entries)
-    return jax.lax.with_sharding_constraint(x, NamedSharding(plan.mesh, spec))
-
-
-def batch_axes_for(plan: "ShardingPlan", batch: int):
-    """The dp-axes SUBSET with the largest product dividing the batch.
-
-    Greedy prefix order is not enough: pure-DP on the 2x16x16 mesh has
-    dp_axes (pod, data, model) = 512 but train_4k's batch is 256 — the
-    best split is (data, model) = 256 with pod replicated (2x sample
-    redundancy, minimal per-chip wall time), not (pod, data) = 32 with the
-    model axis silently recomputing everything 16x (measured)."""
-    import itertools
-    best: tuple = ()
-    best_prod = 1
-    for r in range(1, len(plan.dp_axes) + 1):
-        for comb in itertools.combinations(plan.dp_axes, r):
-            prod = int(np.prod([plan.mesh.shape[a] for a in comb]))
-            if batch % prod == 0 and prod > best_prod:
-                best, best_prod = comb, prod
-    return best or None
-
-
-def seq_attn_specs(plan: "ShardingPlan", batch: int):
-    """shard_map specs for sequence-sharded attention (q stripes over
-    'model', KV replicated).  Returns (in_specs, out_spec) for
-    (q, k, v, qpos, kpos) -> o."""
-    b = batch_axes_for(plan, batch)
-    m = plan.model_axis
-    q_spec = P(b, m, None, None)
-    kv_spec = P(b, None, None, None)
-    return ((q_spec, kv_spec, kv_spec, P(b, m), P(b, None)), q_spec)
-
-
-def make_plan(cfg: ModelConfig, mesh: Mesh, *, fsdp: Optional[bool] = None,
-              seq_parallel_norms: Optional[bool] = None,
-              decode: bool = False, prefill: bool = False,
-              bf16_reduce: bool = False,
-              moe_a2a: Optional[bool] = None) -> ShardingPlan:
-    """Decide the logical->physical mapping for this (arch, mesh)."""
-    axis_names = mesh.axis_names
-    model_axis = "model" if "model" in axis_names else None
-    dp_axes = tuple(a for a in ("pod", "data") if a in axis_names)
-    msize = mesh.shape["model"] if model_axis else 1
-    dsize = int(np.prod([mesh.shape[a] for a in dp_axes])) if dp_axes else 1
-
-    if fsdp is None:
-        # heuristic: FSDP only pays off past ~1B params; and never for
-        # decode — the per-step param all-gather (ICI) is ~16x slower than
-        # reading a model-axis-sharded replica from HBM.
-        fsdp = cfg.param_counts()["total"] > 1e9 and not decode
-    fsdp_axis = "data" if (fsdp and "data" in axis_names) else None
-
-    heads_ok = cfg.n_heads > 0 and cfg.n_heads % msize == 0
-    kv_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % msize == 0
-    attn_mode = "heads" if heads_ok else "seq"
-
-    ep_mode = "none"
-    if cfg.moe is not None:
-        from repro.models.moe import padded_experts
-        E = padded_experts(cfg)             # dummy-expert padding
-        if E % msize == 0:
-            ep_mode = "experts"
-        elif cfg.moe.d_ff_expert % msize == 0:
-            ep_mode = "ff_expert"
-
-    if moe_a2a is None:
-        # auto: token-a2a EP pays off when expert weights dwarf the token
-        # stream (ZeRO-3 giants: llama4 t_x 72.4s -> 33.3s).  For small-
-        # expert/high-top-k MoE (qwen2) it LOSES (t_m +190%, measured) —
-        # tokens outweigh the cheap weight gathers.  See EXPERIMENTS §Perf.
-        # decode included: a 400B's experts at 'model'-only sharding are
-        # 24 GB/chip (>HBM); a2a shards them (data x model) down to 3 GB,
-        # and exchanging B<=128 single tokens is negligible wire.
-        moe_a2a = (cfg.moe is not None and ep_mode == "experts"
-                   and cfg.param_counts()["total"] > 1e11)
-
-    # SSD TP: shard heads when divisible (collective-free chunk einsums,
-    # fwd AND bwd), else fall back to the inner dim P.
-    ssm_h = ssm_p = None
-    if cfg.ssm is not None:
-        H = cfg.ssm.expand * cfg.d_model // cfg.ssm.head_dim
-        if H % msize == 0:
-            ssm_h = model_axis
-        elif cfg.ssm.head_dim % msize == 0:
-            ssm_p = model_axis
-
-    # Tiny models (mamba2-130m): a 16-way TP slice of a 130M model is
-    # pointless — replicate params and run PURE DP over every mesh axis.
-    pure_dp = cfg.param_counts()["total"] < 3e8
-    if pure_dp:
-        dp_axes = dp_axes + ((model_axis,) if model_axis else ())
-        model_axis_eff = None
-    else:
-        model_axis_eff = model_axis
-
-    if seq_parallel_norms is None:
-        # Megatron-SP residuals measured WORSE under plain GSPMD constraints
-        # (granite train_4k: +535 GB/step of all-gathers, no temp reduction —
-        # blocks still compute at full T, so GSPMD bounces the activations).
-        # Off by default; microbatch accumulation is the memory lever.
-        # Kept as an explicit override for the perf pass (EXPERIMENTS.md).
-        seq_parallel_norms = False
-
-    M = model_axis_eff
-    logical: Dict[str, Optional[object]] = {
-        # parameter axes
-        "vocab": M,
-        "embed": fsdp_axis,
-        "heads": M if heads_ok else None,
-        "kv_heads": M if kv_ok else None,
-        "head_dim": None,
-        "ff": M,
-        # a2a EP: experts live on 'data' rows, expert FF slices on 'model',
-        # expert D replicated (no FSDP regather — tokens travel instead)
-        "experts": ("data" if (moe_a2a and ep_mode == "experts"
-                               and "data" in axis_names)
-                    else (M if ep_mode == "experts" else None)),
-        "embed_expert": (None if moe_a2a else fsdp_axis),
-        "ff_expert": (M if (ep_mode == "ff_expert"
-                            or (moe_a2a and ep_mode == "experts"))
-                      else None),
-        "ssm_h": ssm_h if M else None,
-        "ssm_p": ssm_p if M else None,
-        "ssm_n": None,
-        # activation axes
-        "batch": dp_axes or None,
-        "seq_sp": (M if seq_parallel_norms else None),
-        "q_seq": (M if attn_mode == "seq" else None),
-        # Decode with KV heads that can't shard (kv < model axis): split the
-        # KV cache along its SEQUENCE axis instead — flash-decoding-style
-        # partial softmax, resolved by SPMD as a psum of (max, sum) stats.
-        # Query-head activations then stay replicated (the conflict between
-        # head- and seq-sharding on the same axis is resolved toward the
-        # long axis: the cache dominates decode memory and bandwidth).
-        "kv_seq": (M if ((decode or prefill) and not kv_ok) else None),
-        "heads_act": (M if (heads_ok and not (decode and not kv_ok))
-                      else None),
-        "kv_heads_act": (M if kv_ok else None),
-    }
-
-    return ShardingPlan(mesh=mesh, cfg=cfg, dp_axes=dp_axes,
-                        model_axis=M, logical_map=logical,
-                        attn_mode=attn_mode, ep_mode=ep_mode, fsdp=bool(fsdp),
-                        seq_parallel_norms=seq_parallel_norms,
-                        bf16_reduce=bf16_reduce,
-                        moe_a2a=moe_a2a and ep_mode == "experts"
-                        and "data" in axis_names)
+__all__ = ["mesh_sig"]
 
 
 def mesh_sig(mesh: Mesh) -> Tuple:
@@ -289,12 +30,3 @@ def mesh_sig(mesh: Mesh) -> Tuple:
     return (tuple(mesh.axis_names),
             tuple(int(mesh.shape[a]) for a in mesh.axis_names),
             tuple(int(d.id) for d in mesh.devices.flat))
-
-
-def tree_param_shardings(plan: ShardingPlan, axes_tree):
-    """Map a tree of logical-axes tuples to NamedShardings."""
-    return jax.tree.map(
-        lambda axes: plan.param_sharding(axes),
-        axes_tree,
-        is_leaf=lambda x: isinstance(x, tuple) and all(
-            a is None or isinstance(a, str) for a in x))

@@ -25,6 +25,13 @@ bounds admission (AdmissionError, batch priority shed first),
 `submit(deadline_ms=...)` bounds queueing (DeadlineExceeded), and
 `result(timeout=...)` raises ResultTimeout while leaving the future
 completable — see docs/SERVING.md "Overload & degradation".
+
+Lifecycle: `engine.delete(ids)` / `engine.add(batch, ttl_s=...)` ride
+the same epoch machinery as adds (a delete publishes a snapshot, so
+the epoch-keyed result cache invalidates for free), and
+`EngineConfig.maintenance` (a `repro.maintenance.MaintenancePolicy`)
+schedules TTL sweeps / compactions / checkpoints as journal-registered
+background work — see docs/SERVING.md "Maintenance & freshness tiers".
 """
 
 from .batcher import (Batch, MicroBatcher, Pending, bucket_for,

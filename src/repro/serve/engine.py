@@ -55,6 +55,7 @@ import numpy as np
 
 from repro.analysis.hooks import observe, sync_point
 from repro.core.refresh import WorkerCrash
+from repro.maintenance import MaintenancePolicy, MaintenanceState
 from repro.runtime import WorkJournal
 from repro.runtime.elastic import plan_serving_mesh
 from repro.runtime.sharding import mesh_sig
@@ -123,7 +124,21 @@ class EngineConfig:
                     sorted-run merge (core.builder.merge_sorted_delta)
                     that consumes the stored core arrays as-is, published
                     as a delta-free epoch so steady-state plans return to
-                    the core-only program.  None = only explicit compact()
+                    the core-only program.  None = only explicit compact().
+                    DEPRECATED in favour of `maintenance` (mutually
+                    exclusive): `MaintenancePolicy.compact_every(rows)`
+                    keeps this trigger and adds TTL sweeps + tombstone
+                    staleness budgets
+    maintenance     a `repro.maintenance.MaintenancePolicy`: freshness-
+                    tiered scheduling of TTL expiry sweeps, auto-
+                    compaction (row count, dead fraction, OR tombstone
+                    staleness budget) and policy-driven checkpointing.
+                    Each due task runs as a journal-registered part, so
+                    a maintainer that dies mid-task is helped by any
+                    surviving worker / flush() / blocked result() —
+                    never wedged — exactly like a dispatched batch.
+                    None = no background maintenance (explicit
+                    delete()/expire_ttl()/compact() still work)
     sync_every      SHARDED serving only: refinement rounds between the
                     all-reduce-min that publishes the global k-th bound
                     (expeditive -> standard cadence); local plans ignore it
@@ -165,6 +180,7 @@ class EngineConfig:
     latency_window: int = 4096
     journal_path: Optional[str] = None
     auto_compact_rows: Optional[int] = None
+    maintenance: Optional[MaintenancePolicy] = None
     sync_every: int = 1
     max_pending: Optional[int] = None
     max_pending_per_class: Optional[dict] = None
@@ -200,6 +216,16 @@ class EngineConfig:
             raise ValueError("cache_entries must be >= 0")
         if self.auto_compact_rows is not None and self.auto_compact_rows < 1:
             raise ValueError("auto_compact_rows must be >= 1 or None")
+        if self.maintenance is not None:
+            if not isinstance(self.maintenance, MaintenancePolicy):
+                raise ValueError(
+                    f"maintenance must be a MaintenancePolicy or None, "
+                    f"got {type(self.maintenance).__name__}")
+            if self.auto_compact_rows is not None:
+                raise ValueError(
+                    "auto_compact_rows and maintenance are mutually "
+                    "exclusive; migrate to maintenance="
+                    "MaintenancePolicy.compact_every(rows)")
         if self.sync_every < 1:
             raise ValueError("sync_every must be >= 1")
         if self.workers < 0:
@@ -230,13 +256,14 @@ class Snapshot:
     engine's condition variable, and an in-flight batch keeps the whole
     mesh-wide view (old placement included) alive until it completes."""
     epoch: int
-    core: object                       # FlatIndex
+    core: object                       # FlatIndex (tombstone-masked view)
     delta: Optional[jnp.ndarray]       # (m, L) or None
-    n_base: int
-    n_total: int
+    n_base: int                        # delta id offset (see search_view)
+    n_total: int                       # searchable series (tombstones out)
     series_len: int
     mesh: object = None                # jax Mesh when sharded
     mesh_axis: str = "data"
+    delta_alive: Optional[jnp.ndarray] = None   # (m,) bool tombstone mask
 
     @property
     def plan_sig(self) -> tuple:
@@ -244,11 +271,15 @@ class Snapshot:
         including, when sharded, the mesh placement (axis names/sizes and
         device order via `runtime.sharding.mesh_sig`), so an elastic
         re-mesh compiles fresh executables instead of aliasing plans
-        built for the lost placement."""
+        built for the lost placement.  Whether the delta carries a
+        tombstone alive-mask is part of the signature (masked and
+        maskless epochs compile different programs); CORE tombstones
+        mask the arrays, not the program, so they add no bit."""
         s = self.core.series
         sig = (tuple(s.shape), str(s.dtype), int(self.core.n_leaves),
                self.n_base,
-               None if self.delta is None else int(self.delta.shape[0]))
+               None if self.delta is None else int(self.delta.shape[0]),
+               self.delta_alive is not None)
         if self.mesh is not None:
             sig += (self.mesh_axis,) + mesh_sig(self.mesh)
         return sig
@@ -431,6 +462,17 @@ class QueryEngine:
         self._first_submit: Optional[float] = None
         self._crashed_workers = 0
         self._crash_hook = None             # test injection: fn(wid, batch)
+        # ---- policy-driven maintenance (repro.maintenance) ----
+        # Each due task becomes a journal part (part_id -> kind) executed
+        # through the same acquire/steal/help machinery as batches, so a
+        # maintainer that dies mid-task is helped, never wedged.
+        self._policy = cfg.maintenance
+        self._maint_parts: dict = {}        # part_id -> task kind
+        self._maint_inflight: set = set()   # kinds scheduled, not done
+        now = time.monotonic()
+        self._last_sweep = now
+        self._last_checkpoint = now
+        self._maint_counts = {"sweep": 0, "compact": 0, "checkpoint": 0}
         self._workers = [
             threading.Thread(target=self._worker_loop, args=(i,),
                              name=f"fresh-serve-{i}", daemon=True)
@@ -442,11 +484,18 @@ class QueryEngine:
     # snapshots (Jiffy-style epochs)
     # ------------------------------------------------------------------ #
     def _capture(self, epoch: int) -> Snapshot:
+        # search_view is the tombstone-masked read surface: the core a
+        # dead row can never win, the delta alive-mask, and the delta id
+        # offset.  Deletes/TTL expiry thus ride the SAME epoch machinery
+        # as adds — publish a snapshot, and every later submit (and every
+        # result-cache key) sees the post-delete world.
         ix = self._index
-        return Snapshot(epoch=epoch, core=ix.index, delta=ix.delta_cat,
-                        n_base=ix._n_base, n_total=ix.n_series,
+        core, delta, alive, id0 = ix.search_view()
+        return Snapshot(epoch=epoch, core=core, delta=delta,
+                        n_base=id0, n_total=ix.n_series,
                         series_len=ix.series_len,
-                        mesh=ix.mesh, mesh_axis=ix.mesh_axis)
+                        mesh=ix.mesh, mesh_axis=ix.mesh_axis,
+                        delta_alive=alive)
 
     def _publish(self) -> None:
         """Capture OUTSIDE _cv (capturing may materialize the pending
@@ -466,7 +515,7 @@ class QueryEngine:
         """The currently published epoch number (0 at construction)."""
         return self._epoch
 
-    def add(self, batch) -> "QueryEngine":
+    def add(self, batch, *, ttl_s: Optional[float] = None) -> "QueryEngine":
         """Append `batch` ((L,) or (m, L) series) and publish a new
         epoch snapshot.  In-flight queries keep answering on their
         submit-time snapshot; queries submitted after this call see the
@@ -475,10 +524,12 @@ class QueryEngine:
         pointer swap.  When `auto_compact_rows` is set and the pending
         delta reaches it, the delta is folded into the core first
         (incremental sorted-run merge) and the published epoch is
-        delta-free.  Returns self.
+        delta-free.  `ttl_s` gives the batch a time-to-live
+        (FreshIndex.add): a `maintenance` policy's sweeps expire it
+        automatically.  Returns self.
 
         Raises:
-            ValueError: batch shape mismatch (FreshIndex.add).
+            ValueError: batch shape mismatch / bad ttl_s (FreshIndex.add).
 
         Concurrency: a writer — serializes with compact/refresh/recover
         on the writer lock; never blocks readers (the heavy merge runs
@@ -492,12 +543,72 @@ class QueryEngine:
             # OUTSIDE _cv: writers are already serialized by _wlock and
             # readers only ever see published snapshots, so only the
             # publish pointer swap needs the condition variable
-            self._index.add(batch)
+            self._index.add(batch, ttl_s=ttl_s)
             if cap is None or self._index.n_pending < cap:
                 self._publish()
                 return self
             self._compact_locked()
         return self
+
+    def delete(self, ids) -> int:
+        """Logically delete series by id (FreshIndex.delete) and publish
+        a new epoch.  `ids` is one id or an iterable of stable series
+        ids; already-deleted and already-dropped ids are skipped,
+        never-assigned ids raise ValueError.
+        Queries submitted after this call can never return
+        the deleted series — including via the result cache, whose keys
+        carry the epoch, so the publish IS the invalidation.  In-flight
+        batches complete on their submit-time snapshot (the same
+        relaxed-consistency contract adds have).  Physical removal
+        happens at the next compaction (a `maintenance` policy schedules
+        one within its staleness budget).  Returns the number of newly
+        deleted series.
+
+        Concurrency: a writer on the writer lock, like add().
+        """
+        sync_point("engine.delete")
+        with self._wlock:
+            n = self._index.delete(ids)
+            if n:
+                before = self._epoch
+                self._publish()
+                # the epoch-keyed result cache can never serve a deleted
+                # series only BECAUSE the epoch advanced — keep that
+                # invariant loud
+                assert self._epoch > before, \
+                    "delete() must advance the snapshot epoch"
+        return n
+
+    def expire_ttl(self, now: Optional[float] = None) -> int:
+        """Run one TTL expiry sweep (FreshIndex.expire_ttl) and publish
+        a new epoch if anything expired — the manual spelling of the
+        `maintenance` policy's "sweep" task.  `now` overrides the
+        monotonic clock the TTL deadlines are compared against (tests;
+        None = time.monotonic()).  Returns the number of series
+        expired.
+
+        Concurrency: a writer on the writer lock, like delete().
+        """
+        with self._wlock:
+            n = self._index.expire_ttl(now)
+            if n:
+                before = self._epoch
+                self._publish()
+                assert self._epoch > before, \
+                    "TTL expiry must advance the snapshot epoch"
+        return n
+
+    def maintain(self) -> "QueryEngine":
+        """Schedule every maintenance task the policy says is due, then
+        drain the queue (flush) so they execute now on the calling
+        thread.  A no-op without a `maintenance` policy.  Returns self.
+
+        Concurrency: safe from any thread — scheduling registers journal
+        parts under the condition variable; execution helps through the
+        same journal machinery as flush().
+        """
+        self._schedule_maintenance()
+        return self.flush()
 
     def compact(self) -> "QueryEngine":
         """Merge the delta into the core (incremental sorted-run merge —
@@ -770,15 +881,17 @@ class QueryEngine:
         return freed
 
     def flush(self) -> "QueryEngine":
-        """Dispatch everything now: form pending into batches, then run
-        every unfinished journal part — including orphaned batches whose
-        worker died (helping).  Returns self once the queue is drained.
+        """Dispatch everything now: form pending into batches, schedule
+        any due maintenance, then run every unfinished journal part —
+        including orphaned batches (or maintenance tasks) whose worker
+        died (helping).  Returns self once the queue is drained.
 
         Concurrency: safe from any thread; executes plans on the calling
         thread and races benignly with live workers (a lost race is
         detected via the journal's done flags).
         """
         self._form_and_register()
+        self._schedule_maintenance()
         while True:
             sync_point("engine.flush.help")
             pid = self._next_part(worker=HELPER_ID, force_help=True)
@@ -845,6 +958,95 @@ class QueryEngine:
         self._journal.persist(jstate)
         return n
 
+    # ------------------------------------------------------------------ #
+    # policy-driven maintenance (repro.maintenance)
+    # ------------------------------------------------------------------ #
+    def _sample_state(self) -> MaintenanceState:
+        """One observation for MaintenancePolicy.due — host ints/floats
+        only.  Racy reads of index counters are fine here: a stale
+        sample can only delay or duplicate a SCHEDULING decision, and
+        execution re-reads the live index under the writer lock."""
+        ix = self._index
+        now = time.monotonic()
+        return MaintenanceState(
+            n_base=ix._n_base, delta_rows=ix.n_pending,
+            dead_rows=ix.n_deleted, ttl_entries=ix.n_ttl,
+            oldest_tombstone_age_s=ix.tombstone_age_s,
+            since_sweep_s=now - self._last_sweep,
+            since_checkpoint_s=now - self._last_checkpoint)
+
+    def _maintenance_due(self) -> bool:
+        """Cheap mutation-free check idle workers poll under _cv."""
+        if self._policy is None:
+            return False
+        return any(k not in self._maint_inflight
+                   for k in self._policy.due(self._sample_state()))
+
+    def _schedule_maintenance(self) -> int:
+        """Register one journal part per due task kind; returns how many
+        were scheduled.  A kind already in flight is not re-scheduled
+        (exactly one live part per kind), but a part whose executor died
+        stays in the journal and is helped via the normal owner-dead
+        steal — a dead maintainer delays maintenance by one backoff,
+        never wedges it."""
+        if self._policy is None:
+            return 0
+        with self._cv:
+            due = [k for k in self._policy.due(self._sample_state())
+                   if k not in self._maint_inflight]
+            for kind in due:
+                pid = self._journal.add_part()
+                self._maint_parts[pid] = kind
+                self._maint_inflight.add(kind)
+                observe("engine.maint.schedule", (pid, kind))
+            if not due:
+                return 0
+            jstate = self._journal.snapshot()
+        self._journal.persist(jstate)
+        return len(due)
+
+    def _execute_maintenance(self, pid: int, kind: str, worker: int
+                             ) -> None:
+        """Run one maintenance part.  At-least-once like batch parts —
+        every kind is idempotent to re-execution (a second sweep finds
+        nothing expired, a second compact finds nothing pending, a
+        checkpoint overwrites its own step atomically), and delivery is
+        guarded by the journal's done flag so the bookkeeping commits
+        exactly once."""
+        sync_point("engine.maint.run", pid)
+        if kind == "sweep":
+            with self._wlock:
+                n = self._index.expire_ttl()
+                if n:
+                    self._publish()
+        elif kind == "compact":
+            with self._wlock:
+                self._compact_locked()
+        elif kind == "checkpoint":
+            with self._wlock:
+                # step = current epoch: re-execution by a helper lands on
+                # the same step and save_checkpoint's tmp+rename makes
+                # the overwrite atomic + idempotent
+                self._index.save(self._policy.checkpoint_dir,
+                                 step=self._epoch)
+        now = time.monotonic()
+        sync_point("engine.maint.deliver", pid)
+        with self._cv:
+            if self._journal.is_done(pid):   # a racing helper beat us
+                return
+            self._journal.mark_done(pid)
+            self._maint_counts[kind] = self._maint_counts.get(kind, 0) + 1
+            self._maint_parts.pop(pid, None)
+            self._maint_inflight.discard(kind)
+            if kind == "sweep":
+                self._last_sweep = now
+            elif kind == "checkpoint":
+                self._last_checkpoint = now
+            self._journal.prune_done()
+            jstate = self._journal.snapshot()
+            self._cv.notify_all()
+        self._journal.persist(jstate)
+
     def _next_part(self, worker: int, force_help: bool = False
                    ) -> Optional[int]:
         """Acquire the next unowned part, else steal an orphan.
@@ -886,14 +1088,19 @@ class QueryEngine:
         return got
 
     def _execute_part(self, pid: int, worker: int) -> None:
-        """Run one batch through its snapshot's compiled plan and deliver
-        rows to the futures.  Pure + idempotent: a helper re-executing an
-        orphan recomputes identical rows."""
+        """Run one journal part: a query batch through its snapshot's
+        compiled plan, or a maintenance task (the part_id -> kind map).
+        Pure + idempotent either way: a helper re-executing an orphan
+        recomputes identical rows / re-runs an idempotent task."""
         with self._cv:
             if self._journal.is_done(pid):
                 return
-            batch = self._batches.get(pid)
-            if batch is None:
+            # maintenance parts are routed FIRST: they are never in
+            # _batches, so the reloaded-part discard below must not see
+            # them
+            kind = self._maint_parts.get(pid)
+            batch = None if kind is not None else self._batches.get(pid)
+            if kind is None and batch is None:
                 # Unfinished in the journal yet no in-memory batch: the
                 # part was reloaded from a crashed process — its batch
                 # and futures died there, so nothing can ever be
@@ -904,8 +1111,11 @@ class QueryEngine:
                 self._journal.discard(pid)
                 self._journal.prune_done()
                 jstate = self._journal.snapshot()
-            else:
+            elif batch is not None:
                 snap = self._snapshots[batch.epoch]
+        if kind is not None:
+            self._execute_maintenance(pid, kind, worker)
+            return
         if batch is None:
             self._journal.persist(jstate)
             return
@@ -985,6 +1195,7 @@ class QueryEngine:
             return
         # workers alive: only pick up genuinely orphaned/expired work
         self._form_and_register()
+        self._schedule_maintenance()
         pid = self._next_part(worker=HELPER_ID)
         if pid is not None:
             self._execute_part(pid, worker=HELPER_ID)
@@ -994,8 +1205,14 @@ class QueryEngine:
         try:
             while True:
                 with self._cv:
+                    # the idle wait also polls the maintenance policy:
+                    # a due task breaks the wait so the worker can
+                    # schedule + execute it (scheduling itself happens
+                    # below, outside the wait, because registering parts
+                    # persists the journal — no I/O under _cv)
                     while (not self._pending and not self._closed
-                           and not self._journal.unfinished()):
+                           and not self._journal.unfinished()
+                           and not self._maintenance_due()):
                         self._cv.wait(timeout=0.05)
                     if (self._closed and not self._pending
                             and not self._journal.unfinished()):
@@ -1017,6 +1234,7 @@ class QueryEngine:
                                 break
                             self._cv.wait(timeout=left)
                 self._form_and_register()
+                self._schedule_maintenance()
                 while True:
                     pid = self._next_part(wid)
                     if pid is None:
@@ -1094,6 +1312,16 @@ class QueryEngine:
                 },
                 "rounds_per_query": (self._rounds_sum / self._rounds_n
                                      if self._rounds_n else 0.0),
+                "maintenance": {
+                    "policy": (None if self._policy is None
+                               else self._policy.freshness.name),
+                    "sweeps": self._maint_counts["sweep"],
+                    "compacts": self._maint_counts["compact"],
+                    "checkpoints": self._maint_counts["checkpoint"],
+                    "pending_tasks": len(self._maint_parts),
+                    "deleted": self._index.n_deleted,
+                    "ttl_entries": self._index.n_ttl,
+                },
                 "overload": {
                     "shed": self._shed,
                     "shed_rows": self._shed_rows,

@@ -11,8 +11,10 @@ asserts zero re-traces after warmup).
 
 Plans are keyed on (bucket_Q, k, knobs, snapshot signature).  The
 snapshot signature covers every static property of the compiled program:
-core array shapes + storage dtype, the delta row count, and n_base (the
-delta id offset is baked in as a static).  Publishing a new epoch
+core array shapes + storage dtype, the delta row count, n_base (the
+delta id offset is baked in as a static), and whether the delta carries
+a tombstone alive-mask (core tombstones mask the arrays, not the
+program, so they need no signature bit).  Publishing a new epoch
 (add/compact) therefore compiles at most once per (bucket, k) for that
 epoch's shape — and an add-then-compact cycle that returns to a previous
 shape reuses the old executable with the new arrays, because the arrays
@@ -71,19 +73,30 @@ class Knobs:
 
 class CompiledPlan:
     """One AOT-compiled executable: fixed (bucket_Q, k, knobs, snapshot
-    shape).  `run(snapshot, queries)` -> (dist (Q, k), ids (Q, k), rounds)."""
+    shape).  `run(snapshot, queries)` -> (dist (Q, k), ids (Q, k), rounds).
 
-    __slots__ = ("_exe", "has_delta", "bucket_q", "k", "calls")
+    `has_alive` mirrors the snapshot's tombstone state: epochs whose
+    delta carries an alive mask compile (and run) the masked program —
+    the maskless one stays cached for mask-free epochs.  Core-row
+    tombstones never appear here: they are masked in the ARRAYS
+    (sentinel norms), not the program."""
 
-    def __init__(self, exe, has_delta: bool, bucket_q: int, k: int):
+    __slots__ = ("_exe", "has_delta", "has_alive", "bucket_q", "k", "calls")
+
+    def __init__(self, exe, has_delta: bool, has_alive: bool,
+                 bucket_q: int, k: int):
         self._exe = exe
         self.has_delta = has_delta
+        self.has_alive = has_alive
         self.bucket_q = bucket_q
         self.k = k
         self.calls = 0
 
     def run(self, snapshot, queries: jnp.ndarray):
         self.calls += 1
+        if self.has_alive:
+            return self._exe(snapshot.core, snapshot.delta, queries,
+                             snapshot.delta_alive)
         if self.has_delta:
             return self._exe(snapshot.core, snapshot.delta, queries)
         return self._exe(snapshot.core, queries)
@@ -100,12 +113,14 @@ class ShardedCompiledPlan:
     path executes, so `submit().result()` stays bit-identical to
     `FreshIndex.search` on the sharded index."""
 
-    __slots__ = ("_core", "_merge", "has_delta", "bucket_q", "k", "calls")
+    __slots__ = ("_core", "_merge", "has_delta", "has_alive", "bucket_q",
+                 "k", "calls")
 
-    def __init__(self, core, merge, bucket_q: int, k: int):
+    def __init__(self, core, merge, has_alive: bool, bucket_q: int, k: int):
         self._core = core
         self._merge = merge
         self.has_delta = merge is not None
+        self.has_alive = has_alive
         self.bucket_q = bucket_q
         self.k = k
         self.calls = 0
@@ -114,7 +129,11 @@ class ShardedCompiledPlan:
         self.calls += 1
         d, i, rounds = self._core(snapshot.core, queries)
         if self._merge is not None:
-            d, i = self._merge(snapshot.delta, queries, d, i)
+            if self.has_alive:
+                d, i = self._merge(snapshot.delta, queries, d, i,
+                                   snapshot.delta_alive)
+            else:
+                d, i = self._merge(snapshot.delta, queries, d, i)
         return d, i, rounds
 
 
@@ -199,6 +218,7 @@ class PlanCache:
                  knobs: Knobs) -> CompiledPlan:
         qs = jax.ShapeDtypeStruct((bucket_q, snapshot.series_len),
                                   jnp.float32)
+        has_alive = getattr(snapshot, "delta_alive", None) is not None
         if snapshot.mesh is not None:
             core_exe = self._sharded_jit(snapshot, k, knobs).lower(
                 snapshot.core, qs).compile()
@@ -213,21 +233,33 @@ class PlanCache:
                                           sharding=rep)
                 is_ = jax.ShapeDtypeStruct((bucket_q, k), jnp.int32,
                                            sharding=rep)
-                merge_exe = merge_delta_topk.lower(
-                    snapshot.delta, qs, ds, is_, k=k,
-                    n_base=snapshot.n_base, znorm=knobs.znorm).compile()
-            return ShardedCompiledPlan(core_exe, merge_exe, bucket_q, k)
+                if has_alive:
+                    merge_exe = merge_delta_topk.lower(
+                        snapshot.delta, qs, ds, is_, snapshot.delta_alive,
+                        k=k, n_base=snapshot.n_base,
+                        znorm=knobs.znorm).compile()
+                else:
+                    merge_exe = merge_delta_topk.lower(
+                        snapshot.delta, qs, ds, is_, k=k,
+                        n_base=snapshot.n_base, znorm=knobs.znorm).compile()
+            return ShardedCompiledPlan(core_exe, merge_exe, has_alive,
+                                       bucket_q, k)
         kw = dict(k=k, round_leaves=knobs.round_leaves, znorm=knobs.znorm,
                   max_rounds=knobs.max_rounds, backend=knobs.backend,
                   pq_budget=knobs.pq_budget)
         has_delta = snapshot.delta is not None
-        if has_delta:
+        if has_alive:
+            lowered = self._jitted(True).lower(
+                snapshot.core, snapshot.delta, qs, snapshot.delta_alive,
+                n_base=snapshot.n_base, **kw)
+        elif has_delta:
             lowered = self._jitted(True).lower(
                 snapshot.core, snapshot.delta, qs,
                 n_base=snapshot.n_base, **kw)
         else:
             lowered = self._jitted(False).lower(snapshot.core, qs, **kw)
-        return CompiledPlan(lowered.compile(), has_delta, bucket_q, k)
+        return CompiledPlan(lowered.compile(), has_delta, has_alive,
+                            bucket_q, k)
 
     # ------------------------------------------------------------------ #
     def stats(self) -> dict:

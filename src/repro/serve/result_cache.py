@@ -9,7 +9,11 @@ keyed by `(query_bytes_hash, epoch, k, knobs)` is *provably* fresh for
 as long as any caller can still submit against that epoch, because a
 submit after the next `add()` carries a different epoch and therefore a
 different key.  No invalidation hooks, no TTLs: epoch advance IS the
-invalidation, for free, and stale entries age out of the LRU.
+invalidation, for free, and stale entries age out of the LRU.  That
+contract now also covers deletion: `engine.delete()` and TTL expiry
+publish a new epoch too (asserted in the engine), so a cached row can
+never resurrect a deleted or expired series — the regression test on
+the cache-hit path lives in tests/test_maintenance.py.
 
 Entries store the exact numpy rows the engine delivered to the filling
 future, so a hit is bit-identical to a cold plan execution on the same

@@ -32,11 +32,12 @@ def _read(rel: str) -> str:
 # docs freshness
 # --------------------------------------------------------------------- #
 # a verbatim row citation: `fig3/...`, `fig5/...`, `serve/...`,
-# `build/...` in backticks.  Shorthand families (`build/pipeline/w{2,4}`,
-# `fig3/query/*/ref`, `serve/...`) fall outside the character class or
-# the filter below and are not checked — EXPERIMENTS.md must cite at
-# least MIN_CITATIONS exact names so the check cannot go vacuous.
-ROW_RE = re.compile(r"`((?:fig\d+|serve|build)/[A-Za-z0-9_/.-]+)`")
+# `build/...`, `maint/...` in backticks.  Shorthand families
+# (`build/pipeline/w{2,4}`, `fig3/query/*/ref`, `serve/...`) fall
+# outside the character class or the filter below and are not checked —
+# EXPERIMENTS.md must cite at least MIN_CITATIONS exact names so the
+# check cannot go vacuous.
+ROW_RE = re.compile(r"`((?:fig\d+|serve|build|maint)/[A-Za-z0-9_/.-]+)`")
 MIN_CITATIONS = 10
 
 

@@ -1,0 +1,389 @@
+"""Lifecycle subsystem (repro.maintenance): delete/TTL tombstones and
+policy-driven maintenance.
+
+The acceptance criteria of the lifecycle PR, machine-checked:
+
+* end-to-end deletion correctness — facade and engine search stay
+  BIT-IDENTICAL to the tombstone-aware brute-force oracle
+  (`search_bruteforce(..., alive=)`) for k in {1, 5, 10} on both kernel
+  backends, with deletions landing in core rows and delta rows;
+* physical removal — compaction drops tombstoned + TTL-expired rows
+  exactly once (row counts shrink by exactly the dropped count) and
+  compact of a compacted index is a no-op (compact∘compact == compact,
+  arrays bit-equal);
+* the epoch-keyed result cache can never serve a deleted series,
+  because delete()/TTL expiry advance the snapshot epoch (the
+  regression test on the cache-HIT path lives here);
+* `MaintenancePolicy` freshness tiers schedule sweep/compact/checkpoint
+  as journal-registered engine work, replacing `auto_compact_rows`
+  (mutually exclusive with it).
+"""
+
+import os
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import FreshIndex, IndexConfig
+from repro.core import search_bruteforce
+from repro.data.synthetic import query_workload, random_walk
+from repro.maintenance import (ARCHIVE, HOT, STANDARD, FreshnessClass,
+                               MaintenancePolicy, MaintenanceState)
+from repro.serve import EngineConfig
+
+BIG = np.float32(1e30)
+
+
+@pytest.fixture(scope="module")
+def small():
+    walks = random_walk(96, 64, seed=71)
+    extra = random_walk(24, 64, seed=72)
+    queries = query_workload(np.concatenate([walks, extra]), 8,
+                             noise_sigma=0.05, seed=73)
+    return walks, extra, queries
+
+
+def _lifecycle_index(small) -> FreshIndex:
+    """96 core rows + 24 delta rows, deletions in both."""
+    walks, extra, _ = small
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=16))
+    ix.add(extra)
+    return ix
+
+
+DELETED = [3, 17, 50, 95, 96, 100, 119]     # core ids + delta ids
+
+
+def _oracle_alive(small, deleted):
+    walks, extra, _ = small
+    raw = np.concatenate([walks, extra]).astype(np.float32)
+    alive = np.ones(raw.shape[0], bool)
+    alive[list(deleted)] = False
+    return jnp.asarray(raw), jnp.asarray(alive)
+
+
+# --------------------------------------------------------------------- #
+# facade: tombstone-masked search == the tombstone-aware oracle
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+@pytest.mark.parametrize("k", [1, 5, 10])
+def test_facade_delete_matches_oracle(small, backend, k):
+    _, _, queries = small
+    ix = _lifecycle_index(small)
+    assert ix.delete(DELETED) == len(DELETED)
+    assert ix.n_deleted == len(DELETED)
+    assert ix.n_series == 120 - len(DELETED)
+    raw, alive = _oracle_alive(small, DELETED)
+    q = jnp.asarray(queries)
+    d, i = ix.search(q, k=k, backend=backend)
+    d_o, i_o = search_bruteforce(raw, q, k=k, znorm=ix.config.znorm,
+                                 alive=alive)
+    assert np.array_equal(np.asarray(d), np.asarray(d_o)), (backend, k)
+    assert np.array_equal(np.asarray(i), np.asarray(i_o)), (backend, k)
+    got = set(np.asarray(i).ravel().tolist())
+    assert not (got & set(DELETED)), "deleted id resurfaced in results"
+
+
+@pytest.mark.parametrize("k", [1, 5, 10])
+def test_post_compaction_search_matches_oracle(small, k):
+    """After the physical drop the same oracle (over the full id space,
+    dropped rows masked) must still match: surviving ids are stable."""
+    _, _, queries = small
+    ix = _lifecycle_index(small)
+    ix.delete(DELETED)
+    ix.compact()
+    raw, alive = _oracle_alive(small, DELETED)
+    q = jnp.asarray(queries)
+    d, i = ix.search(q, k=k)
+    d_o, i_o = search_bruteforce(raw, q, k=k, znorm=ix.config.znorm,
+                                 alive=alive)
+    assert np.array_equal(np.asarray(d), np.asarray(d_o))
+    assert np.array_equal(np.asarray(i), np.asarray(i_o))
+
+
+def test_search_view_masks_arrays_not_storage(small):
+    """The stored index arrays stay byte-identical under delete(): the
+    masked core is a VIEW (sentinel norms), so compiled plans keyed on
+    array shapes survive any number of deletions."""
+    ix = _lifecycle_index(small)
+    stored = np.asarray(ix.index.sq_norms).copy()
+    ix.delete([3, 100])
+    core, delta, alive, id0 = ix.search_view()
+    assert core is not ix.index
+    assert np.array_equal(np.asarray(ix.index.sq_norms), stored)
+    masked = np.asarray(core.sq_norms)
+    assert (masked >= BIG).sum() == 1          # id 3 is a core row
+    assert alive is not None and (~np.asarray(alive)).sum() == 1
+    assert id0 == 96
+    # view is cached until the next lifecycle change
+    core2, _, alive2, _ = ix.search_view()
+    assert core2 is core and alive2 is alive
+    ix.delete([5])
+    core3, _, _, _ = ix.search_view()
+    assert core3 is not core
+
+
+# --------------------------------------------------------------------- #
+# compaction: exactly-once physical drop, idempotence
+# --------------------------------------------------------------------- #
+def test_compact_drops_exactly_once_and_is_idempotent(small):
+    ix = _lifecycle_index(small)
+    ix.delete(DELETED)
+    n_live = 120 - len(DELETED)
+    ix.compact()
+    # physically gone: row counts shrink by exactly the dropped count
+    assert ix.n_series == n_live
+    assert ix.n_deleted == 0 and ix.n_pending == 0
+    perm = np.asarray(ix.index.perm)
+    valid = perm[perm >= 0]
+    assert valid.shape[0] == n_live
+    assert not (set(valid.tolist()) & set(DELETED))
+    # ids are never reused: the next add continues at the high-water mark
+    ix.add(random_walk(2, 64, seed=99))
+    _, _, _, id0 = ix.search_view()
+    assert id0 == 120
+    ix.compact()
+    # compact∘compact == compact: arrays bit-equal, token is None
+    fp = tuple(np.asarray(getattr(ix.index, f)).tobytes()
+               for f in ("series", "sq_norms", "perm"))
+    assert ix.prepare_compact() is None
+    ix.compact()
+    fp2 = tuple(np.asarray(getattr(ix.index, f)).tobytes()
+                for f in ("series", "sq_norms", "perm"))
+    assert fp == fp2
+
+
+def test_delete_validation_and_idempotence(small):
+    ix = _lifecycle_index(small)
+    with pytest.raises(ValueError):
+        ix.delete([-1])
+    with pytest.raises(ValueError):
+        ix.delete([120])                     # never assigned
+    assert ix.delete(3) == 1                 # int spelling
+    assert ix.delete([3]) == 0               # already tombstoned
+    ix.compact()
+    assert ix.delete([3]) == 0               # already dropped: no-op
+    assert ix.n_deleted == 0
+    # k may not exceed the live count (tombstones excluded)
+    ix2 = FreshIndex.build(random_walk(4, 64, seed=5),
+                           IndexConfig(leaf_capacity=16))
+    ix2.delete([0])
+    with pytest.raises(ValueError):
+        ix2.search(np.zeros(64, np.float32), k=4)
+
+
+# --------------------------------------------------------------------- #
+# TTL
+# --------------------------------------------------------------------- #
+def test_ttl_expiry_routes_through_delete(small):
+    walks, extra, queries = small
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=16))
+    ix.add(extra, ttl_s=1000.0)
+    assert ix.n_ttl == 24
+    with pytest.raises(ValueError):
+        ix.add(extra, ttl_s=0.0)
+    assert ix.expire_ttl() == 0              # nothing expired yet
+    # force expiry with an explicit clock instead of sleeping
+    assert ix.expire_ttl(now=time.monotonic() + 2000.0) == 24
+    assert ix.n_ttl == 0 and ix.n_deleted == 24
+    raw, alive = _oracle_alive(small, range(96, 120))
+    q = jnp.asarray(queries)
+    d, i = ix.search(q, k=5)
+    d_o, i_o = search_bruteforce(raw, q, k=5, znorm=ix.config.znorm,
+                                 alive=alive)
+    assert np.array_equal(np.asarray(d), np.asarray(d_o))
+    assert np.array_equal(np.asarray(i), np.asarray(i_o))
+    ix.compact()
+    assert ix.n_series == 96 and ix.n_deleted == 0
+    # deleting an id also cancels its TTL
+    ix2 = FreshIndex.build(walks, IndexConfig(leaf_capacity=16))
+    ix2.add(extra, ttl_s=1000.0)
+    ix2.delete([96])
+    assert ix2.n_ttl == 23
+
+
+def test_save_load_lifecycle_roundtrip(small, tmp_path):
+    ix = _lifecycle_index(small)
+    ix.add(random_walk(4, 64, seed=74), ttl_s=1000.0)
+    ix.delete([3, 100])
+    ix.save(str(tmp_path), step=1)
+    ld = FreshIndex.load(str(tmp_path))
+    assert ld.n_deleted == 2 and ld.n_ttl == 4
+    assert ld.n_series == ix.n_series
+    q = jnp.asarray(small[2])
+    for k in (1, 5):
+        d0, i0 = ix.search(q, k=k)
+        d1, i1 = ld.search(q, k=k)
+        assert np.array_equal(np.asarray(d0), np.asarray(d1))
+        assert np.array_equal(np.asarray(i0), np.asarray(i1))
+    # stable ids survive the reload: new adds continue, never reuse
+    ld.add(random_walk(1, 64, seed=75))
+    ld.compact()
+    assert ld.delete([3]) == 0               # dropped, stays dropped
+
+
+# --------------------------------------------------------------------- #
+# engine: delete == oracle; the cache-hit regression
+# --------------------------------------------------------------------- #
+def test_engine_delete_matches_oracle(small):
+    _, _, queries = small
+    ix = _lifecycle_index(small)
+    with ix.engine(EngineConfig(max_batch=8)) as eng:
+        eng.delete(DELETED)
+        raw, alive = _oracle_alive(small, DELETED)
+        q = jnp.asarray(queries)
+        for k in (1, 5, 10):
+            d, i = eng.submit(q, k=k).result(timeout=60)
+            d_o, i_o = search_bruteforce(raw, q, k=k,
+                                         znorm=ix.config.znorm,
+                                         alive=alive)
+            assert np.array_equal(np.asarray(d), np.asarray(d_o)), k
+            assert np.array_equal(np.asarray(i), np.asarray(i_o)), k
+
+
+def test_engine_cache_hit_cannot_serve_deleted_series(small):
+    """THE result-cache regression: a cached pre-delete answer must be
+    unreachable after delete(), because delete advances the epoch and
+    the epoch is part of the cache key."""
+    _, _, queries = small
+    ix = _lifecycle_index(small)
+    q = np.asarray(queries[:1])
+    with ix.engine(EngineConfig(max_batch=4, cache_entries=64)) as eng:
+        d0, i0 = eng.submit(q, k=5).result(timeout=60)
+        h0 = eng.stats()["result_cache"]["hits"]
+        d1, i1 = eng.submit(q, k=5).result(timeout=60)    # cache HIT
+        assert eng.stats()["result_cache"]["hits"] == h0 + 1
+        assert np.array_equal(d0, d1) and np.array_equal(i0, i1)
+        victim = int(i0[0, 0])               # the best answer, cached
+        e0 = eng.epoch
+        assert eng.delete([victim]) == 1
+        assert eng.epoch > e0                # delete advanced the epoch
+        d2, i2 = eng.submit(q, k=5).result(timeout=60)
+        assert victim not in set(i2.ravel().tolist()), \
+            "cache served a deleted series"
+        raw, alive = _oracle_alive(small, [victim])
+        d_o, i_o = search_bruteforce(jnp.asarray(raw), jnp.asarray(q),
+                                     k=5, znorm=ix.config.znorm,
+                                     alive=alive)
+        assert np.array_equal(d2, np.asarray(d_o))
+        assert np.array_equal(i2, np.asarray(i_o))
+        # TTL expiry publishes too
+        eng.add(random_walk(2, 64, seed=76), ttl_s=1e-4)
+        e1 = eng.epoch
+        time.sleep(0.01)
+        assert eng.expire_ttl() == 2
+        assert eng.epoch > e1
+
+
+# --------------------------------------------------------------------- #
+# policy-driven maintenance
+# --------------------------------------------------------------------- #
+FAST = FreshnessClass("fast", sweep_interval_s=1e-3,
+                      staleness_budget_s=1e-3,
+                      compact_delta_rows=10 ** 9, compact_dead_frac=1.0)
+
+
+def test_policy_due_is_pure_and_ordered():
+    pol = MaintenancePolicy(freshness=STANDARD)
+
+    def state(**kw):
+        base = dict(n_base=100, delta_rows=0, dead_rows=0, ttl_entries=0,
+                    oldest_tombstone_age_s=0.0, since_sweep_s=0.0,
+                    since_checkpoint_s=0.0)
+        base.update(kw)
+        return MaintenanceState(**base)
+
+    assert pol.due(state()) == ()
+    # sweep only when TTLs exist AND the cadence elapsed
+    assert pol.due(state(ttl_entries=3, since_sweep_s=999.0)) == ("sweep",)
+    assert pol.due(state(ttl_entries=3)) == ()
+    # compact on delta volume, tombstone staleness, or dead fraction
+    assert pol.due(state(delta_rows=4096)) == ("compact",)
+    assert pol.due(state(dead_rows=1,
+                         oldest_tombstone_age_s=31.0)) == ("compact",)
+    assert pol.due(state(dead_rows=21)) == ("compact",)   # 21% dead
+    assert pol.due(state(dead_rows=1)) == ()
+    # sweep orders before compact (same cycle: expiry then drop)
+    both = pol.due(state(ttl_entries=1, since_sweep_s=999.0,
+                         delta_rows=4096))
+    assert both == ("sweep", "compact")
+    # checkpoint needs a dir
+    assert pol.due(state(since_checkpoint_s=1e9)) == ()
+    pol2 = MaintenancePolicy(freshness=STANDARD, checkpoint_dir="/tmp/x",
+                             checkpoint_interval_s=5.0)
+    assert pol2.due(state(since_checkpoint_s=6.0)) == ("checkpoint",)
+    # the auto_compact_rows migration shim keeps the row trigger
+    shim = MaintenancePolicy.compact_every(128)
+    assert shim.due(state(delta_rows=128)) == ("compact",)
+    assert shim.due(state(delta_rows=127)) == ()
+    # tier presets are ordered hot < standard < archive
+    assert HOT.staleness_budget_s < STANDARD.staleness_budget_s \
+        < ARCHIVE.staleness_budget_s
+
+
+def test_auto_compact_rows_and_maintenance_are_exclusive():
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        EngineConfig(auto_compact_rows=64,
+                     maintenance=MaintenancePolicy())
+    with pytest.raises(ValueError):
+        EngineConfig(maintenance="not a policy")
+
+
+def test_maintain_sweeps_expires_and_compacts(small, tmp_path):
+    walks, extra, queries = small
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=16))
+    pol = MaintenancePolicy(freshness=FAST, checkpoint_dir=str(tmp_path),
+                            checkpoint_interval_s=1e-3)
+    with ix.engine(EngineConfig(max_batch=8, maintenance=pol)) as eng:
+        eng.add(extra, ttl_s=1e-3)
+        time.sleep(0.01)
+        eng.maintain()                       # sweep: TTLs -> tombstones
+        time.sleep(0.01)
+        eng.maintain()                       # compact: drop; checkpoint
+        st = eng.stats()["maintenance"]
+        assert st["policy"] == "fast"
+        assert st["sweeps"] >= 1 and st["compacts"] >= 1
+        assert st["checkpoints"] >= 1
+        assert ix.n_series == 96 and ix.n_deleted == 0 and ix.n_ttl == 0
+        # the policy checkpoint is loadable and lifecycle-correct
+        ld = FreshIndex.load(str(tmp_path))
+        assert ld.n_series == 96
+        d0, i0 = eng.submit(queries[:2], k=3).result(timeout=60)
+        d1, i1 = ld.search(jnp.asarray(queries[:2]), k=3)
+        assert np.array_equal(d0, np.asarray(d1))
+        assert np.array_equal(i0, np.asarray(i1))
+    assert any(f.startswith("step_") for f in os.listdir(tmp_path))
+
+
+def test_background_workers_run_maintenance(small):
+    """With workers and a hot-tier policy, sweeps and compactions happen
+    autonomously — no explicit maintain()/flush() from the caller."""
+    walks, extra, _ = small
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=16))
+    pol = MaintenancePolicy(freshness=FAST)
+    with ix.engine(EngineConfig(max_batch=8, workers=1,
+                                maintenance=pol)) as eng:
+        eng.add(extra, ttl_s=1e-3)
+        deadline = time.time() + 20.0
+        while time.time() < deadline:
+            st = eng.stats()["maintenance"]
+            if st["sweeps"] >= 1 and st["compacts"] >= 1 \
+                    and ix.n_pending == 0 and ix.n_deleted == 0:
+                break
+            time.sleep(0.01)
+        st = eng.stats()["maintenance"]
+        assert st["sweeps"] >= 1 and st["compacts"] >= 1, st
+        assert ix.n_series == 96
+
+
+def test_checker_maintenance_scenario_quick():
+    """A quick budget of the lifecycle scenario: no resurrected
+    tombstone, exactly-once drop, oracle bit-identity, across
+    interleavings (the full run is `python -m repro.analysis.checker`)."""
+    from repro.analysis.checker import MaintenanceScenario, explore
+    from repro.analysis.schedules import RandomStrategy
+    rep = explore(MaintenanceScenario(), RandomStrategy(seed=3), budget=12)
+    assert rep.runs == 12
+    assert rep.ok, rep.violations
