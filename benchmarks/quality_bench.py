@@ -1,0 +1,156 @@
+"""Recall-tiered approximate search benchmark
+(`benchmarks/run.py --quality-quick`).
+
+Measures the latency/recall trade the quality subsystem
+(`repro.quality`) buys, as BENCH_fresh.json rows next to the figure
+rows:
+
+* ``quality/exact``             — the exact tier on a serving engine:
+  per-dispatch p50/p99 through submit()/result() (CHUNK queries per
+  submit), the baseline every approx row is judged against (same
+  engine, same snapshot, same bucket plans).
+* ``quality/approx/{target}``   — one row per calibrated recall target:
+  p50/p99 through the approx latency tier, MEASURED recall@k against
+  the brute-force oracle on the bench queries, the visited-leaf
+  fraction (early-termination did the saving, not a different
+  workload), and the p99 speedup vs the exact row.
+
+Both tiers run on the SAME engine via `EngineConfig.latency_tiers`
+("interactive" -> exact, "batch" -> the target), so the comparison
+shares snapshot, plan cache, and batcher — the only difference is the
+calibrated stop rule.  The calibration itself is fitted here (offline,
+against a holdout drawn from the index) before the engine starts;
+`calibrate_s` on the approx rows records that one-off cost.
+
+Timings follow serve_bench: per-call wall seconds from the submit
+instant, summarized with `common.latency_summary`; the result cache is
+left OFF (`cache_entries=0`) so every sample pays a real dispatch.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.api import FreshIndex, IndexConfig
+from repro.data.synthetic import query_workload, random_walk
+from repro.quality import oracle_topk, recall_at_k
+from repro.serve import EngineConfig
+
+from .common import latency_summary, row
+
+N_SERIES = 8_192
+SERIES_LEN = 128
+LEAF_CAPACITY = 16
+N_QUERIES = 32
+N_HOLDOUT = 48
+K = 10
+TARGETS = (0.9, 0.95)
+EPS_GRID = (0.0, 0.1, 0.25, 0.5, 1.0)
+CHUNK = 8                # queries per submit: one timed batch dispatch
+REPEAT = 12              # timing passes over the query set per tier
+
+
+def set_quick() -> None:
+    """CI smoke scale: fewer queries/holdout/repeats — but the INDEX
+    stays at full size.  The whole claim of the quality rows is the
+    early-termination latency ratio, and that ratio is a function of
+    leaf count (exact visits ~55% of 512 leaves, the calibrated rule
+    ~20%); shrinking the index compresses it into dispatch noise and
+    the committed p99 claim stops being real (EXPERIMENTS.md)."""
+    global N_QUERIES, N_HOLDOUT, REPEAT
+    N_QUERIES = 16
+    N_HOLDOUT = 24
+    REPEAT = 10
+
+
+def _calibrated_index():
+    walks = random_walk(N_SERIES, SERIES_LEN, seed=81)
+    queries = query_workload(walks, N_QUERIES, noise_sigma=0.05, seed=82)
+    ix = FreshIndex.build(walks, IndexConfig(leaf_capacity=LEAF_CAPACITY))
+    t0 = time.perf_counter()
+    ix.calibrate(ks=(K,), targets=TARGETS, n_queries=N_HOLDOUT, seed=83,
+                 eps_grid=EPS_GRID, repeat=2)
+    return ix, queries, time.perf_counter() - t0
+
+
+def _drive(eng, queries: np.ndarray, k: int, priority: str):
+    """REPEAT sequential passes over the query stream through one tier,
+    CHUNK queries per submit — one timed sample per batch dispatch, so
+    per-leaf compute (what the stop rule saves) dominates the sample
+    instead of fixed submit/deliver cost.  Returns (per-call seconds,
+    (Q, k) result ids from the last pass)."""
+    samples, ids = [], []
+    for rep in range(REPEAT + 1):           # pass 0 = warmup, untimed
+        ids = []
+        for r in range(0, queries.shape[0], CHUNK):
+            t0 = time.perf_counter()
+            d, i = eng.submit(queries[r:r + CHUNK], k=k,
+                              priority=priority).result()
+            if rep:
+                samples.append(time.perf_counter() - t0)
+            ids.append(np.asarray(i))
+    return samples, np.concatenate(ids, axis=0)
+
+
+def quality_tiers() -> List[dict]:
+    ix, queries, t_calib = _calibrated_index()
+    n_leaves = ix.stats()["n_leaves"]
+    d_o, i_o = oracle_topk(ix, queries, K)
+    out = []
+    for target in TARGETS:
+        # workers=0 + help_after_ms=0: the submitting thread executes
+        # its own batch inline (the engine's helping path), so samples
+        # time the two compiled programs without worker-handoff jitter
+        cfg = EngineConfig(max_batch=CHUNK, linger_ms=0.0, workers=0,
+                           help_after_ms=0.0, warm_ks=(K,),
+                           cache_entries=0,
+                           latency_tiers={"batch": target})
+        with ix.engine(cfg) as eng:
+            eng.warmup(ks=(K,))
+            t_ex, ids_ex = _drive(eng, queries, K, "interactive")
+            t_ap, ids_ap = _drive(eng, queries, K, "batch")
+            q = eng.stats()["quality"]["tiers"]
+        exact = latency_summary(t_ex)
+        approx = latency_summary(t_ap)
+        assert np.array_equal(ids_ex, i_o), "exact tier diverged from " \
+            "the brute-force oracle"
+        rec = recall_at_k(ids_ap, i_o)
+        label = f"approx@{target:g}"
+        visited = q[label]["visited_leaves_per_query"]
+        visited_exact = q["exact"]["visited_leaves_per_query"]
+        rule = ix.resolve_stop_rule("approx", k=K, recall_target=target)
+        if target == TARGETS[0]:
+            out.append(row(
+                "quality/exact", exact["p50_us"] / 1e6,
+                f"n={N_SERIES} L={SERIES_LEN} q={N_QUERIES} k={K} "
+                f"chunk={CHUNK} leaves={n_leaves}",
+                p50_us=exact["p50_us"], p99_us=exact["p99_us"],
+                visited_leaves=round(visited_exact, 1)))
+        out.append(row(
+            f"quality/approx/{target:g}", approx["p50_us"] / 1e6,
+            f"n={N_SERIES} q={N_QUERIES} k={K} chunk={CHUNK} "
+            f"rule=({rule})",
+            p50_us=approx["p50_us"], p99_us=approx["p99_us"],
+            recall_at_k=round(rec, 4), recall_target=target,
+            visited_leaves=round(visited, 1),
+            visited_frac=round(visited / n_leaves, 3) if n_leaves else 0.0,
+            p99_vs_exact=round(approx["p99_us"] / exact["p99_us"], 3)
+            if exact["p99_us"] else 0.0,
+            exact_p99_us=exact["p99_us"],
+            calibrate_s=round(t_calib, 2)))
+    return out
+
+
+ALL = [quality_tiers]
+
+
+if __name__ == "__main__":
+    import sys
+    if "--quick" in sys.argv:
+        set_quick()
+    for fn in ALL:
+        for r in fn():
+            print(r)

@@ -41,6 +41,11 @@ def main() -> None:
                     help="also run the lifecycle maintenance bench "
                          "(maint/* rows: tombstone-mask search overhead, "
                          "compaction reclaim rate, TTL sweep cost)")
+    ap.add_argument("--quality-quick", action="store_true",
+                    help="also run the recall-tiered approximate-search "
+                         "bench (quality/* rows: calibrated recall@k, "
+                         "visited-leaf fraction, approx vs exact p99 on "
+                         "one latency-tiered engine)")
     args = ap.parse_args()
 
     from . import fresh_bench
@@ -71,6 +76,11 @@ def main() -> None:
         if args.quick:
             maintenance_bench.set_quick()
         benches += maintenance_bench.ALL
+    if args.quality_quick:
+        from . import quality_bench
+        if args.quick:
+            quality_bench.set_quick()
+        benches += quality_bench.ALL
     for fn in benches:
         tag = fn.__name__.split("_")[0]
         if only and tag not in only:

@@ -11,8 +11,11 @@
 # IndexBuilder single-shot vs multi-worker vs crash-injected, compact
 # merge vs rebuild) AND the lifecycle maintenance leg (--maint-quick:
 # tombstone-mask search overhead, compaction reclaim rate, TTL sweep
-# cost) at --quick scale, emitting the machine-readable
-# BENCH_fresh.json perf record with p50/p99 latency + QPS rows.
+# cost) AND the recall-tiered approximate-search leg (--quality-quick:
+# calibrated recall@k >= target, approx p99 < exact p99 on one
+# latency-tiered engine) at --quick scale, emitting the
+# machine-readable BENCH_fresh.json perf record with p50/p99 latency +
+# QPS rows.
 #
 #   scripts/smoke.sh                  full smoke
 #   scripts/smoke.sh --sharded-serve  only the sharded serving leg:
@@ -82,8 +85,9 @@ python -W error::DeprecationWarning -m pytest -q -x \
     tests/test_api.py tests/test_builder.py tests/test_index_search.py \
     tests/test_docs.py tests/test_system.py
 
-python -m benchmarks.run --only fig3,fig5,serve,build,maint --quick \
-    --serve-quick --build-quick --maint-quick --json BENCH_fresh.json
+python -m benchmarks.run --only fig3,fig5,serve,build,maint,quality \
+    --quick --serve-quick --build-quick --maint-quick --quality-quick \
+    --json BENCH_fresh.json
 python - <<'EOF'
 import json
 rows = json.load(open("BENCH_fresh.json"))["rows"]
@@ -140,6 +144,26 @@ assert "overhead_pct" in by_name["maint/mask_overhead"]
 reclaim = by_name["maint/compact_reclaim"]
 assert reclaim["reclaim_rate"] > 0 and reclaim["rows_per_s"] > 0, reclaim
 assert "per_entry_us" in by_name["maint/ttl_sweep"]
+# quality rows: the exact-tier baseline plus one row per calibrated
+# recall target; measured recall must meet the target and the approx
+# tier must beat its OWN engine's exact p99 (the committed full-scale
+# record makes the stronger <=0.6x claim — see EXPERIMENTS.md
+# §Approximate search)
+assert "p99_us" in by_name["quality/exact"], by_name.keys()
+qrows = [r for r in rows if r["name"].startswith("quality/approx/")]
+assert qrows, "no quality/approx/* rows in BENCH_fresh.json"
+for r in qrows:
+    assert r["recall_at_k"] >= r["recall_target"], (
+        "calibrated recall below target", r["name"],
+        r["recall_at_k"], r["recall_target"])
+    assert 0.0 < r["visited_frac"] < 1.0, (
+        "approx tier did not early-terminate", r["name"],
+        r["visited_frac"])
+    assert r["p99_us"] < r["exact_p99_us"], (
+        "approx p99 not below exact p99 on the same engine",
+        r["name"], r["p99_us"], r["exact_p99_us"])
+q95 = by_name.get("quality/approx/0.95")
+assert q95 is not None, "missing the 0.95-target quality row"
 print(f"BENCH_fresh.json OK: {len(rows)} rows; fig3+fig5 both backends, "
       f"serve p50/p99/QPS, overload sweep (bounded p99 "
       f"{b3['p99_us']/b1['p99_us']:.2f}x 1x->3x, unbounded "

@@ -34,7 +34,15 @@ interleaving:
                   bound epoch's view; dead ids never appear), each
                   tombstone is physically dropped by compaction exactly
                   once, and identical tombstone views yield
-                  byte-identical answers across schedules.
+                  byte-identical answers across schedules;
+  quality         with latency tiers active, an exact-tier future is
+                  always answered by the exact program and an
+                  approx-tier future by its tier's program — the stub
+                  approx plan truncates the candidate set so a plan- or
+                  result-cache key collision between tiers changes
+                  delivered bytes and cannot hide — and every cache hit
+                  serves rows from the hitting future's own (tier,
+                  epoch).
 
 Engine scenarios run the real QueryEngine over a stub index + stub plan
 cache (pure-numpy brute force): every schedule then costs milliseconds,
@@ -67,11 +75,13 @@ from .hooks import SyncHook, installed, observe
 from .schedules import (ControlledScheduler, DFSStrategy, RandomStrategy,
                         RunResult, ScheduleLivelock, SchedulerHang, Strategy)
 
-__all__ = ["ExploreReport", "Scenario", "StubIndex", "StubPlans",
-           "TrackedCondition", "TrackedLock", "engine_scenario",
-           "explore", "journal_scenario", "main", "maintenance_scenario",
-           "make_portfolio", "overload_scenario", "refresh_scenario",
-           "snapshot_fingerprint", "stub_topk", "stub_topk_alive"]
+__all__ = ["ExploreReport", "Scenario", "StubCalibration", "StubIndex",
+           "StubPlans", "QualityStubPlans", "TrackedCondition",
+           "TrackedLock", "engine_scenario", "explore",
+           "journal_scenario", "main", "maintenance_scenario",
+           "make_portfolio", "overload_scenario", "quality_scenario",
+           "refresh_scenario", "snapshot_fingerprint", "stub_topk",
+           "stub_topk_alive"]
 
 
 # ------------------------------------------------------------------ stubs
@@ -129,6 +139,7 @@ class StubIndex:
         self.config = StubConfig()
         self.mesh = None
         self.mesh_axis = "data"
+        self._calib = None              # StubCalibration for tier tests
 
     @property
     def index(self):
@@ -168,6 +179,34 @@ class StubIndex:
             observe("index.delta_cat", self)
             self._dcat = np.concatenate(self._delta, axis=0)
         return self._dcat
+
+    @property
+    def calibration(self):
+        """The installed stub calibration table (None = uncalibrated),
+        mirroring FreshIndex.calibration for the engine's tier stats."""
+        return self._calib
+
+    def resolve_stop_rule(self, mode: str, *, k: int,
+                          recall_target: float = 0.95,
+                          stop_eps: Optional[float] = None,
+                          max_leaves: Optional[int] = None):
+        """FreshIndex.resolve_stop_rule's contract over the stub table:
+        exact -> EXACT, explicit knobs -> a StopRule, otherwise a table
+        lookup that raises for uncalibrated (k, target) pairs — which is
+        what lets the REAL `QueryEngine._tier_for` run unmodified in the
+        quality scenario."""
+        from repro.quality.stop_rules import EXACT, StopRule
+        if mode == "exact":
+            return EXACT
+        if stop_eps is not None or max_leaves is not None:
+            return StopRule(eps=stop_eps if stop_eps is not None else 0.0,
+                            max_leaves=max_leaves)
+        entry = None if self._calib is None \
+            else self._calib.lookup(k, recall_target)
+        if entry is None:
+            raise ValueError(f"no stub calibration entry for (k={k}, "
+                             f"recall_target={recall_target})")
+        return entry.rule
 
     def search_view(self):
         """(core_view, delta, delta_alive, delta_id0) — the facade's
@@ -343,6 +382,78 @@ class StubPlans:
     def stats(self) -> dict:
         return {"hits": 0, "misses": 0, "size": 0, "donate": False,
                 "sharded_traces": 0}
+
+
+class _StubCalibEntry:
+    """One stub CalibrationEntry: just the fields _tier_for reads."""
+
+    __slots__ = ("rule", "recall")
+
+    def __init__(self, rule, recall: float):
+        self.rule = rule
+        self.recall = recall
+
+
+class StubCalibration:
+    """CalibrationTable stand-in: one (k, target) -> StopRule entry."""
+
+    def __init__(self, k: int, target: float, max_leaves: int,
+                 recall: float = 1.0):
+        from repro.quality.stop_rules import StopRule
+        self._key = (int(k), round(float(target), 6))
+        self._entry = _StubCalibEntry(StopRule(max_leaves=max_leaves),
+                                      recall)
+
+    def lookup(self, k: int, target: float):
+        if (int(k), round(float(target), 6)) == self._key:
+            return self._entry
+        return None
+
+
+class _QualityStubPlan(_StubPlan):
+    """Tier-sensitive stub plan: with `stop_leaves` set (an approx
+    tier's knobs) only the first `stop_leaves` CORE rows are candidates
+    — the stub spelling of 'visit fewer leaves' — while the delta scan
+    stays exact, mirroring the real stop-rule contract.  Exact and
+    approx therefore return DIFFERENT bytes whenever a true neighbor
+    lives past the truncation, which is what makes a plan/cache key
+    collision between tiers machine-detectable."""
+
+    __slots__ = ("stop_leaves",)
+
+    def __init__(self, k: int, stop_leaves: Optional[int]):
+        super().__init__(k)
+        self.stop_leaves = stop_leaves
+
+    def run(self, snap, queries):
+        q = np.asarray(queries, np.float32)
+        core = snap.core
+        n_core = core.series.shape[0]
+        m = n_core if self.stop_leaves is None \
+            else min(int(self.stop_leaves), n_core)
+        data = [np.asarray(core.series)[:m]]
+        ids = [np.asarray(core.ids, np.int64)[:m]]
+        alive = [np.ones(m, bool) if core.alive is None
+                 else np.asarray(core.alive, bool)[:m]]
+        if snap.delta is not None:
+            nd = snap.delta.shape[0]
+            data.append(np.asarray(snap.delta))
+            ids.append(snap.n_base + np.arange(nd, dtype=np.int64))
+            da = getattr(snap, "delta_alive", None)
+            alive.append(np.ones(nd, bool) if da is None
+                         else np.asarray(da, bool))
+        a = np.concatenate(alive)
+        d, i = stub_topk_alive(q, np.concatenate(data, axis=0),
+                               np.concatenate(ids),
+                               None if a.all() else a, self.k)
+        return d, i, 1
+
+
+class QualityStubPlans(StubPlans):
+    """PlanCache stand-in that honors the knobs' stop rule."""
+
+    def get(self, snap, bucket_q: int, k: int, knobs) -> _StubPlan:
+        return _QualityStubPlan(k, getattr(knobs, "stop_leaves", None))
 
 
 # ------------------------------------------------- lock-discipline probes
@@ -1200,6 +1311,218 @@ class MaintenanceScenario(Scenario):
         return v
 
 
+QUALITY_PARK = ENGINE_PARK
+
+
+class QualityScenario(Scenario):
+    """Real QueryEngine with `latency_tiers={"batch": target}` over a
+    StubIndex carrying a stub calibration table: an exact client and an
+    approx-tier client submit the SAME queries at the same (epoch, k) —
+    twice each, so the second submit can hit the result cache — while a
+    writer publishes a new epoch and a flusher races the helpers.
+
+    The stub approx plan truncates the core candidate set (delta stays
+    exact), so the two tiers provably return different bytes for the
+    scenario's queries (the vacuity guard below machine-checks this).
+
+    Invariants (the quality additions to the catalog):
+
+    * TIER FIDELITY — every delivered exact-tier result equals the
+      full brute-force oracle over its bound epoch's view, and every
+      approx-tier result equals the TRUNCATED-core oracle over the same
+      view.  A plan-cache or result-cache key collision between tiers
+      (the bug `plan_key` exists to prevent) serves one tier's rows to
+      the other and fails exactly one of these.
+    * CACHE TIER/EPOCH COHERENCE — every result-cache hit serves rows
+      equal to the hitting future's OWN tier oracle over the epoch in
+      its key, and that epoch equals the future's bound epoch.
+    * terminate-exactly-once per future (fills/completions counted).
+    * bit-identity across schedules per (tier, epoch).
+    * per-tier stats isolation: a tier that delivered work has its own
+      counter bucket; the exact bucket never counts approx queries
+      (checked via total-queries conservation).
+    * the same lock-discipline probes as EngineScenario.
+    """
+
+    TARGET = 0.9
+    STOP_LEAVES = 3
+
+    def __init__(self, name: str = "quality"):
+        self.name = name
+        self.park_on = QUALITY_PARK
+        self._identity: Dict[Tuple, Tuple[bytes, bytes]] = {}
+        rng = np.random.RandomState(17)
+        self.base = rng.randn(6, 8).astype(np.float32)
+        # both queries' true nearest neighbors sit PAST the truncation
+        # point, so exact and approx answers must differ at epoch 0
+        self.q0 = (self.base[4:6] + 0.05 * rng.randn(2, 8)
+                   ).astype(np.float32)
+        self.extra = rng.randn(2, 8).astype(np.float32)
+
+    def setup(self):
+        from repro.serve.engine import EngineConfig, QueryEngine
+        ix = StubIndex(self.base)
+        ix._calib = StubCalibration(k=2, target=self.TARGET,
+                                    max_leaves=self.STOP_LEAVES,
+                                    recall=self.TARGET)
+        eng = QueryEngine(ix, EngineConfig(
+            workers=0, linger_ms=0.0, help_after_ms=0.0, max_batch=4,
+            cache_entries=8, latency_tiers={"batch": self.TARGET}))
+        eng.plans = QualityStubPlans()
+        cv = TrackedCondition(eng._cv)
+        wl = TrackedLock(eng._wlock)
+        eng._cv = cv
+        eng._wlock = wl
+        snap0 = eng._snapshots[0]
+        return {
+            "eng": eng, "cv": cv, "wl": wl,
+            "exact": [], "approx": [],
+            "tier_of": {},              # id(fut) -> "exact" | "approx"
+            "views": {0: (np.asarray(snap0.core.series).copy(),
+                          np.asarray(snap0.core.ids).copy(),
+                          None, snap0.n_base)},
+            "fills": {},                # (fut_id, src, n) -> count
+            "completions": {},          # fut_id -> count
+            "cache_hits": [],           # (fut, epoch, k, q, d, i)
+            "lock_violations": [],
+        }
+
+    def observer(self, ctx):
+        cv, wl = ctx["cv"], ctx["wl"]
+
+        def obs(name: str, obj: Any) -> None:
+            if name == "journal.persist" and (cv.held() or wl.held()):
+                where = "_cv" if cv.held() else "_wlock"
+                ctx["lock_violations"].append(f"{name} while {where} held")
+            elif name == "index.delta_cat" and cv.held():
+                ctx["lock_violations"].append(f"{name} while _cv held")
+            elif name == "engine.publish":
+                ctx["views"][obj.epoch] = (
+                    np.asarray(obj.core.series).copy(),
+                    np.asarray(obj.core.ids).copy(),
+                    None if obj.delta is None
+                    else np.asarray(obj.delta).copy(),
+                    obj.n_base)
+            elif name == "engine.future.fill":
+                fut, src, n, completed = obj
+                key = (id(fut), src, n)
+                ctx["fills"][key] = ctx["fills"].get(key, 0) + 1
+                if completed:
+                    c = ctx["completions"]
+                    c[id(fut)] = c.get(id(fut), 0) + 1
+            elif name == "engine.cache.hit":
+                fut, epoch, k, q, d, i = obj
+                ctx["cache_hits"].append(
+                    (fut, epoch, k, q.copy(), d.copy(), i.copy()))
+        return obs
+
+    # ----------------------------------------------------------- threads
+    def _client(self, ctx, tier: str) -> None:
+        eng = ctx["eng"]
+        prio = "interactive" if tier == "exact" else "batch"
+        for _ in range(2):              # second submit may hit the cache
+            fut = eng.submit(self.q0, k=2, priority=prio)
+            ctx["tier_of"][id(fut)] = tier
+            ctx[tier].append(fut)
+            eng.flush()
+
+    def threads(self, ctx):
+        return [("exact", lambda: self._client(ctx, "exact")),
+                ("approx", lambda: self._client(ctx, "approx")),
+                ("add", lambda: ctx["eng"].add(self.extra)),
+                ("flush", lambda: ctx["eng"].flush())]
+
+    def finish(self, ctx, result):
+        ctx["eng"].flush()              # uncontrolled drain
+
+    # ------------------------------------------------------------ checks
+    def _oracle(self, view, q: np.ndarray, k: int, tier: str):
+        """The tier's ground truth over one epoch view: full candidates
+        for exact, first-STOP_LEAVES core rows + full delta for approx
+        (byte-for-byte what _QualityStubPlan computes)."""
+        core, cids, delta, n_base = view
+        if tier == "approx":
+            m = min(self.STOP_LEAVES, core.shape[0])
+            core, cids = core[:m], cids[:m]
+        data, ids = [core], [np.asarray(cids, np.int64)]
+        if delta is not None:
+            data.append(delta)
+            ids.append(n_base + np.arange(delta.shape[0], dtype=np.int64))
+        return stub_topk_alive(q, np.concatenate(data, axis=0),
+                               np.concatenate(ids), None, k)
+
+    def check(self, ctx, result):
+        eng = ctx["eng"]
+        v = list(ctx["lock_violations"])
+        # vacuity guard: the two tiers MUST disagree on epoch 0, or the
+        # aliasing detector below has no teeth
+        d_e, i_e = self._oracle(ctx["views"][0], self.q0, 2, "exact")
+        d_a, i_a = self._oracle(ctx["views"][0], self.q0, 2, "approx")
+        if np.array_equal(i_e, i_a) and np.array_equal(d_e, d_a):
+            v.append("scenario vacuous: exact and approx oracles agree "
+                     "on epoch 0 — truncation lost its effect")
+        delivered = {"exact": 0, "approx": 0}
+        for tier in ("exact", "approx"):
+            for ci, fut in enumerate(ctx[tier]):
+                if not fut.done():
+                    v.append(f"{tier} future {ci} incomplete after drain "
+                             f"(stalled={result.stalled})")
+                    continue
+                delivered[tier] += fut._d.shape[0]
+                view = ctx["views"].get(fut.epoch)
+                if view is None:
+                    v.append(f"{tier} future {ci} bound to unpublished "
+                             f"epoch {fut.epoch}")
+                    continue
+                d_exp, i_exp = self._oracle(view, self.q0, fut.k, tier)
+                if not (np.array_equal(fut._d, d_exp)
+                        and np.array_equal(fut._i, i_exp)):
+                    v.append(f"{tier} future {ci} != {tier} oracle for "
+                             f"epoch {fut.epoch} — tier aliasing?")
+                if ctx["completions"].get(id(fut), 0) != 1:
+                    v.append(f"{tier} future {ci} completed "
+                             f"{ctx['completions'].get(id(fut), 0)} times")
+                key = (tier, fut.epoch)
+                sig = (fut._d.tobytes(), fut._i.tobytes())
+                prev = self._identity.setdefault(key, sig)
+                if prev != sig:
+                    v.append(f"bit-identity broken across schedules for "
+                             f"({tier}, epoch {fut.epoch})")
+        # exactly-once row delivery
+        for (fid, src, n), count in ctx["fills"].items():
+            if count != 1:
+                v.append(f"rows [{src}:{src + n}] delivered {count} times")
+        # cache hits serve the hitting future's own (tier, epoch)
+        for fut, epoch, k, q, d, i in ctx["cache_hits"]:
+            tier = ctx["tier_of"].get(id(fut))
+            if tier is None:
+                v.append("cache hit for a future no client submitted")
+                continue
+            if epoch != fut.epoch:
+                v.append(f"cache hit served epoch {epoch} to a future "
+                         f"bound to epoch {fut.epoch}")
+            view = ctx["views"].get(epoch)
+            if view is None:
+                v.append(f"cache hit keyed to unpublished epoch {epoch}")
+                continue
+            d_exp, i_exp = self._oracle(view, q[None], k, tier)
+            if not (np.array_equal(d, d_exp[0])
+                    and np.array_equal(i, i_exp[0])):
+                v.append(f"cache hit rows != {tier} oracle for epoch "
+                         f"{epoch} (cross-tier cache aliasing)")
+        # per-tier stats isolation: queries counted in the right bucket
+        label = f"approx@{self.TARGET:g}"
+        q_exact = eng._tier_stats.get("exact", {}).get("queries", 0)
+        q_approx = eng._tier_stats.get(label, {}).get("queries", 0)
+        if delivered["exact"] and q_exact != delivered["exact"]:
+            v.append(f"exact tier counted {q_exact} queries, delivered "
+                     f"{delivered['exact']}")
+        if delivered["approx"] and q_approx != delivered["approx"]:
+            v.append(f"{label} tier counted {q_approx} queries, "
+                     f"delivered {delivered['approx']}")
+        return v
+
+
 # shortcut constructors (importable names for tests / portfolio)
 def refresh_scenario(**kw) -> RefreshScenario:
     return RefreshScenario(**kw)
@@ -1219,6 +1542,10 @@ def overload_scenario(**kw) -> OverloadScenario:
 
 def maintenance_scenario(**kw) -> MaintenanceScenario:
     return MaintenanceScenario(**kw)
+
+
+def quality_scenario(**kw) -> QualityScenario:
+    return QualityScenario(**kw)
 
 
 # ---------------------------------------------------------------- driver
@@ -1330,6 +1657,9 @@ def make_portfolio(budget: int, seed: int = 0,
         ("engine.maint",
          MaintenanceScenario(name="engine.maint"),
          RandomStrategy(seed=seed + 7), int(b * 0.08)),
+        ("engine.quality",
+         QualityScenario(name="engine.quality"),
+         RandomStrategy(seed=seed + 8), int(b * 0.08)),
     ]
     return mix
 

@@ -104,6 +104,8 @@ from repro.core.search import (build_sharded_search, merge_delta_topk,
                                run_search, shard_index, squeeze_k)
 from repro.maintenance.tombstones import (core_dead_mask, delta_alive_mask,
                                           mask_core)
+from repro.quality.calibrate import CalibrationTable, index_fingerprint
+from repro.quality.stop_rules import EXACT, StopRule
 from repro.runtime.sharding import mesh_sig
 
 _BOUNDS = ("prefix", "symbox", "paabox")
@@ -208,6 +210,18 @@ class FreshIndex:
         self._masked = None                     # search_view cache ...
         self._masked_key = None                 # ... keyed (ver, pending)
         self._lifecycle_ver = 0
+        # ---- in-place update (stable ids): update(sid, x) retires the
+        # old row and introduces the new one under a fresh INTERNAL id,
+        # but keeps answering as `sid`.  `_id_map` is stable -> current
+        # internal, `_alias` the inverse (internal -> stable, only for
+        # renamed rows); both empty until the first update().
+        self._id_map: dict = {}
+        self._alias: dict = {}
+        # ---- approximate search (repro.quality): fitted stop rules,
+        # installed by calibrate() or restored by load()
+        self._calibration: Optional[CalibrationTable] = None
+        self._fp = None                         # fingerprint cache ...
+        self._fp_key = None                     # ... keyed (ver, pending)
 
     # ------------------------------------------------------------------ #
     # construction
@@ -343,6 +357,8 @@ class FreshIndex:
         st["sharded"] = self._mesh is not None
         st["n_deleted"] = self.n_deleted
         st["n_ttl"] = self.n_ttl
+        st["n_aliases"] = len(self._alias)
+        st["calibrated"] = self._calibration is not None
         return st
 
     def __repr__(self) -> str:
@@ -353,12 +369,15 @@ class FreshIndex:
     # search
     # ------------------------------------------------------------------ #
     def search(self, queries, k: int = 1, *,
+               mode: str = "exact", recall_target: float = 0.95,
+               stop_eps: Optional[float] = None,
+               max_leaves: Optional[int] = None,
                round_leaves: Optional[int] = None, sync_every: int = 1,
                max_rounds: Optional[int] = None,
                pq_budget: Optional[int] = None,
                backend: Optional[str] = None
                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-        """Exact k-NN over `queries` ((L,) or (Q, L) float array).
+        """k-NN over `queries` ((L,) or (Q, L) float array).
 
         Returns:
             (dist, ids): shape (Q,) for k == 1, (Q, k) ascending by
@@ -367,18 +386,27 @@ class FreshIndex:
             before compact().  Logically-deleted / TTL-expired series
             never appear: the search runs over the tombstone-masked
             view (`search_view`), bit-identical to the tombstone-aware
-            brute-force oracle.
+            brute-force oracle.  Reported distances are always TRUE
+            distances to the returned series, in both modes.
         Raises:
-            ValueError: query length != series_len, k < 1, or k exceeds
-                n_series (which excludes tombstoned series).
+            ValueError: query length != series_len, k < 1, k exceeds
+                n_series (which excludes tombstoned series), or
+                mode/stop-rule arguments are inconsistent (see
+                `resolve_stop_rule`).
 
-        `max_rounds` caps the refinement loop (approximate search:
-        distances become upper bounds).  round_leaves / pq_budget / the
-        kernel backend default from this index's IndexConfig (pass
-        explicit values to override per call).  On a sharded index
-        `sync_every` sets the expeditive/standard all-reduce cadence and
-        `sync_every` participates in the per-mesh compiled-search cache
-        key (unsharded searches ignore it).
+        `mode` selects the quality tier: "exact" (default, certified
+        k-NN) or "approx" — early-terminate the round loop under a
+        `repro.quality.StopRule`, either given explicitly (`stop_eps` /
+        `max_leaves`) or resolved from this index's calibration table
+        as the cheapest fitted rule whose MEASURED recall@k met
+        `recall_target` (run `calibrate()` first, or load a calibrated
+        checkpoint).  `max_rounds` caps the refinement loop the blunt
+        way (distances become upper bounds).  round_leaves / pq_budget
+        / the kernel backend default from this index's IndexConfig
+        (pass explicit values to override per call).  On a sharded
+        index `sync_every` sets the expeditive/standard all-reduce
+        cadence and `sync_every` participates in the per-mesh
+        compiled-search cache key (unsharded searches ignore it).
 
         Concurrency: a reader.  Safe against other readers; racing a
         writer (add/compact) has NO defined ordering on this facade —
@@ -396,13 +424,16 @@ class FreshIndex:
         if k > self.n_series:
             raise ValueError(f"k={k} exceeds the {self.n_series} indexed "
                              f"series")
+        rule = self.resolve_stop_rule(mode, k=k, recall_target=recall_target,
+                                      stop_eps=stop_eps,
+                                      max_leaves=max_leaves)
         core, delta, alive, id0 = self.search_view()
         if self._mesh is not None:
             # the mesh placement is part of the key (not just cleared on
             # shard()): a compiled shard_map search can never be replayed
             # against arrays living on a different placement
             key = (k, round_leaves, sync_every, max_rounds, pq_budget,
-                   backend, mesh_sig(self._mesh))
+                   backend, rule, mesh_sig(self._mesh))
             fn = self._sharded_fns.get(key)
             if fn is None:
                 fn = build_sharded_search(
@@ -410,26 +441,143 @@ class FreshIndex:
                     round_leaves=round_leaves, sync_every=sync_every,
                     max_rounds=max_rounds, znorm=self.config.znorm,
                     pq_budget=pq_budget, backend=backend,
-                    config=self.config)
+                    config=self.config, **rule.lower())
                 self._sharded_fns[key] = fn
             d, i = fn(core, q)
         else:
             d, i = run_search(core, q, k=k, round_leaves=round_leaves,
                               znorm=self.config.znorm,
                               max_rounds=max_rounds, pq_budget=pq_budget,
-                              backend=backend, config=self.config)
-        if delta is None:
-            return d, i
-        # fold the exact delta scan into the core answer.  The core
-        # search program stays cached across add() calls; only the small
-        # merge re-jits when the delta row count changes.  (The serving
-        # layer instead AOT-compiles the fused snapshot_search once per
-        # published epoch — same math, different compile amortization.)
-        d2 = d[:, None] if k == 1 else d
-        i2 = i[:, None] if k == 1 else i
-        md, mi = merge_delta_topk(delta, q, d2, i2, alive, k=k,
-                                  n_base=id0, znorm=self.config.znorm)
-        return squeeze_k(md, mi, k)
+                              backend=backend, config=self.config,
+                              **rule.lower())
+        if delta is not None:
+            # fold the exact delta scan into the core answer.  The core
+            # search program stays cached across add() calls; only the
+            # small merge re-jits when the delta row count changes.  (The
+            # serving layer instead AOT-compiles the fused
+            # snapshot_search once per published epoch — same math,
+            # different compile amortization.)
+            d2 = d[:, None] if k == 1 else d
+            i2 = i[:, None] if k == 1 else i
+            md, mi = merge_delta_topk(delta, q, d2, i2, alive, k=k,
+                                      n_base=id0, znorm=self.config.znorm)
+            d, i = squeeze_k(md, mi, k)
+        if self._alias:
+            i = jnp.asarray(self._remap_ids(np.asarray(i)))
+        return d, i
+
+    def resolve_stop_rule(self, mode: str, *, k: int,
+                          recall_target: float = 0.95,
+                          stop_eps: Optional[float] = None,
+                          max_leaves: Optional[int] = None) -> StopRule:
+        """The `StopRule` a (mode, k, recall_target) request lowers to —
+        the ONE resolution path search() and the serving engine's
+        latency tiers share.
+
+        Args:
+            mode: "exact" or "approx".
+            k: result count the rule will serve (calibration entries are
+                per-k).
+            recall_target: measured recall@k floor used for the
+                calibration-table lookup (ignored when explicit knobs
+                are given).
+            stop_eps: explicit BSF-convergence slack; with "approx",
+                overrides the table.
+            max_leaves: explicit visited-leaf cap; with "approx",
+                overrides the table.
+        Returns:
+            The resolved StopRule (`quality.EXACT` for exact mode).
+        Raises:
+            ValueError: unknown mode; explicit knobs passed with
+                mode="exact"; or mode="approx" with no explicit knobs
+                and no calibration entry for (k, recall_target).
+
+        Concurrency: read-only on calibration state; serialize against
+        `calibrate()` like any reader against a writer.
+        """
+        if mode not in ("exact", "approx"):
+            raise ValueError(f"mode must be 'exact' or 'approx', "
+                             f"got {mode!r}")
+        if mode == "exact":
+            if stop_eps is not None or max_leaves is not None:
+                raise ValueError(
+                    "stop_eps/max_leaves are approx-mode knobs; they "
+                    "contradict mode='exact'")
+            return EXACT
+        if stop_eps is not None or max_leaves is not None:
+            return StopRule(eps=stop_eps if stop_eps is not None else 0.0,
+                            max_leaves=max_leaves)
+        if self._calibration is None:
+            raise ValueError(
+                "mode='approx' needs either explicit stop_eps/max_leaves "
+                "or a fitted calibration table — run index.calibrate() "
+                "(or load a calibrated checkpoint)")
+        entry = self._calibration.lookup(k, recall_target)
+        if entry is None:
+            raise ValueError(
+                f"no calibration entry for (k={k}, recall_target="
+                f"{recall_target}); re-run calibrate() with ks/targets "
+                f"covering it, or pass explicit stop_eps/max_leaves")
+        return entry.rule
+
+    def calibrate(self, **kwargs) -> CalibrationTable:
+        """Fit approximate-search stop rules for this index and install
+        the resulting table (see `repro.quality.calibrate.calibrate` for
+        every argument: ks, targets, queries/n_queries, eps_grid,
+        leaves_grid, ...).  The installed table is what
+        `search(mode="approx")` and `EngineConfig.latency_tiers` resolve
+        rules from, and `save()` persists it with the checkpoint.
+
+        Args:
+            **kwargs: forwarded verbatim to the offline calibrator.
+        Returns:
+            The fitted CalibrationTable (also stored on the index).
+
+        Concurrency: a writer of calibration state (and a reader of the
+        index); serialize against other writers like add().
+        """
+        from repro.quality.calibrate import calibrate as _fit
+        table = _fit(self, **kwargs)
+        self._calibration = table
+        return table
+
+    @property
+    def calibration(self) -> Optional[CalibrationTable]:
+        """The installed CalibrationTable (None until calibrate() runs
+        or a calibrated checkpoint is loaded)."""
+        return self._calibration
+
+    def is_calibration_fresh(self) -> bool:
+        """True when the installed calibration table was measured on
+        EXACTLY this index content (fingerprints match) — i.e. its
+        advertised recalls still describe what approx search returns.
+        Mutations (add/delete/update/compact) make it stale; stale
+        tables still resolve (documented degradation) but stats surface
+        this flag so operators can re-calibrate.
+
+        Concurrency: a reader; the fingerprint is cached per lifecycle
+        version, so repeated calls are cheap.
+        """
+        if self._calibration is None:
+            return False
+        key = (self._lifecycle_ver, self.n_pending)
+        if self._fp_key != key:
+            self._fp = index_fingerprint(self)
+            self._fp_key = key
+        return self._fp == self._calibration.fingerprint
+
+    def _remap_ids(self, ids: np.ndarray) -> np.ndarray:
+        """Internal -> stable id remap at the result boundary: rows
+        renamed by update() answer under their stable public id.  Host
+        numpy, O(#aliases) passes; the no-alias fast path returns the
+        input untouched (exact mode stays bit-identical until the first
+        update())."""
+        if not self._alias:
+            return ids
+        out = np.array(ids, np.int32, copy=True)
+        for internal, stable in self._alias.items():
+            out[out == internal] = stable
+        return out
 
     def search_view(self):
         """The tombstone-masked search inputs, as one consistent tuple
@@ -556,6 +704,53 @@ class FreshIndex:
                 self._ttl[sid] = deadline
         return self
 
+    def update(self, sid: int, series, *,
+               ttl_s: Optional[float] = None) -> "FreshIndex":
+        """Replace series `sid`'s values in place, under its STABLE id:
+        the old row is retired (tombstoned, physically dropped at the
+        next compact) and the new values are introduced in the same
+        call, but search keeps answering with id `sid` — not
+        delete-then-add's two visible ids.  Internally the new row gets
+        a fresh never-reused id (the tombstone machinery stays
+        exactly-once) and an alias maps it back to `sid` at the result
+        boundary; the alias survives compaction and checkpoints.
+
+        Args:
+            sid: the stable id to update (a currently-live series).
+            series: the new (L,) values.
+            ttl_s: optional time-to-live for the NEW values (the old
+                row's TTL, if any, dies with it).
+        Returns:
+            self (fluent, like add()).
+        Raises:
+            ValueError: `sid` was never assigned or is not currently
+                live (deleted/expired/never existed), or `series` has
+                the wrong length.
+
+        Concurrency: a writer.  On this facade the retire+introduce
+        pair is NOT atomic against concurrent readers — the engine's
+        `update()` wraps it in the writer lock and publishes BOTH sides
+        as one epoch, so engine readers never observe zero or two live
+        rows for `sid`.
+        """
+        sid = int(sid)
+        cur = self._id_map.get(sid, sid)
+        row = np.asarray(series, np.float32)
+        if row.ndim != 1 or row.shape[0] != self.series_len:
+            raise ValueError(
+                f"series must be ({self.series_len},), got {row.shape}")
+        if self.delete(cur) == 0:
+            raise ValueError(
+                f"id {sid} is not a live series; update() replaces an "
+                f"existing row (use add() for new series)")
+        internal = self._delta_id0 + self.n_pending
+        self.add(row, ttl_s=ttl_s)
+        # delete(cur) popped cur's own alias (if sid was updated
+        # before); rebind the stable id to the fresh internal row
+        self._id_map[sid] = internal
+        self._alias[internal] = sid
+        return self
+
     # ------------------------------------------------------------------ #
     # lifecycle (repro.maintenance): logical deletion + TTL expiry
     # ------------------------------------------------------------------ #
@@ -581,7 +776,9 @@ class FreshIndex:
         d_lo, d_hi = self._delta_id0, self._delta_id0 + self.n_pending
         newly = 0
         for sid in ids:
-            sid = int(sid)
+            # a stable id renamed by update() resolves to the internal
+            # row currently carrying it
+            sid = self._id_map.get(int(sid), int(sid))
             if sid < 0 or sid >= self._next_id:
                 raise ValueError(
                     f"id {sid} was never assigned (ids run 0.."
@@ -597,6 +794,9 @@ class FreshIndex:
                     continue                # already dropped by a compact
             self._tombstones.add(sid)
             self._ttl.pop(sid, None)
+            stable = self._alias.pop(sid, None)
+            if stable is not None:
+                self._id_map.pop(stable, None)
             newly += 1
         if newly:
             if self._first_tombstone_at is None:
@@ -784,7 +984,11 @@ class FreshIndex:
                      "tombstones": sorted(self._tombstones),
                      "ttl": [[int(sid), max(0.0, dl - now)]
                              for sid, dl in sorted(self._ttl.items())],
+                     "aliases": [[int(i), int(s)]
+                                 for i, s in sorted(self._alias.items())],
                  }}
+        if self._calibration is not None:
+            extra["quality_calibration"] = self._calibration.to_dict()
         return save_checkpoint(directory, step, tree, extra=extra)
 
     @classmethod
@@ -826,6 +1030,9 @@ class FreshIndex:
             out._delta_id0 = int(life["delta_id0"])
             out._tombstones = {int(t) for t in life["tombstones"]}
             out._ttl = {int(s): now + float(r) for s, r in life["ttl"]}
+            out._alias = {int(i): int(s)
+                          for i, s in life.get("aliases", ())}
+            out._id_map = {s: i for i, s in out._alias.items()}
             if out._tombstones:
                 # age restarts at load: conservative (drops no later
                 # than staleness_budget_s after the restart)
@@ -834,6 +1041,9 @@ class FreshIndex:
             # pre-lifecycle checkpoint: ids were contiguous
             out._next_id = out._n_base + out.n_pending
             out._delta_id0 = out._n_base
+        calib = extra.get("quality_calibration")
+        if calib is not None:
+            out._calibration = CalibrationTable.from_dict(calib)
         return out
 
     def reload(self, directory: str, step: Optional[int] = None
@@ -879,8 +1089,13 @@ class FreshIndex:
         self._tombstones = loaded._tombstones
         self._ttl = loaded._ttl
         self._first_tombstone_at = loaded._first_tombstone_at
+        self._id_map = loaded._id_map
+        self._alias = loaded._alias
+        self._calibration = loaded._calibration
         self._masked = None
         self._masked_key = None
+        self._fp = None
+        self._fp_key = None
         self._lifecycle_ver += 1
         return self
 

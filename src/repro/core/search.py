@@ -113,6 +113,32 @@ def _rounds_cap(n_leaves: int, K: int, max_rounds: Optional[int],
     return cap
 
 
+def _stop_knobs(stop_eps: float, stop_leaves: Optional[int],
+                pq_budget: Optional[int]) -> Tuple[float, Optional[int]]:
+    """Validate the early-termination knobs (repro.quality stop rules)
+    and fold the `stop_leaves` visited-leaf cap into the PQ leaf budget.
+
+    Returns `(inv_eps_sq, leaf_budget)`: the squared-space bound scale
+    1/(1+eps)^2 the while_loop cond multiplies the k-th BSF by (1.0 in
+    exact mode — the guard at every call site keeps the traced program
+    literally unchanged when both knobs are defaults), and the combined
+    leaf allowance (min of pq_budget and stop_leaves, None = uncapped).
+    """
+    if stop_eps < 0.0:
+        raise ValueError(f"stop_eps must be >= 0, got {stop_eps}")
+    if stop_leaves is not None and stop_leaves < 1:
+        raise ValueError(f"stop_leaves must be >= 1 or None, "
+                         f"got {stop_leaves}")
+    inv = 1.0 if stop_eps == 0.0 else 1.0 / float(1.0 + stop_eps) ** 2
+    if stop_leaves is None:
+        budget = pq_budget
+    elif pq_budget is None:
+        budget = stop_leaves
+    else:
+        budget = min(pq_budget, stop_leaves)
+    return inv, budget
+
+
 def _pq_order(lb: jnp.ndarray, K: int, n_rounds_cap: int,
               leaf_budget: Optional[int] = None
               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -212,7 +238,9 @@ def _refine_round(q, q_sq, series, sq_norms, ids, alive, bsf_d, bsf_e,
 def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
                      k: int = 1, round_leaves: int = 8, znorm: bool = True,
                      max_rounds: Optional[int] = None, backend: str = "ref",
-                     pq_budget: Optional[int] = None
+                     pq_budget: Optional[int] = None,
+                     stop_eps: float = 0.0,
+                     stop_leaves: Optional[int] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """The PURE search plan: exact k-NN with every knob fully resolved.
 
@@ -236,10 +264,21 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
     priority queue: like `max_rounds`, a budget too small for the
     termination condition to trigger makes distances upper bounds instead
     of exact.
+
+    `stop_eps` / `stop_leaves` are the repro.quality APPROXIMATE stop
+    rules (static knobs — one compiled program per setting, zero traces
+    per query): stop_eps relaxes the PQ termination to "stop once no
+    unrefined lower bound can beat bsf/(1+eps)" (compared in squared
+    space as lb >= bsf^2/(1+eps)^2), and stop_leaves hard-caps the
+    visited leaves by tightening the PQ leaf budget.  At the defaults
+    (0.0, None) the traced program is LITERALLY the exact one — the
+    guards below emit the unscaled expressions — so exact mode stays
+    bit-identical to the seed oracle.
     """
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, "
                          f"got {backend!r}")
+    inv_eps, leaf_budget = _stop_knobs(stop_eps, stop_leaves, pq_budget)
     L = idx.series.shape[1]
     Q = queries.shape[0]
     K = round_leaves
@@ -251,22 +290,27 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
 
     lb = leaf_lower_bounds(idx, q_paa, L, backend)     # (Q, n_leaves)
 
-    n_rounds_cap = _rounds_cap(n_leaves, K, max_rounds, pq_budget)
-    order, sorted_lb = _pq_order(lb, K, n_rounds_cap, pq_budget)
+    n_rounds_cap = _rounds_cap(n_leaves, K, max_rounds, leaf_budget)
+    order, sorted_lb = _pq_order(lb, K, n_rounds_cap, leaf_budget)
 
     def cond(state):
         cursor, bsf_d, _ = state
         # PQ termination: stop when the best unrefined lb >= the k-th BSF
+        # (scaled by 1/(1+eps)^2 in approx mode: no remaining candidate
+        # can improve the k-th answer by more than the (1+eps) factor)
         nxt = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
-        live = jnp.any(nxt[:, 0] < bsf_d[:, -1])
+        bound = bsf_d[:, -1] * inv_eps if stop_eps else bsf_d[:, -1]
+        live = jnp.any(nxt[:, 0] < bound)
         return jnp.logical_and(cursor < n_rounds_cap * K, live)
 
     def body(state):
         cursor, bsf_d, bsf_e = state
         ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
         lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
-        # prune: leaves whose lb >= the current k-th BSF contribute nothing
-        alive = (lbs < bsf_d[:, -1:])                    # (Q, K)
+        # prune: leaves whose lb >= the current k-th BSF contribute
+        # nothing (approx mode shares the eps-scaled bound with cond)
+        bound = (bsf_d[:, -1:] * inv_eps if stop_eps else bsf_d[:, -1:])
+        alive = (lbs < bound)                            # (Q, K)
         bsf_d, bsf_e = _refine_round(q, q_sq, idx.series, idx.sq_norms,
                                      ids, alive, bsf_d, bsf_e,
                                      M=M, k=k, backend=backend)
@@ -292,7 +336,8 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
 
 search_plan = functools.partial(
     jax.jit, static_argnames=("k", "round_leaves", "znorm", "max_rounds",
-                              "backend", "pq_budget"))(search_plan_impl)
+                              "backend", "pq_budget", "stop_eps",
+                              "stop_leaves"))(search_plan_impl)
 search_plan.__doc__ = search_plan_impl.__doc__
 
 
@@ -359,7 +404,9 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
                          round_leaves: int = 8, znorm: bool = True,
                          max_rounds: Optional[int] = None,
                          backend: str = "ref",
-                         pq_budget: Optional[int] = None
+                         pq_budget: Optional[int] = None,
+                         stop_eps: float = 0.0,
+                         stop_leaves: Optional[int] = None
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Search plan over a (core index, delta buffer) epoch snapshot.
 
@@ -376,10 +423,16 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
     `maintenance.mask_core` view whose dead norms are the BIG sentinel);
     dead DELTA rows are masked here via `delta_alive` (an (m,) bool
     mask, None = all alive).
+
+    `stop_eps` / `stop_leaves` apply to the CORE plan only (see
+    `search_plan_impl`): the delta scan stays exact — it is one matmul
+    over the (small) pending buffer, so skipping any of it would trade
+    recall for nothing.
     """
     d, i, rounds = search_plan_impl(
         idx, queries, k=k, round_leaves=round_leaves, znorm=znorm,
-        max_rounds=max_rounds, backend=backend, pq_budget=pq_budget)
+        max_rounds=max_rounds, backend=backend, pq_budget=pq_budget,
+        stop_eps=stop_eps, stop_leaves=stop_leaves)
     kd = min(k, delta.shape[0])
     dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm,
                               alive=delta_alive)
@@ -390,8 +443,8 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
 
 snapshot_search = functools.partial(
     jax.jit, static_argnames=("k", "n_base", "round_leaves", "znorm",
-                              "max_rounds", "backend",
-                              "pq_budget"))(snapshot_search_impl)
+                              "max_rounds", "backend", "pq_budget",
+                              "stop_eps", "stop_leaves"))(snapshot_search_impl)
 snapshot_search.__doc__ = snapshot_search_impl.__doc__
 
 
@@ -425,19 +478,22 @@ def run_search(idx: FlatIndex, queries: jnp.ndarray, *,
                znorm: bool = True, max_rounds: Optional[int] = None,
                backend: Optional[str] = None,
                pq_budget: Optional[int] = None,
+               stop_eps: float = 0.0, stop_leaves: Optional[int] = None,
                config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Knob resolution + dispatch over the jitted `search_plan` — the
     facade's entry point (no deprecation warning; `search` is the warning
     shim around this).  backend / round_leaves / pq_budget default to None
     and resolve from `config` (an IndexConfig — what FreshIndex.search
-    passes), falling back to 'ref' / 8 / uncapped.  Returns (Q,) arrays
-    for k == 1, (Q, k) ascending otherwise."""
+    passes), falling back to 'ref' / 8 / uncapped; stop_eps / stop_leaves
+    are the repro.quality approximate stop rules (defaults = exact).
+    Returns (Q,) arrays for k == 1, (Q, k) ascending otherwise."""
     K = _resolve_knob(round_leaves, config, "round_leaves", 8)
     bk = _resolve_backend(backend, config)
     pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
     d, i, _ = search_plan(idx, queries, k=k, round_leaves=K, znorm=znorm,
                           max_rounds=max_rounds, backend=bk,
-                          pq_budget=pq_budget)
+                          pq_budget=pq_budget, stop_eps=stop_eps,
+                          stop_leaves=stop_leaves)
     return squeeze_k(d, i, k)
 
 
@@ -514,7 +570,9 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
                        sync_every: int = 1,
                        max_rounds: Optional[int] = None, znorm: bool = True,
                        backend: Optional[str] = None,
-                       pq_budget: Optional[int] = None, config=None):
+                       pq_budget: Optional[int] = None,
+                       stop_eps: float = 0.0,
+                       stop_leaves: Optional[int] = None, config=None):
     """The PURE sharded search plan factory: `(idx, queries) -> (dist,
     ids, rounds)` with (Q, k) outputs and no squeeze — the sharded
     analogue of `search_plan_impl`.
@@ -540,10 +598,19 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
     backend / round_leaves / pq_budget resolve from `config` (IndexConfig)
     when unset, like the local search().  backend='pallas' routes each
     device's refine closure through the fused kernels.refine_topk.
+
+    `stop_eps` / `stop_leaves` are the repro.quality approximate stop
+    rules, lowered into the collective while_loop cond exactly like the
+    local plan (see `search_plan_impl`; defaults = the bit-identical
+    exact program).  `stop_leaves` caps visited leaves PER SHARD — the
+    natural sharded reading of the budget, since every device refines
+    its own PQ — so a mesh of D devices visits at most D * stop_leaves
+    leaves in total.
     """
     K = _resolve_knob(round_leaves, config, "round_leaves", 8)
     bk = _resolve_backend(backend, config)
     pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
+    inv_eps, leaf_budget = _stop_knobs(stop_eps, stop_leaves, pq_budget)
 
     def _local_search(series, sq_norms, perm, leaf_lo, leaf_hi, q, q_paa, q_sq):
         L = series.shape[1]
@@ -558,19 +625,22 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
             lb = isax.mindist_region_sq(q_paa[:, None, :], leaf_lo[None],
                                         leaf_hi[None], L)
 
-        cap = _rounds_cap(n_leaves_local, K, max_rounds, pq_budget)
-        order, sorted_lb = _pq_order(lb, K, cap, pq_budget)
+        cap = _rounds_cap(n_leaves_local, K, max_rounds, leaf_budget)
+        order, sorted_lb = _pq_order(lb, K, cap, leaf_budget)
 
         # Two accumulators per query:
         #   bsf_d/bsf_e — the LOCAL top-k buffer (never overwritten by
         #          syncs: it is the winner-resolution payload);
         #   pb   — the pruning bound: last PUBLISHED global k-th min
         #          (standard-mode sync).  Pruning/termination use
-        #          min(pb, local k-th).
+        #          min(pb, local k-th), eps-scaled in approx mode like
+        #          the local plan's cond.
         def refine(cursor, bsf_d, bsf_e, pb):
             ids = jax.lax.dynamic_slice_in_dim(order, cursor, K, axis=1)
             lbs = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
             bound = jnp.minimum(pb, bsf_d[:, -1])
+            if stop_eps:
+                bound = bound * inv_eps
             alive = lbs < bound[:, None]
             return _refine_round(q, q_sq, series, sq_norms, ids, alive,
                                  bsf_d, bsf_e, M=M, k=k, backend=bk)
@@ -579,6 +649,8 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
             cursor, bsf_d, _, pb, rounds = state
             nxt = jax.lax.dynamic_slice_in_dim(sorted_lb, cursor, K, axis=1)
             bound = jnp.minimum(pb, bsf_d[:, -1])
+            if stop_eps:
+                bound = bound * inv_eps
             live_local = jnp.any(nxt[:, 0] < bound)
             live = jax.lax.pmax(live_local.astype(jnp.int32), axis)
             return jnp.logical_and(cursor < cap * K, live > 0)
@@ -640,7 +712,9 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
                          sync_every: int = 1,
                          max_rounds: Optional[int] = None, znorm: bool = True,
                          backend: Optional[str] = None,
-                         pq_budget: Optional[int] = None, config=None):
+                         pq_budget: Optional[int] = None,
+                         stop_eps: float = 0.0,
+                         stop_leaves: Optional[int] = None, config=None):
     """Builds a jitted sharded k-NN `search(idx, queries)` for the mesh.
 
     The facade spelling over `build_sharded_plan`: the pure plan is traced
@@ -652,7 +726,8 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
     plan = jax.jit(build_sharded_plan(
         mesh, axis=axis, k=k, round_leaves=round_leaves,
         sync_every=sync_every, max_rounds=max_rounds, znorm=znorm,
-        backend=backend, pq_budget=pq_budget, config=config))
+        backend=backend, pq_budget=pq_budget, stop_eps=stop_eps,
+        stop_leaves=stop_leaves, config=config))
 
     def sharded_search(idx: FlatIndex, queries: jnp.ndarray):
         d, i, _ = plan(idx, queries)

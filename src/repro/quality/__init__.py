@@ -1,0 +1,30 @@
+"""repro.quality: recall-tiered approximate search.
+
+Three pieces (see ISSUE 9 / docs/SERVING.md "Latency tiers & recall"):
+
+* `stop_rules.StopRule` — early-termination predicates (BSF-convergence
+  `eps` + `max_leaves` cap) that lower to static plan knobs on the core
+  search plans.
+* `calibrate.calibrate` — offline sweep against the tombstone-masked
+  brute-force oracle, fitting the cheapest rule whose MEASURED recall@k
+  meets each target and persisting a `CalibrationTable` with the
+  checkpoint.
+* the serving surface — `FreshIndex.search(mode="approx",
+  recall_target=...)` and `EngineConfig.latency_tiers` resolve rules
+  from the table per call / per priority class.
+
+Concurrency: everything here is offline/host-side and touches indexes
+only through their public snapshot-style accessors; the lock-free plans
+themselves live in `repro.core.search`.
+"""
+
+from .calibrate import (CalibrationEntry, CalibrationTable, calibrate,
+                        holdout_queries, index_fingerprint, oracle_topk,
+                        pq_leaf_candidates, recall_at_k)
+from .stop_rules import EXACT, StopRule
+
+__all__ = [
+    "CalibrationEntry", "CalibrationTable", "EXACT", "StopRule",
+    "calibrate", "holdout_queries", "index_fingerprint", "oracle_topk",
+    "pq_leaf_candidates", "recall_at_k",
+]

@@ -26,12 +26,19 @@ bounds admission (AdmissionError, batch priority shed first),
 `result(timeout=...)` raises ResultTimeout while leaving the future
 completable — see docs/SERVING.md "Overload & degradation".
 
-Lifecycle: `engine.delete(ids)` / `engine.add(batch, ttl_s=...)` ride
-the same epoch machinery as adds (a delete publishes a snapshot, so
-the epoch-keyed result cache invalidates for free), and
-`EngineConfig.maintenance` (a `repro.maintenance.MaintenancePolicy`)
-schedules TTL sweeps / compactions / checkpoints as journal-registered
-background work — see docs/SERVING.md "Maintenance & freshness tiers".
+Lifecycle: `engine.delete(ids)` / `engine.add(batch, ttl_s=...)` /
+`engine.update(sid, series)` ride the same epoch machinery as adds (a
+delete or update publishes a snapshot, so the epoch-keyed result cache
+invalidates for free), and `EngineConfig.maintenance` (a
+`repro.maintenance.MaintenancePolicy`) schedules TTL sweeps /
+compactions / checkpoints as journal-registered background work — see
+docs/SERVING.md "Maintenance & freshness tiers".
+
+Quality tiers: `EngineConfig.latency_tiers` maps a submit priority
+class to "exact" or a recall target; approx-tier submits serve through
+calibrated early-terminating plans (`repro.quality`), keyed apart from
+exact everywhere via `plan_cache.plan_key` — see docs/SERVING.md
+"Latency tiers & recall".
 """
 
 from .batcher import (Batch, MicroBatcher, Pending, bucket_for,
@@ -39,7 +46,7 @@ from .batcher import (Batch, MicroBatcher, Pending, bucket_for,
 from .engine import (AdmissionError, DeadlineExceeded, EngineConfig,
                      QueryEngine, ResultTimeout, SearchFuture, Snapshot)
 from .plan_cache import (CompiledPlan, Knobs, PlanCache,
-                         ShardedCompiledPlan)
+                         ShardedCompiledPlan, plan_key)
 from .result_cache import ResultCache, query_fingerprint
 
 __all__ = [
@@ -48,5 +55,5 @@ __all__ = [
     "AdmissionError", "DeadlineExceeded", "EngineConfig", "QueryEngine",
     "ResultTimeout", "SearchFuture", "Snapshot",
     "CompiledPlan", "Knobs", "PlanCache", "ShardedCompiledPlan",
-    "ResultCache", "query_fingerprint",
+    "plan_key", "ResultCache", "query_fingerprint",
 ]

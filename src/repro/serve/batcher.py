@@ -2,10 +2,11 @@
 
 XLA executables are shape-monomorphic, so a serving layer that dispatched
 every submit() at its natural (Q, k) would compile an unbounded family of
-programs.  Instead, pending queries are grouped by (epoch, k) — a batch
-can only run against ONE snapshot and one top-k width — concatenated in
-arrival order, chunked at `max_batch`, and each chunk is padded up to the
-smallest power-of-two bucket that holds it.  The PlanCache then only ever
+programs.  Instead, pending queries are grouped by (epoch, k, knobs) — a
+batch can only run against ONE snapshot, one top-k width and one compiled
+plan (so an approx quality tier never shares a batch with the exact tier)
+— concatenated in arrival order, chunked at `max_batch`, and each chunk
+is padded up to the smallest power-of-two bucket that holds it.  The PlanCache then only ever
 sees the fixed bucket set {1, 2, 4, ..., max_batch}, one executable each.
 
 Padding replicates the chunk's last real query row: real data z-normalizes
@@ -71,6 +72,9 @@ class Pending:
     deadline: Optional[float] = None    # absolute monotonic, None = never
     row0: int = 0                       # first future row of this slice
     priority: str = "interactive"       # admission class; batch sheds first
+    knobs: object = None                # resolved plan Knobs (None = engine
+                                        # default/exact tier)
+    tier: str = "exact"                 # quality tier label for stats
 
 
 def earliest_deadline(pending: Sequence[Pending]) -> Optional[float]:
@@ -98,6 +102,8 @@ class Batch:
     segments: List[Tuple[object, int, int, int]]
     formed_at: float
     part_id: int = -1
+    knobs: object = None                # the group's resolved plan Knobs
+    tier: str = "exact"                 # quality tier label for stats
 
     @property
     def padded_slots(self) -> int:
@@ -131,12 +137,16 @@ class MicroBatcher:
             now = time.monotonic()
         pending = [p for p in pending
                    if p.deadline is None or p.deadline > now]
-        groups: Dict[Tuple[int, int], List[Pending]] = {}
+        # knobs joins the group key: a batch runs ONE compiled plan, so
+        # exact and approx-tier pendings may never share a batch even at
+        # the same (epoch, k) — aliasing them would serve one tier's
+        # queries with the other tier's program
+        groups: Dict[Tuple, List[Pending]] = {}
         for p in pending:
-            groups.setdefault((p.epoch, p.k), []).append(p)
+            groups.setdefault((p.epoch, p.k, p.knobs, p.tier), []).append(p)
 
         batches: List[Batch] = []
-        for (epoch, k), items in groups.items():
+        for (epoch, k, knobs, tier), items in groups.items():
             rows: List[np.ndarray] = []
             segments: List[Tuple[object, int, int, int]] = []
             n = 0
@@ -150,7 +160,8 @@ class MicroBatcher:
                     rows.append(np.repeat(rows[-1][-1:], bucket - n, axis=0))
                 batches.append(Batch(
                     queries=np.concatenate(rows, axis=0), k=k, epoch=epoch,
-                    n_real=n, segments=segments, formed_at=now))
+                    n_real=n, segments=segments, formed_at=now,
+                    knobs=knobs, tier=tier))
                 rows, segments, n = [], [], 0
 
             for p in items:

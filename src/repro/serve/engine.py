@@ -62,7 +62,7 @@ from repro.runtime.sharding import mesh_sig
 
 from .batcher import (Batch, MicroBatcher, Pending, earliest_deadline,
                       shape_buckets)
-from .plan_cache import Knobs, PlanCache
+from .plan_cache import Knobs, PlanCache, plan_key
 from .result_cache import ResultCache, query_fingerprint
 
 _BACKENDS = (None, "ref", "pallas")
@@ -164,9 +164,21 @@ class EngineConfig:
                     submit's own deadline_ms when that is sooner)
     cache_entries   capacity (in rows) of the epoch-keyed result cache
                     consulted before batching; 0 (default) disables it.
-                    Entries are keyed by (query-hash, epoch, k, knobs),
-                    so every add()/compact()/recover() invalidates for
-                    free by advancing the epoch
+                    Entries are keyed by (query-hash, epoch) +
+                    plan_key(k, knobs) — every search-semantics knob,
+                    including the quality tier's stop rule — so every
+                    add()/compact()/recover() invalidates for free by
+                    advancing the epoch and exact/approx results never
+                    alias
+    latency_tiers   optional {priority_class: tier} quality mapping:
+                    "exact" (certified k-NN, the default for classes
+                    absent from the mapping) or a float recall target in
+                    (0, 1] — that class's submits then serve through the
+                    approx plan whose stop rule the index's
+                    CalibrationTable fitted for (k, target) (run
+                    index.calibrate() first; an uncalibrated target
+                    raises at submit time).  Per-tier counters appear in
+                    stats()["quality"]
     round_leaves / pq_budget / max_rounds / backend
                     per-engine search-knob overrides; None defers to the
                     index's IndexConfig (max_rounds: exact search)
@@ -187,6 +199,7 @@ class EngineConfig:
     overflow_policy: str = "shed"
     overflow_deadline_ms: float = 50.0
     cache_entries: int = 0
+    latency_tiers: Optional[dict] = None
     round_leaves: Optional[int] = None
     pq_budget: Optional[int] = None
     max_rounds: Optional[int] = None
@@ -214,6 +227,18 @@ class EngineConfig:
             raise ValueError("overflow_deadline_ms must be > 0")
         if self.cache_entries < 0:
             raise ValueError("cache_entries must be >= 0")
+        if self.latency_tiers is not None:
+            for cls, tier in self.latency_tiers.items():
+                if cls not in _PRIORITIES:
+                    raise ValueError(
+                        f"latency_tiers keys must be in {_PRIORITIES}, "
+                        f"got {cls!r}")
+                if tier != "exact" and not (
+                        isinstance(tier, (int, float))
+                        and 0.0 < float(tier) <= 1.0):
+                    raise ValueError(
+                        f"latency_tiers[{cls!r}] must be 'exact' or a "
+                        f"recall target in (0, 1], got {tier!r}")
         if self.auto_compact_rows is not None and self.auto_compact_rows < 1:
             raise ValueError("auto_compact_rows must be >= 1 or None")
         if self.maintenance is not None:
@@ -264,6 +289,10 @@ class Snapshot:
     mesh: object = None                # jax Mesh when sharded
     mesh_axis: str = "data"
     delta_alive: Optional[jnp.ndarray] = None   # (m,) bool tombstone mask
+    # internal-id -> stable-id renames (FreshIndex.update), frozen at
+    # capture: a batch answering on this snapshot remaps with the alias
+    # view its submit epoch saw, never a later writer's
+    id_alias: tuple = ()
 
     @property
     def plan_sig(self) -> tuple:
@@ -456,6 +485,13 @@ class QueryEngine:
         self._recoveries = 0
         self._shed = 0                      # submits refused admission
         self._shed_rows = 0
+        # ---- quality tiers (repro.quality): per-tier serving counters.
+        # Keys are tier labels ("exact" / "approx@0.95"); mutated only
+        # under _cv.  `_tier_recall` records the advertised (calibrated)
+        # recall per approx tier at resolution time.
+        self._tiers = dict(cfg.latency_tiers or {})
+        self._tier_stats: dict = {}
+        self._tier_recall: dict = {}
         self._evicted_batch = 0             # queued batch submits evicted
         self._overflow_queued = 0           # admitted-with-deadline submits
         self._deadline_expired = 0          # futures expired in the queue
@@ -495,7 +531,9 @@ class QueryEngine:
                         n_base=id0, n_total=ix.n_series,
                         series_len=ix.series_len,
                         mesh=ix.mesh, mesh_axis=ix.mesh_axis,
-                        delta_alive=alive)
+                        delta_alive=alive,
+                        id_alias=tuple(sorted(
+                            getattr(ix, "_alias", {}).items())))
 
     def _publish(self) -> None:
         """Capture OUTSIDE _cv (capturing may materialize the pending
@@ -548,6 +586,37 @@ class QueryEngine:
                 self._publish()
                 return self
             self._compact_locked()
+        return self
+
+    def update(self, sid: int, series, *,
+               ttl_s: Optional[float] = None) -> "QueryEngine":
+        """Replace series `sid` in place under its stable id
+        (FreshIndex.update) and publish the retire+introduce pair as ONE
+        epoch — the atomicity the facade cannot give: a concurrent
+        reader either answers on the pre-update snapshot (old values,
+        one live row for `sid`) or the post-update snapshot (new values,
+        one live row), never a world with zero or two live rows for the
+        id.  Returns self.
+
+        Args:
+            sid: stable id of a currently-live series.
+            series: the new (L,) values.
+            ttl_s: optional time-to-live for the new values.
+        Raises:
+            ValueError: `sid` not live / wrong series shape
+                (FreshIndex.update).
+
+        Concurrency: a writer on the writer lock, like add(); the single
+        _publish() after both mutations is what makes the pair atomic
+        for readers.
+        """
+        sync_point("engine.update")
+        with self._wlock:
+            self._index.update(sid, series, ttl_s=ttl_s)
+            before = self._epoch
+            self._publish()
+            assert self._epoch > before, \
+                "update() must advance the snapshot epoch"
         return self
 
     def delete(self, ids) -> int:
@@ -716,6 +785,43 @@ class QueryEngine:
     # ------------------------------------------------------------------ #
     # query path
     # ------------------------------------------------------------------ #
+    def _tier_for(self, priority: str, k: int):
+        """(knobs, tier_label) the `priority` class serves `k` with:
+        the engine's exact Knobs by default, or — when
+        `EngineConfig.latency_tiers` maps the class to a recall target —
+        a twin Knobs carrying the calibrated stop rule for (k, target).
+
+        Raises ValueError (via FreshIndex.resolve_stop_rule) when the
+        target has no calibration entry: an uncalibrated approx tier
+        must fail the submit loudly, not silently serve exact.
+
+        Concurrency: reads calibration state without engine locks (the
+        table is replaced wholesale by calibrate(), never mutated);
+        `_tier_recall` writes race benignly (same value)."""
+        spec = self._tiers.get(priority)
+        if spec is None or spec == "exact":
+            return self._knobs, "exact"
+        target = float(spec)
+        rule = self._index.resolve_stop_rule("approx", k=k,
+                                             recall_target=target)
+        label = f"approx@{target:g}"
+        entry = self._index.calibration.lookup(k, target)
+        if entry is not None:
+            self._tier_recall[label] = entry.recall
+        return (dataclasses.replace(self._knobs, stop_eps=float(rule.eps),
+                                    stop_leaves=rule.max_leaves), label)
+
+    def _tier_note(self, tier: str) -> dict:
+        """The per-tier counter dict for `tier` (created on first use).
+        Concurrency: callers hold _cv."""
+        st = self._tier_stats.get(tier)
+        if st is None:
+            st = {"queries": 0, "batches": 0, "early_stops": 0,
+                  "visited_leaves": 0.0, "visited_n": 0,
+                  "latencies": deque(maxlen=self.config.latency_window)}
+            self._tier_stats[tier] = st
+        return st
+
     def submit(self, queries, k: int = 1, *,
                priority: str = "interactive",
                deadline_ms: Optional[float] = None) -> SearchFuture:
@@ -756,6 +862,10 @@ class QueryEngine:
         fps = None
         if self._cache is not None and q.ndim == 2 and q.shape[0] >= 1:
             fps = [query_fingerprint(row) for row in q]
+        # quality-tier resolution runs BEFORE the lock (a table lookup +
+        # one frozen-dataclass clone); an uncalibrated tier raises here,
+        # before anything is enqueued
+        knobs, tier = self._tier_for(priority, k)
         sync_point("engine.submit")
         shed_exc: Optional[Exception] = None
         with self._cv:
@@ -781,15 +891,18 @@ class QueryEngine:
             if fps is not None:
                 missed = []
                 for r, fp in enumerate(fps):
-                    ent = self._cache.get((fp, self._epoch, k,
-                                           self._knobs))
+                    ent = self._cache.get(
+                        (fp, self._epoch) + plan_key(k, knobs))
                     if ent is None:
                         missed.append(r)
                         continue
                     observe("engine.cache.hit",
                             (fut, self._epoch, k, q[r], ent[0], ent[1]))
+                    self._tier_note(tier)["queries"] += 1
                     if fut._fill(r, ent[0][None], ent[1][None], now):
                         self._latencies.append(now - fut.submitted_at)
+                        self._tier_note(tier)["latencies"].append(
+                            now - fut.submitted_at)
                         self._completed += 1
             if not missed:
                 return fut
@@ -802,7 +915,8 @@ class QueryEngine:
                 for r0, r1 in _runs(missed):
                     self._pending.append(Pending(
                         q[r0:r1], k, self._epoch, fut, now,
-                        deadline=deadline, row0=r0, priority=priority))
+                        deadline=deadline, row0=r0, priority=priority,
+                        knobs=knobs, tier=tier))
                 self._cv.notify_all()
             else:
                 self._shed += 1
@@ -918,8 +1032,18 @@ class QueryEngine:
         for k in ks:
             if k > snap.n_total:
                 continue
+            # one plan per distinct tier Knobs: the exact tier plus any
+            # calibrated approx tiers (an uncalibrated (k, target) pair
+            # is skipped — submit will raise for it anyway)
+            knob_set = {self._knobs}
+            for priority in self._tiers:
+                try:
+                    knob_set.add(self._tier_for(priority, k)[0])
+                except ValueError:
+                    continue
             for b in buckets:
-                self.plans.get(snap, b, k, self._knobs)
+                for kn in knob_set:
+                    self.plans.get(snap, b, k, kn)
         return self
 
     # ------------------------------------------------------------------ #
@@ -1126,12 +1250,30 @@ class QueryEngine:
         sync_point("engine.execute.run", pid)
         if self._crash_hook is not None:
             self._crash_hook(worker, batch)      # may raise WorkerCrash
+        knobs = batch.knobs if batch.knobs is not None else self._knobs
         plan = self.plans.get(snap, batch.queries.shape[0], batch.k,
-                              self._knobs)
+                              knobs)
         d, i, rounds = plan.run(snap, jnp.asarray(batch.queries))
         d = np.asarray(d)
         i = np.asarray(i)
         rounds = int(rounds)
+        if snap.id_alias:
+            # rows renamed by update() answer under their stable public
+            # id; the remap uses the alias view frozen at this batch's
+            # submit epoch
+            i = i.copy()
+            for internal, stable in snap.id_alias:
+                i[i == internal] = stable
+        # visited-leaf accounting for the quality tier counters: the
+        # round loop refines round_leaves per round, capped by the PQ
+        # budget and the tier's stop_leaves
+        budget = exact_budget = int(snap.core.n_leaves)
+        if knobs.pq_budget is not None:
+            budget = exact_budget = min(budget, knobs.pq_budget)
+        if knobs.stop_leaves is not None:
+            budget = min(budget, knobs.stop_leaves)
+        visited = min(rounds * knobs.round_leaves, budget)
+        early_stop = batch.tier != "exact" and visited < exact_budget
         # fingerprint the real query rows OUTSIDE the locks — hashing is
         # the only non-O(1) part of the cache fill below
         fps = None
@@ -1147,11 +1289,18 @@ class QueryEngine:
             self._dispatched += 1
             self._rounds_sum += rounds * batch.n_real
             self._rounds_n += batch.n_real
+            tstats = self._tier_note(batch.tier)
+            tstats["queries"] += batch.n_real
+            tstats["batches"] += 1
+            tstats["visited_leaves"] += visited * batch.n_real
+            tstats["visited_n"] += batch.n_real
+            if early_stop:
+                tstats["early_stops"] += batch.n_real
             for fut, dst, src, n in batch.segments:
                 if fps is not None:
                     for j in range(n):
-                        key = (fps[dst + j], batch.epoch, batch.k,
-                               self._knobs)
+                        key = ((fps[dst + j], batch.epoch)
+                               + plan_key(batch.k, knobs))
                         self._cache.put(key, d[dst + j], i[dst + j])
                         observe("engine.cache.fill",
                                 (key, batch.epoch, batch.k,
@@ -1159,6 +1308,7 @@ class QueryEngine:
                                  d[dst + j], i[dst + j]))
                 if fut._fill(src, d[dst:dst + n], i[dst:dst + n], now):
                     self._latencies.append(now - fut.submitted_at)
+                    tstats["latencies"].append(now - fut.submitted_at)
                     self._completed += 1
             del self._batches[pid]
             # release the done prefix so journal scans and memory stay
@@ -1280,6 +1430,12 @@ class QueryEngine:
         Concurrency: takes the condition variable briefly for one
         consistent cut; safe from any thread at any rate.
         """
+        # freshness first, OUTSIDE _cv: the first check per lifecycle
+        # version hashes index arrays (a blocking device->host pull that
+        # must not run under the condition variable)
+        calibrated = getattr(self._index, "calibration", None) is not None
+        calib_fresh = (self._index.is_calibration_fresh()
+                       if calibrated else False)
         with self._cv:
             lat = sorted(self._latencies)
             inflight = len(self._batches)
@@ -1328,6 +1484,29 @@ class QueryEngine:
                     "evicted_batch": self._evicted_batch,
                     "overflow_queued": self._overflow_queued,
                     "deadline_expired": self._deadline_expired,
+                },
+                "quality": {
+                    "tiers": {
+                        tier: {
+                            "queries": st["queries"],
+                            "batches": st["batches"],
+                            "early_stops": st["early_stops"],
+                            "visited_leaves_per_query": (
+                                st["visited_leaves"] / st["visited_n"]
+                                if st["visited_n"] else 0.0),
+                            "advertised_recall": self._tier_recall.get(
+                                tier),
+                            "latency_ms": {
+                                "n": len(st["latencies"]),
+                                "p50": _pctl(sorted(st["latencies"]),
+                                             0.50) * 1e3,
+                                "p99": _pctl(sorted(st["latencies"]),
+                                             0.99) * 1e3,
+                            },
+                        } for tier, st in self._tier_stats.items()},
+                    "latency_tiers": dict(self._tiers),
+                    "calibrated": calibrated,
+                    "calibration_fresh": calib_fresh,
                 },
                 "result_cache": (self._cache.stats() if self._cache
                                  is not None else

@@ -53,22 +53,41 @@ from repro.core.search import (build_sharded_plan, merge_delta_topk,
 from repro.runtime.sharding import mesh_sig
 
 _PLAN_STATICS = ("k", "round_leaves", "znorm", "max_rounds", "backend",
-                 "pq_budget")
+                 "pq_budget", "stop_eps", "stop_leaves")
 _SNAP_STATICS = _PLAN_STATICS + ("n_base",)
 
 
 @dataclasses.dataclass(frozen=True)
 class Knobs:
-    """The fully-resolved search knobs one engine serves with (resolved
-    once at engine construction from EngineConfig -> IndexConfig).
+    """The fully-resolved search knobs one batch serves with (the exact
+    tier's Knobs are resolved once at engine construction from
+    EngineConfig -> IndexConfig; approx tiers get a twin with the
+    stop-rule fields filled in from the calibration table).
     `sync_every` only affects sharded plans (the expeditive/standard
-    all-reduce cadence); local plans ignore it."""
+    all-reduce cadence); local plans ignore it.  `stop_eps` /
+    `stop_leaves` are the approximate-search early-termination knobs
+    (repro.quality.StopRule.lower()); their defaults compile the exact
+    program."""
     round_leaves: int = 8
     znorm: bool = True
     max_rounds: Optional[int] = None
     backend: str = "ref"
     pq_budget: Optional[int] = None
     sync_every: int = 1
+    stop_eps: float = 0.0
+    stop_leaves: Optional[int] = None
+
+
+def plan_key(k: int, knobs: Knobs) -> tuple:
+    """EVERY search-semantics knob of a (k, knobs) request as one flat
+    tuple — the single key-derivation helper both caches build on.
+    `ResultCache` keys are `(fingerprint, epoch) + plan_key(...)` and
+    `PlanCache` keys are `(bucket_q, snapshot_sig) + plan_key(...)`, so
+    a knob added to `Knobs` (say a new stop rule field) automatically
+    keys BOTH caches — exact and approx results/plans can never alias,
+    and no call site can forget a field (tests assert the key length
+    tracks `dataclasses.fields(Knobs)`)."""
+    return (int(k),) + dataclasses.astuple(knobs)
 
 
 class CompiledPlan:
@@ -175,7 +194,7 @@ class PlanCache:
     def get(self, snapshot, bucket_q: int, k: int,
             knobs: Knobs) -> CompiledPlan:
         """The compiled executable for this bucket, compiling on miss."""
-        key = (bucket_q, k, knobs, snapshot.plan_sig)
+        key = (bucket_q, snapshot.plan_sig) + plan_key(k, knobs)
         with self._lock:
             plan = self._plans.get(key)
             if plan is not None:
@@ -196,7 +215,8 @@ class PlanCache:
         cached in `_plans` like local ones.  Sharded plans never donate —
         the query buffer is replicated over the mesh and a journal helper
         must be able to re-execute a batch from its host copy."""
-        key = (mesh_sig(snapshot.mesh), snapshot.mesh_axis, k, knobs)
+        key = (mesh_sig(snapshot.mesh),
+               snapshot.mesh_axis) + plan_key(k, knobs)
         with self._lock:
             # under the cache lock (jit-object creation is cheap — no
             # trace happens until .lower) so racing bucket compiles for
@@ -210,7 +230,9 @@ class PlanCache:
                     sync_every=knobs.sync_every,
                     max_rounds=knobs.max_rounds,
                     znorm=knobs.znorm, backend=knobs.backend,
-                    pq_budget=knobs.pq_budget))
+                    pq_budget=knobs.pq_budget,
+                    stop_eps=knobs.stop_eps,
+                    stop_leaves=knobs.stop_leaves))
                 self._sharded_jits[key] = fn
             return fn
 
@@ -246,7 +268,8 @@ class PlanCache:
                                        bucket_q, k)
         kw = dict(k=k, round_leaves=knobs.round_leaves, znorm=knobs.znorm,
                   max_rounds=knobs.max_rounds, backend=knobs.backend,
-                  pq_budget=knobs.pq_budget)
+                  pq_budget=knobs.pq_budget, stop_eps=knobs.stop_eps,
+                  stop_leaves=knobs.stop_leaves)
         has_delta = snapshot.delta is not None
         if has_alive:
             lowered = self._jitted(True).lower(

@@ -32,12 +32,13 @@ def _read(rel: str) -> str:
 # docs freshness
 # --------------------------------------------------------------------- #
 # a verbatim row citation: `fig3/...`, `fig5/...`, `serve/...`,
-# `build/...`, `maint/...` in backticks.  Shorthand families
-# (`build/pipeline/w{2,4}`, `fig3/query/*/ref`, `serve/...`) fall
-# outside the character class or the filter below and are not checked —
-# EXPERIMENTS.md must cite at least MIN_CITATIONS exact names so the
-# check cannot go vacuous.
-ROW_RE = re.compile(r"`((?:fig\d+|serve|build|maint)/[A-Za-z0-9_/.-]+)`")
+# `build/...`, `maint/...`, `quality/...` in backticks.  Shorthand
+# families (`build/pipeline/w{2,4}`, `fig3/query/*/ref`, `serve/...`)
+# fall outside the character class or the filter below and are not
+# checked — EXPERIMENTS.md must cite at least MIN_CITATIONS exact names
+# so the check cannot go vacuous.
+ROW_RE = re.compile(
+    r"`((?:fig\d+|serve|build|maint|quality)/[A-Za-z0-9_/.-]+)`")
 MIN_CITATIONS = 10
 
 
@@ -56,6 +57,10 @@ def test_experiments_cites_only_committed_bench_rows():
     assert not missing, (
         f"EXPERIMENTS.md cites rows absent from the committed "
         f"BENCH_fresh.json: {missing}")
+    quality = [c for c in cited if c.startswith("quality/")]
+    assert quality, (
+        "EXPERIMENTS.md §Approximate search must cite at least one "
+        "committed `quality/...` bench row verbatim")
 
 
 def test_docs_exist_and_linked_from_readme():
@@ -71,7 +76,8 @@ def test_docs_exist_and_linked_from_readme():
         assert mod in arch, f"ARCHITECTURE.md lost its map entry for {mod}"
     serving = _read("docs/SERVING.md")
     for knob in ("max_batch", "linger_ms", "workers", "donate",
-                 "auto_compact_rows", "sync_every", "help_after_ms"):
+                 "auto_compact_rows", "sync_every", "help_after_ms",
+                 "latency_tiers", "recall_target"):
         assert knob in serving, f"SERVING.md lost the {knob} knob"
 
 
