@@ -116,7 +116,8 @@ def row(name: str, seconds: float, derived: str = "", **extra) -> dict:
 def fmt_row(r: dict) -> str:
     """The historical `name,us_per_call,derived` CSV line."""
     derived = r.get("derived", "")
-    extras = [f"{k}={v:.1f}" if isinstance(v, float) else f"{k}={v}"
+    extras = [(f"{k}={v:.1f}" if abs(v) >= 0.1 else f"{k}={v:.3g}")
+              if isinstance(v, float) else f"{k}={v}"
               for k, v in r.items()
               if k not in ("name", "us_per_call", "derived")]
     tail = " ".join(x for x in [derived, *extras] if x)

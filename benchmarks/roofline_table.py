@@ -73,11 +73,11 @@ def refine_rows(Q: int = 128, K: int = 8, M: int = 64, L: int = 256,
     and (Q, L) query traffic.
     """
     from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
-    flops = 2.0 * Q * K * M * L
-    leaf = 4.0 * Q * K * M * L                    # the gathered member rows
-    small = 4.0 * Q * L + 12.0 * Q * k            # queries + BSF buffers
-    fused = leaf + small
-    mat = 3.0 * leaf + small                      # gather out + in + source
+    from repro.launch.roofline import refine_analytic
+    a = refine_analytic(Q, K, M, L, k)
+    flops = a["flops"]
+    fused = a["bytes_fused"]
+    mat = a["bytes_mat"]                          # gather out + in + source
     t_c = flops / PEAK_FLOPS_BF16
     rows = [("refine-round (Q=%d K=%d M=%d L=%d k=%d)" % (Q, K, M, L, k),
              "flops=%.1fM" % (flops / 1e6))]

@@ -46,6 +46,11 @@ def main() -> None:
                          "bench (quality/* rows: calibrated recall@k, "
                          "visited-leaf fraction, approx vs exact p99 on "
                          "one latency-tiered engine)")
+    ap.add_argument("--autotune-quick", action="store_true",
+                    help="also run the refine-kernel autotune sweep "
+                         "(kernels/* rows: bitwise-gated winner vs "
+                         "baseline, AutotuneTable write, and the "
+                         "asserted kernels/refine/roofline_frac row)")
     args = ap.parse_args()
 
     from . import fresh_bench
@@ -81,6 +86,11 @@ def main() -> None:
         if args.quick:
             quality_bench.set_quick()
         benches += quality_bench.ALL
+    if args.autotune_quick:
+        from . import kernels_bench
+        if args.quick:
+            kernels_bench.set_quick()
+        benches += kernels_bench.ALL
     for fn in benches:
         tag = fn.__name__.split("_")[0]
         if only and tag not in only:

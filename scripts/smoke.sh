@@ -13,23 +13,31 @@
 # tombstone-mask search overhead, compaction reclaim rate, TTL sweep
 # cost) AND the recall-tiered approximate-search leg (--quality-quick:
 # calibrated recall@k >= target, approx p99 < exact p99 on one
-# latency-tiered engine) at --quick scale, emitting the
-# machine-readable BENCH_fresh.json perf record with p50/p99 latency +
-# QPS rows.
+# latency-tiered engine) AND the refine-kernel autotune leg
+# (--autotune-quick: tiny bitwise-gated sweep on the live device,
+# AutotuneTable JSON write, and the asserted
+# kernels/refine/roofline_frac row, present and > 0) at --quick scale,
+# emitting the machine-readable BENCH_fresh.json perf record with
+# p50/p99 latency + QPS rows.
 #
 #   scripts/smoke.sh                  full smoke
 #   scripts/smoke.sh --sharded-serve  only the sharded serving leg:
 #                                     2-device example + serve/sharded/*
 #                                     row validation of the committed
 #                                     BENCH_fresh.json
+#   scripts/smoke.sh --autotune-quick only the autotune leg: tiny sweep
+#                                     to a scratch JSON + kernels/* row
+#                                     + table-write validation
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 SHARDED_ONLY=0
+AUTOTUNE_ONLY=0
 for a in "$@"; do
     case "$a" in
         --sharded-serve) SHARDED_ONLY=1 ;;
+        --autotune-quick) AUTOTUNE_ONLY=1 ;;
         *) echo "unknown flag: $a" >&2; exit 2 ;;
     esac
 done
@@ -60,9 +68,59 @@ print("serve/sharded/* rows OK "
 EOF
 }
 
+validate_autotune_rows() {
+    # $1: the bench JSON to check (defaults to the committed record).
+    # Asserts the kernels/* rows exist, the sweep's winner survived the
+    # bitwise exactness gate, the AutotuneTable JSON was written
+    # non-empty, and roofline_frac is present and strictly positive.
+    BENCH_JSON="${1:-BENCH_fresh.json}" python - <<'EOF'
+import json
+import os
+
+path = os.environ["BENCH_JSON"]
+rows = json.load(open(path))["rows"]
+by_name = {r["name"]: r for r in rows}
+for name in ("kernels/refine/autotune/baseline",
+             "kernels/refine/autotune/winner",
+             "kernels/refine/autotune/table",
+             "kernels/refine/roofline_frac"):
+    assert name in by_name, f"missing {name} row in {path}"
+win = by_name["kernels/refine/autotune/winner"]
+assert 1 <= win["n_exact"] <= win["n_candidates"], (
+    "no candidate survived the bitwise gate", win)
+assert win["speedup"] > 0, win
+table_path = by_name["kernels/refine/autotune/table"]["path"]
+assert os.path.exists(table_path), (
+    "autotune table JSON not written", table_path)
+table = json.load(open(table_path))
+assert table.get("entries"), ("autotune table written empty", table_path)
+assert table.get("fingerprint"), ("table missing fingerprint", table_path)
+frac = by_name["kernels/refine/roofline_frac"]["roofline_frac"]
+assert frac > 0, ("roofline_frac must be strictly positive", frac)
+print(f"kernels/* rows OK (winner speedup={win['speedup']}x, "
+      f"{win['n_exact']}/{win['n_candidates']} candidates bit-exact, "
+      f"roofline_frac={frac}, table={table_path} "
+      f"entries={len(table['entries'])})")
+EOF
+}
+
+run_autotune_quick() {
+    # tiny sweep on the live device to a scratch JSON (doesn't clobber
+    # the committed BENCH_fresh.json): exercises the bitwise gate, the
+    # AutotuneTable write and the roofline_frac row end to end
+    python -m benchmarks.run --only kernels --quick --autotune-quick \
+        --json /tmp/bench_autotune.json
+    validate_autotune_rows /tmp/bench_autotune.json
+}
+
 if [ "$SHARDED_ONLY" = 1 ]; then
     run_sharded_example
     validate_sharded_rows
+    exit 0
+fi
+
+if [ "$AUTOTUNE_ONLY" = 1 ]; then
+    run_autotune_quick
     exit 0
 fi
 
@@ -85,9 +143,9 @@ python -W error::DeprecationWarning -m pytest -q -x \
     tests/test_api.py tests/test_builder.py tests/test_index_search.py \
     tests/test_docs.py tests/test_system.py
 
-python -m benchmarks.run --only fig3,fig5,serve,build,maint,quality \
+python -m benchmarks.run --only fig3,fig5,serve,build,maint,quality,kernels \
     --quick --serve-quick --build-quick --maint-quick --quality-quick \
-    --json BENCH_fresh.json
+    --autotune-quick --json BENCH_fresh.json
 python - <<'EOF'
 import json
 rows = json.load(open("BENCH_fresh.json"))["rows"]
@@ -173,3 +231,4 @@ print(f"BENCH_fresh.json OK: {len(rows)} rows; fig3+fig5 both backends, "
       f"{by_name['maint/mask_overhead']['overhead_pct']}%")
 EOF
 validate_sharded_rows
+validate_autotune_rows BENCH_fresh.json

@@ -91,6 +91,8 @@ class StubConfig:
     znorm = False
     backend = "ref"
     pq_budget = None
+    dma_depth = None
+    block_q = None
 
 
 class _StubCore:
@@ -185,6 +187,14 @@ class StubIndex:
         """The installed stub calibration table (None = uncalibrated),
         mirroring FreshIndex.calibration for the engine's tier stats."""
         return self._calib
+
+    def search_knobs(self):
+        """FreshIndex.search_knobs' contract over the stub: no autotune
+        table is ever installed here, so the chain is just StubConfig
+        fields over the static defaults (the engine reads the resolved
+        TuneConfig when it builds its Knobs)."""
+        from repro.kernels.autotune import resolve_knobs
+        return resolve_knobs(self.config, None)
 
     def resolve_stop_rule(self, mode: str, *, k: int,
                           recall_target: float = 0.95,

@@ -128,10 +128,22 @@ class IndexConfig:
                    (Mosaic on TPU, interpret elsewhere; refinement runs
                    the fused allocation-free kernels.refine_topk) | 'ref'
                    (pure jnp, materializes the (Q, K*M, L) gather)
-    round_leaves   leaves refined per query per refinement round (K)
+    round_leaves   leaves refined per query per refinement round (K);
+                   None (default) = resolve through a fresh AutotuneTable
+                   when installed, else the static default of 8
     pq_budget      cap on leaves admitted to the per-query priority queue
                    (None = the exact round budget; smaller values trade
                    exactness for PQ setup time, like max_rounds)
+    dma_depth      Mosaic refine-kernel HBM->VMEM DMA ring depth (pallas
+                   backend only; 1 = pipelined BlockSpec kernel, >= 2 =
+                   explicit multi-buffered ring); None = autotune/default
+    block_q        Triton refine-kernel query rows per program (pallas
+                   backend only); None = autotune/default
+
+    Unset (None) knobs resolve per `FreshIndex.search_knobs`: a fresh
+    `kernels.autotune.AutotuneTable` entry for this device/shape when
+    one is installed, else the static defaults — unknown devices and
+    untuned indexes behave exactly as before autotune existed.
     """
     segments: int = isax.SEGMENTS
     bits: int = isax.SAX_BITS
@@ -140,8 +152,10 @@ class IndexConfig:
     znorm: bool = True
     dtype: str = "float32"
     backend: str = "ref"
-    round_leaves: int = 8
+    round_leaves: Optional[int] = None
     pq_budget: Optional[int] = None
+    dma_depth: Optional[int] = None
+    block_q: Optional[int] = None
 
     def __post_init__(self):
         if self.bound not in _BOUNDS:
@@ -157,10 +171,14 @@ class IndexConfig:
             raise ValueError("need segments >= 1 and 1 <= bits <= 8")
         if self.leaf_capacity < 1:
             raise ValueError("leaf_capacity must be >= 1")
-        if self.round_leaves < 1:
-            raise ValueError("round_leaves must be >= 1")
+        if self.round_leaves is not None and self.round_leaves < 1:
+            raise ValueError("round_leaves must be >= 1 or None")
         if self.pq_budget is not None and self.pq_budget < 1:
             raise ValueError("pq_budget must be >= 1 or None")
+        if self.dma_depth is not None and self.dma_depth < 1:
+            raise ValueError("dma_depth must be >= 1 or None")
+        if self.block_q is not None and self.block_q < 1:
+            raise ValueError("block_q must be >= 1 or None")
 
     def validate_series_len(self, L: int) -> None:
         """Raise ValueError unless series length L divides into
@@ -220,6 +238,9 @@ class FreshIndex:
         # ---- approximate search (repro.quality): fitted stop rules,
         # installed by calibrate() or restored by load()
         self._calibration: Optional[CalibrationTable] = None
+        # ---- backend autotune (repro.kernels.autotune): measured knob
+        # winners, installed by autotune() or restored by load()
+        self._autotune = None
         self._fp = None                         # fingerprint cache ...
         self._fp_key = None                     # ... keyed (ver, pending)
 
@@ -359,6 +380,7 @@ class FreshIndex:
         st["n_ttl"] = self.n_ttl
         st["n_aliases"] = len(self._alias)
         st["calibrated"] = self._calibration is not None
+        st["autotuned"] = self._autotune is not None
         return st
 
     def __repr__(self) -> str:
@@ -402,8 +424,10 @@ class FreshIndex:
         `recall_target` (run `calibrate()` first, or load a calibrated
         checkpoint).  `max_rounds` caps the refinement loop the blunt
         way (distances become upper bounds).  round_leaves / pq_budget
-        / the kernel backend default from this index's IndexConfig
-        (pass explicit values to override per call).  On a sharded
+        / the kernel backend default from this index's IndexConfig,
+        with UNSET config knobs resolved through a fresh autotune table
+        when one is installed — see `search_knobs` (pass explicit
+        values to override per call).  On a sharded
         index `sync_every` sets the expeditive/standard all-reduce
         cadence and `sync_every` participates in the per-mesh
         compiled-search cache key (unsharded searches ignore it).
@@ -427,28 +451,39 @@ class FreshIndex:
         rule = self.resolve_stop_rule(mode, k=k, recall_target=recall_target,
                                       stop_eps=stop_eps,
                                       max_leaves=max_leaves)
+        # resolve every search knob NOW (explicit arg > IndexConfig >
+        # fresh autotune table > static default) so the compiled-search
+        # cache below keys on VALUES — a retuned table changes the key,
+        # never silently re-resolves under a stale compiled fn
+        kn = self.search_knobs()
+        rl = round_leaves if round_leaves is not None else kn.round_leaves
+        pqb = pq_budget if pq_budget is not None else kn.pq_budget
+        bk = backend if backend is not None else self.config.backend
+        dd, bq = (kn.dma_depth, kn.block_q) if bk == "pallas" else (1, 1)
         core, delta, alive, id0 = self.search_view()
         if self._mesh is not None:
             # the mesh placement is part of the key (not just cleared on
             # shard()): a compiled shard_map search can never be replayed
             # against arrays living on a different placement
-            key = (k, round_leaves, sync_every, max_rounds, pq_budget,
-                   backend, rule, mesh_sig(self._mesh))
+            key = (k, rl, sync_every, max_rounds, pqb,
+                   bk, dd, bq, rule, mesh_sig(self._mesh))
             fn = self._sharded_fns.get(key)
             if fn is None:
                 fn = build_sharded_search(
                     self._mesh, axis=self._mesh_axis, k=k,
-                    round_leaves=round_leaves, sync_every=sync_every,
+                    round_leaves=rl, sync_every=sync_every,
                     max_rounds=max_rounds, znorm=self.config.znorm,
-                    pq_budget=pq_budget, backend=backend,
+                    pq_budget=pqb, backend=bk,
+                    dma_depth=dd, block_q=bq,
                     config=self.config, **rule.lower())
                 self._sharded_fns[key] = fn
             d, i = fn(core, q)
         else:
-            d, i = run_search(core, q, k=k, round_leaves=round_leaves,
+            d, i = run_search(core, q, k=k, round_leaves=rl,
                               znorm=self.config.znorm,
-                              max_rounds=max_rounds, pq_budget=pq_budget,
-                              backend=backend, config=self.config,
+                              max_rounds=max_rounds, pq_budget=pqb,
+                              backend=bk, dma_depth=dd, block_q=bq,
+                              config=self.config,
                               **rule.lower())
         if delta is not None:
             # fold the exact delta scan into the core answer.  The core
@@ -560,11 +595,89 @@ class FreshIndex:
         """
         if self._calibration is None:
             return False
+        return self._fingerprint() == self._calibration.fingerprint
+
+    def _fingerprint(self) -> str:
+        """The content fingerprint, cached per lifecycle version (shared
+        by the calibration and autotune freshness checks)."""
         key = (self._lifecycle_ver, self.n_pending)
         if self._fp_key != key:
             self._fp = index_fingerprint(self)
             self._fp_key = key
-        return self._fp == self._calibration.fingerprint
+        return self._fp
+
+    # ------------------------------------------------------------------ #
+    # backend autotune (repro.kernels.autotune)
+    # ------------------------------------------------------------------ #
+    def autotune(self, **kwargs) -> "AutotuneTable":
+        """Sweep refine-kernel knob candidates on the live device and
+        install the winning AutotuneTable (see
+        `repro.kernels.autotune.autotune_index` for every argument:
+        queries, n_queries, k, repeat, quick, candidates, backend,
+        seed).  Every candidate is gated on BITWISE equality with the
+        default-knob search output before it may win, so installing the
+        table never changes any search result — only its latency.  The
+        installed table is what `search_knobs` resolves unset
+        IndexConfig knobs through, and `save()` persists it with the
+        checkpoint.
+
+        Args:
+            **kwargs: forwarded verbatim to the sweep harness.
+        Returns:
+            The measured AutotuneTable (also stored on the index).
+
+        Concurrency: a writer of autotune state (and a reader of the
+        index); serialize against writers like calibrate().
+        """
+        from repro.kernels.autotune import autotune_index
+        table = autotune_index(self, **kwargs)
+        self._autotune = table
+        return table
+
+    @property
+    def autotune_table(self):
+        """The installed AutotuneTable (None until autotune() runs or a
+        tuned checkpoint is loaded)."""
+        return self._autotune
+
+    def is_autotune_fresh(self) -> bool:
+        """True when the installed autotune table was measured on
+        EXACTLY this index content (fingerprints match).  Mutations
+        (add/delete/update/compact) make it stale; a stale table is NOT
+        resolved through — `search_knobs` falls back to the static
+        defaults, the conservative direction, until a re-tune (timings
+        are content-dependent, and silently serving a config tuned for
+        different content is how perf regressions hide).
+
+        Concurrency: a reader; the fingerprint is cached per lifecycle
+        version, so repeated calls are cheap.
+        """
+        if self._autotune is None:
+            return False
+        return self._fingerprint() == self._autotune.fingerprint
+
+    def search_knobs(self) -> "TuneConfig":
+        """The fully-resolved search knobs this index serves with, as a
+        `kernels.autotune.TuneConfig`: each knob is the IndexConfig
+        field when set, else the FRESH autotune-table entry for this
+        (device_kind, L, leaf_capacity, dtype) when one is installed,
+        else the static default (`kernels.autotune.DEFAULTS`) — so an
+        untuned index, an unknown device, or a stale table all behave
+        exactly as before autotune existed.  This is the ONE resolution
+        path search(), the serving engine's Knobs, and the calibrator
+        share.
+
+        Concurrency: a reader (of config + autotune state); safe
+        against other readers, serialize against autotune()/reload()
+        like any reader against a writer.
+        """
+        from repro.kernels.autotune import device_kind, resolve_knobs
+        entry = None
+        if self._autotune is not None and self.is_autotune_fresh():
+            entry = self._autotune.lookup(
+                device_kind(), self.series_len,
+                self.config.leaf_capacity, self.config.dtype)
+        return resolve_knobs(self.config, entry)
 
     def _remap_ids(self, ids: np.ndarray) -> np.ndarray:
         """Internal -> stable id remap at the result boundary: rows
@@ -989,6 +1102,8 @@ class FreshIndex:
                  }}
         if self._calibration is not None:
             extra["quality_calibration"] = self._calibration.to_dict()
+        if self._autotune is not None:
+            extra["autotune"] = self._autotune.to_dict()
         return save_checkpoint(directory, step, tree, extra=extra)
 
     @classmethod
@@ -1044,6 +1159,10 @@ class FreshIndex:
         calib = extra.get("quality_calibration")
         if calib is not None:
             out._calibration = CalibrationTable.from_dict(calib)
+        tuned = extra.get("autotune")
+        if tuned is not None:
+            from repro.kernels.autotune import AutotuneTable
+            out._autotune = AutotuneTable.from_dict(tuned)
         return out
 
     def reload(self, directory: str, step: Optional[int] = None
@@ -1092,6 +1211,7 @@ class FreshIndex:
         self._id_map = loaded._id_map
         self._alias = loaded._alias
         self._calibration = loaded._calibration
+        self._autotune = loaded._autotune
         self._masked = None
         self._masked_key = None
         self._fp = None

@@ -215,7 +215,8 @@ def leaf_lower_bounds(idx: FlatIndex, q_paa: jnp.ndarray,
 
 
 def _refine_round(q, q_sq, series, sq_norms, ids, alive, bsf_d, bsf_e,
-                  *, M: int, k: int, backend: str):
+                  *, M: int, k: int, backend: str,
+                  dma_depth: int = 1, block_q: int = 1):
     """One refinement round: distances of the addressed leaves' members,
     pruned by `alive`, folded into the (Q, k) BSF buffer.
 
@@ -226,11 +227,17 @@ def _refine_round(q, q_sq, series, sq_norms, ids, alive, bsf_d, bsf_e,
     never repeat across rounds (leaves are disjoint; padded duplicate PQ
     slots carry lb=BIG and fail `alive`), so the buffer stays
     duplicate-free.
+
+    `dma_depth` / `block_q` are pallas-only kernel-structure knobs
+    (kernels.refine; normally resolved through the autotune table) — the
+    ref backend ignores them, and callers normalize them to the defaults
+    there so they never split its compile cache.
     """
     from repro.kernels import ops, ref
     if backend == "pallas":
         return ops.refine_topk(q, q_sq, series, sq_norms, ids, alive,
-                               bsf_d, bsf_e, leaf_capacity=M, k=k)
+                               bsf_d, bsf_e, leaf_capacity=M, k=k,
+                               dma_depth=dma_depth, block_q=block_q)
     return ref.refine_topk_ref(q, q_sq, series, sq_norms, ids, alive,
                                bsf_d, bsf_e, leaf_capacity=M, k=k)
 
@@ -240,7 +247,8 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
                      max_rounds: Optional[int] = None, backend: str = "ref",
                      pq_budget: Optional[int] = None,
                      stop_eps: float = 0.0,
-                     stop_leaves: Optional[int] = None
+                     stop_leaves: Optional[int] = None,
+                     dma_depth: int = 1, block_q: int = 1
                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """The PURE search plan: exact k-NN with every knob fully resolved.
 
@@ -274,6 +282,12 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
     (0.0, None) the traced program is LITERALLY the exact one — the
     guards below emit the unscaled expressions — so exact mode stays
     bit-identical to the seed oracle.
+
+    `dma_depth` / `block_q` pick the pallas refine-kernel structure
+    (kernels.refine: explicit DMA-ring depth on Mosaic, queries per
+    program on Triton) — autotune-resolved knobs that change HOW the
+    round executes, never WHAT it returns.  The ref backend ignores
+    them (callers normalize to 1/1 there).
     """
     if backend not in _BACKENDS:
         raise ValueError(f"backend must be one of {_BACKENDS}, "
@@ -313,7 +327,8 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
         alive = (lbs < bound)                            # (Q, K)
         bsf_d, bsf_e = _refine_round(q, q_sq, idx.series, idx.sq_norms,
                                      ids, alive, bsf_d, bsf_e,
-                                     M=M, k=k, backend=backend)
+                                     M=M, k=k, backend=backend,
+                                     dma_depth=dma_depth, block_q=block_q)
         return cursor + K, bsf_d, bsf_e
 
     state = (jnp.int32(0), jnp.full((Q, k), BIG),
@@ -337,7 +352,8 @@ def search_plan_impl(idx: FlatIndex, queries: jnp.ndarray, *,
 search_plan = functools.partial(
     jax.jit, static_argnames=("k", "round_leaves", "znorm", "max_rounds",
                               "backend", "pq_budget", "stop_eps",
-                              "stop_leaves"))(search_plan_impl)
+                              "stop_leaves", "dma_depth",
+                              "block_q"))(search_plan_impl)
 search_plan.__doc__ = search_plan_impl.__doc__
 
 
@@ -406,7 +422,8 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
                          backend: str = "ref",
                          pq_budget: Optional[int] = None,
                          stop_eps: float = 0.0,
-                         stop_leaves: Optional[int] = None
+                         stop_leaves: Optional[int] = None,
+                         dma_depth: int = 1, block_q: int = 1
                          ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Search plan over a (core index, delta buffer) epoch snapshot.
 
@@ -432,7 +449,8 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
     d, i, rounds = search_plan_impl(
         idx, queries, k=k, round_leaves=round_leaves, znorm=znorm,
         max_rounds=max_rounds, backend=backend, pq_budget=pq_budget,
-        stop_eps=stop_eps, stop_leaves=stop_leaves)
+        stop_eps=stop_eps, stop_leaves=stop_leaves,
+        dma_depth=dma_depth, block_q=block_q)
     kd = min(k, delta.shape[0])
     dd, di = _bruteforce_topk(delta, queries, k=kd, znorm=znorm,
                               alive=delta_alive)
@@ -444,7 +462,8 @@ def snapshot_search_impl(idx: FlatIndex, delta: jnp.ndarray,
 snapshot_search = functools.partial(
     jax.jit, static_argnames=("k", "n_base", "round_leaves", "znorm",
                               "max_rounds", "backend", "pq_budget",
-                              "stop_eps", "stop_leaves"))(snapshot_search_impl)
+                              "stop_eps", "stop_leaves", "dma_depth",
+                              "block_q"))(snapshot_search_impl)
 snapshot_search.__doc__ = snapshot_search_impl.__doc__
 
 
@@ -479,21 +498,36 @@ def run_search(idx: FlatIndex, queries: jnp.ndarray, *,
                backend: Optional[str] = None,
                pq_budget: Optional[int] = None,
                stop_eps: float = 0.0, stop_leaves: Optional[int] = None,
-               config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               dma_depth: Optional[int] = None,
+               block_q: Optional[int] = None,
+               tune=None, config=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Knob resolution + dispatch over the jitted `search_plan` — the
     facade's entry point (no deprecation warning; `search` is the warning
-    shim around this).  backend / round_leaves / pq_budget default to None
-    and resolve from `config` (an IndexConfig — what FreshIndex.search
-    passes), falling back to 'ref' / 8 / uncapped; stop_eps / stop_leaves
-    are the repro.quality approximate stop rules (defaults = exact).
+    shim around this).  backend / round_leaves / pq_budget / dma_depth /
+    block_q default to None and resolve explicit arg > `config` field (an
+    IndexConfig — what FreshIndex.search passes) > `tune` (a
+    kernels.autotune.TuneConfig — the FRESH tuned entry for this device,
+    what FreshIndex.search passes when a table is installed) > the static
+    defaults 'ref' / 8 / uncapped / 1 / 1; stop_eps / stop_leaves are the
+    repro.quality approximate stop rules (defaults = exact).
     Returns (Q,) arrays for k == 1, (Q, k) ascending otherwise."""
-    K = _resolve_knob(round_leaves, config, "round_leaves", 8)
+    t = tune
+    K = _resolve_knob(round_leaves, config, "round_leaves",
+                      t.round_leaves if t else 8)
     bk = _resolve_backend(backend, config)
-    pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
+    pq_budget = _resolve_knob(pq_budget, config, "pq_budget",
+                              t.pq_budget if t else None)
+    dd = _resolve_knob(dma_depth, config, "dma_depth",
+                       t.dma_depth if t else 1)
+    bq = _resolve_knob(block_q, config, "block_q",
+                       t.block_q if t else 1)
+    if bk != "pallas":
+        dd, bq = 1, 1        # ref ignores them; don't split its jit cache
     d, i, _ = search_plan(idx, queries, k=k, round_leaves=K, znorm=znorm,
                           max_rounds=max_rounds, backend=bk,
                           pq_budget=pq_budget, stop_eps=stop_eps,
-                          stop_leaves=stop_leaves)
+                          stop_leaves=stop_leaves, dma_depth=dd,
+                          block_q=bq)
     return squeeze_k(d, i, k)
 
 
@@ -572,7 +606,10 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
                        backend: Optional[str] = None,
                        pq_budget: Optional[int] = None,
                        stop_eps: float = 0.0,
-                       stop_leaves: Optional[int] = None, config=None):
+                       stop_leaves: Optional[int] = None,
+                       dma_depth: Optional[int] = None,
+                       block_q: Optional[int] = None,
+                       tune=None, config=None):
     """The PURE sharded search plan factory: `(idx, queries) -> (dist,
     ids, rounds)` with (Q, k) outputs and no squeeze — the sharded
     analogue of `search_plan_impl`.
@@ -595,9 +632,13 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
     per (batch-bucket, k, mesh layout) with `.lower().compile()`, so the
     two paths execute identical programs.
 
-    backend / round_leaves / pq_budget resolve from `config` (IndexConfig)
-    when unset, like the local search().  backend='pallas' routes each
-    device's refine closure through the fused kernels.refine_topk.
+    backend / round_leaves / pq_budget / dma_depth / block_q resolve from
+    `config` (IndexConfig) when unset, then from `tune` (a fresh autotune
+    TuneConfig, the same fallback layer `run_search` uses), then from the
+    hard defaults — like the local search().  backend='pallas' routes
+    each device's refine closure through the fused kernels.refine_topk,
+    which is where dma_depth / block_q land; the ref backend ignores
+    them, so they are normalized to 1/1 there to keep one jit entry.
 
     `stop_eps` / `stop_leaves` are the repro.quality approximate stop
     rules, lowered into the collective while_loop cond exactly like the
@@ -607,9 +648,18 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
     its own PQ — so a mesh of D devices visits at most D * stop_leaves
     leaves in total.
     """
-    K = _resolve_knob(round_leaves, config, "round_leaves", 8)
+    t = tune
+    K = _resolve_knob(round_leaves, config, "round_leaves",
+                      t.round_leaves if t else 8)
     bk = _resolve_backend(backend, config)
-    pq_budget = _resolve_knob(pq_budget, config, "pq_budget", None)
+    pq_budget = _resolve_knob(pq_budget, config, "pq_budget",
+                              t.pq_budget if t else None)
+    dd = _resolve_knob(dma_depth, config, "dma_depth",
+                       t.dma_depth if t else 1)
+    bq = _resolve_knob(block_q, config, "block_q",
+                       t.block_q if t else 1)
+    if bk != "pallas":
+        dd, bq = 1, 1        # ref ignores them; don't split its jit cache
     inv_eps, leaf_budget = _stop_knobs(stop_eps, stop_leaves, pq_budget)
 
     def _local_search(series, sq_norms, perm, leaf_lo, leaf_hi, q, q_paa, q_sq):
@@ -643,7 +693,8 @@ def build_sharded_plan(mesh: Mesh, *, axis: str = "data", k: int = 1,
                 bound = bound * inv_eps
             alive = lbs < bound[:, None]
             return _refine_round(q, q_sq, series, sq_norms, ids, alive,
-                                 bsf_d, bsf_e, M=M, k=k, backend=bk)
+                                 bsf_d, bsf_e, M=M, k=k, backend=bk,
+                                 dma_depth=dd, block_q=bq)
 
         def cond(state):
             cursor, bsf_d, _, pb, rounds = state
@@ -714,7 +765,10 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
                          backend: Optional[str] = None,
                          pq_budget: Optional[int] = None,
                          stop_eps: float = 0.0,
-                         stop_leaves: Optional[int] = None, config=None):
+                         stop_leaves: Optional[int] = None,
+                         dma_depth: Optional[int] = None,
+                         block_q: Optional[int] = None,
+                         tune=None, config=None):
     """Builds a jitted sharded k-NN `search(idx, queries)` for the mesh.
 
     The facade spelling over `build_sharded_plan`: the pure plan is traced
@@ -727,7 +781,8 @@ def build_sharded_search(mesh: Mesh, *, axis: str = "data", k: int = 1,
         mesh, axis=axis, k=k, round_leaves=round_leaves,
         sync_every=sync_every, max_rounds=max_rounds, znorm=znorm,
         backend=backend, pq_budget=pq_budget, stop_eps=stop_eps,
-        stop_leaves=stop_leaves, config=config))
+        stop_leaves=stop_leaves, dma_depth=dma_depth, block_q=block_q,
+        tune=tune, config=config))
 
     def sharded_search(idx: FlatIndex, queries: jnp.ndarray):
         d, i, _ = plan(idx, queries)

@@ -4,6 +4,13 @@ every kernel module can use it without cycling through ops.py).
 INTERPRET resolves once per process: interpret mode (kernel body run in
 Python — bit-identical semantics, no Mosaic) everywhere except TPU, where
 kernels compile to Mosaic.
+
+Lowering dispatch: kernels with more than one compiled code path (today
+only `refine`, which has a Mosaic scalar-prefetch kernel AND a Triton
+grid-(Q,) kernel) resolve their path through `resolve_lowering`, which
+raises the typed `KernelLoweringError` — instead of an opaque
+Mosaic/Triton trace-time failure — when `backend="pallas"` is requested
+on a platform with no lowering path at all.
 """
 
 from __future__ import annotations
@@ -14,6 +21,28 @@ import jax
 
 INTERPRET: bool = jax.default_backend() != "tpu"
 
+#: platform string (jax.default_backend() spelling) -> the compiled
+#: lowering path refine-style multi-backend kernels take there.  CPU is
+#: deliberately absent: it has NO compiled path — interpret mode is the
+#: only way to execute a Pallas kernel there, and `resolve_lowering`
+#: falls back to it rather than erroring.
+LOWERINGS = {
+    "tpu": "mosaic",
+    "gpu": "triton",
+    "cuda": "triton",
+    "rocm": "triton",
+}
+
+_KNOWN_LOWERINGS = ("mosaic", "triton")
+
+
+class KernelLoweringError(RuntimeError):
+    """`backend="pallas"` was requested on a platform with no kernel
+    lowering path (and interpret mode was explicitly disabled).  Raised
+    at dispatch time with the platform and the supported set, so callers
+    see a clear capability error instead of a Mosaic/Triton trace-time
+    stack."""
+
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
     """None -> the process default (Mosaic on TPU, interpreter elsewhere).
@@ -22,6 +51,56 @@ def resolve_interpret(interpret: Optional[bool]) -> bool:
     direct caller never silently runs the Python interpreter on TPU.
     """
     return INTERPRET if interpret is None else interpret
+
+
+def resolve_lowering(interpret: Optional[bool] = None,
+                     lowering: Optional[str] = None,
+                     platform: Optional[str] = None
+                     ) -> Tuple[str, bool]:
+    """Resolve a multi-backend kernel's `(kernel structure, interpret)`.
+
+    `lowering` picks the kernel STRUCTURE ('mosaic': scalar-prefetch
+    grid-(Q, K) accumulator kernel; 'triton': grid-(Q,) dynamic-gather
+    kernel — both also executable bit-identically under interpret mode);
+    `interpret` whether it compiles or runs in the Python interpreter.
+    Defaults (both None): TPU compiles Mosaic, GPU compiles Triton, CPU
+    interprets the Mosaic-structure kernel, and any OTHER platform
+    raises `KernelLoweringError` — the typed capability error the
+    `backend="pallas"` resolution contract promises (a platform like
+    'metal' must fail HERE, not five frames deep in a lowering trace).
+
+    `platform` overrides `jax.default_backend()` (tests exercise the
+    per-platform matrix without owning the hardware).
+    """
+    if lowering is not None and lowering not in _KNOWN_LOWERINGS:
+        raise ValueError(
+            f"lowering must be one of {_KNOWN_LOWERINGS} or None, "
+            f"got {lowering!r}")
+    p = jax.default_backend() if platform is None else platform
+    compiled = LOWERINGS.get(p)
+    if interpret is None:
+        # only CPU falls back to interpret mode by default; an unknown
+        # platform (e.g. 'metal') must fail the typed way below unless
+        # the caller opts into the interpreter explicitly
+        interpret = compiled is None and p == "cpu"
+    if lowering is None:
+        if compiled is not None:
+            lowering = compiled
+        elif interpret:
+            lowering = "mosaic"        # structure only; body runs in Python
+        else:
+            raise KernelLoweringError(
+                f"backend='pallas' has no kernel lowering path on "
+                f"platform {p!r} (supported: "
+                f"{sorted(set(LOWERINGS))} compile, 'cpu' interprets); "
+                f"pass backend='ref' or interpret=True")
+    if not interpret and compiled != lowering:
+        raise KernelLoweringError(
+            f"platform {p!r} cannot compile the {lowering!r} lowering "
+            f"(it compiles {compiled!r}) and interpret mode was "
+            f"explicitly disabled; supported compile platforms: "
+            f"{sorted(set(LOWERINGS))}")
+    return lowering, bool(interpret)
 
 
 def tpu_compiler_params(dimension_semantics: Tuple[str, ...]):

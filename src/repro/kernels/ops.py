@@ -41,10 +41,17 @@ def ed_argmin(q, xs, *, interpret=None):
 
 
 def refine_topk(q, q_sq, series, sq_norms, leaf_ids, alive, bsf_d, bsf_e,
-                *, leaf_capacity, k, interpret=None):
+                *, leaf_capacity, k, interpret=None, dma_depth=1,
+                block_q=1, lowering=None):
+    # interpret is passed through RAW (not pre-resolved): refine is the
+    # one multi-lowering kernel, and _compat.resolve_lowering must see
+    # `None` to pick (structure, interpret) per platform — TPU compiles
+    # Mosaic, GPU compiles Triton, CPU interprets, anything else raises
+    # the typed KernelLoweringError at dispatch time.
     return _refine_topk(q, q_sq, series, sq_norms, leaf_ids, alive,
                         bsf_d, bsf_e, leaf_capacity=leaf_capacity, k=k,
-                        interpret=resolve_interpret(interpret))
+                        interpret=interpret, dma_depth=dma_depth,
+                        block_q=block_q, lowering=lowering)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, block_q=128,

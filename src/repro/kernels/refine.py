@@ -50,6 +50,46 @@ the fold is bit-comparable with the reference merge in ref.refine_topk_ref
 Buffer width: kp = k in interpret mode; on Mosaic the buffer is padded up
 to a 128-lane multiple (padded slots carry d=BIG, entry 0 — they sort
 after every real candidate and are sliced off by the wrapper).
+
+Lowerings (PR 10): the round has three kernel structures behind one
+wrapper, resolved through `_compat.resolve_lowering` and tuned by
+`kernels.autotune`:
+
+  mosaic, dma_depth=1   the grid-(Q, K) scalar-prefetch kernel above —
+                        the BlockSpec pipeliner double-buffers the leaf
+                        copies implicitly (one block look-ahead);
+  mosaic, dma_depth>=2  `series` stays in HBM (`pltpu.ANY`) and the
+                        kernel issues its own `make_async_copy` chain
+                        into a (depth, M, L) VMEM ring: the copy for PQ
+                        slot j+depth-1 is IN FLIGHT while slot j
+                        computes, and a pruned slot starts no copy at
+                        all (the explicit form of the forward-fill DMA
+                        elision).  Bit-identical fold, deeper overlap
+                        for leaves whose DMA latency exceeds one round
+                        of compute;
+  triton (GPU)          grid (ceil(Q/block_q),): each program owns
+                        block_q query rows, walks their K PQ slots with
+                        an in-kernel fori_loop, and gathers each (M, L)
+                        leaf block with a dynamic `pl.load` straight
+                        from GMEM (pointer arithmetic — the Triton
+                        analogue of the scalar-prefetch index_map).
+                        Dead slots fold masked BIG candidates, which the
+                        rank-select provably ignores.  The union width
+                        kp + M is padded to a power of two (Triton block
+                        shapes must be); padded slots behave like the
+                        Mosaic lane padding.
+
+All three structures run under interpret mode on CPU, which is how CI
+exercises them without the hardware.  Exactness contract: the default
+structure is bit-identical to ref.refine_topk_ref (asserted by the test
+suite); the dma/triton variants return exactly the same ENTRIES in the
+same order, with distances equal to the last ulp or so — XLA's dot
+merger batches a program's unrolled per-slot dots into one larger dot
+whose tail-lane reduction can differ by 1 ulp from the one-dot-per-
+program default.  The autotune sweep therefore gates every candidate
+config on BITWISE equality against the default-knob output on the live
+device (kernels/autotune.py): a variant structure only ever reaches the
+tuned table where it is provably bit-identical there.
 """
 
 from __future__ import annotations
@@ -62,9 +102,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from ._compat import resolve_interpret, tpu_compiler_params
+from ._compat import resolve_lowering, tpu_compiler_params
 
 BIG = 1e30
+
+
+def _pow2_pad(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
 
 
 def _rank_select(u_d: jnp.ndarray, u_e: jnp.ndarray, kp: int
@@ -116,46 +163,127 @@ def _refine_kernel(ids_ref, alive_ref, q_ref, qsq_ref, bsfd_ref, bsfe_ref,
         outd_ref[...], oute_ref[...] = _rank_select(u_d, u_e, kp)
 
 
-@functools.partial(jax.jit, static_argnames=("leaf_capacity", "k",
-                                             "interpret"))
-def refine_topk(q: jnp.ndarray, q_sq: jnp.ndarray, series: jnp.ndarray,
-                sq_norms: jnp.ndarray, leaf_ids: jnp.ndarray,
-                alive: jnp.ndarray, bsf_d: jnp.ndarray, bsf_e: jnp.ndarray,
-                *, leaf_capacity: int, k: int,
-                interpret: Optional[bool] = None
-                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """One fused refinement round.
-
-    q:        (Q, L) f32 prepared queries
-    q_sq:     (Q,)   f32 ||q||^2
-    series:   (n_pad, L) leaf-ordered series (any float dtype; math in f32)
-    sq_norms: (n_pad,)   f32 ||x||^2 (padded rows pushed to 1e30)
-    leaf_ids: (Q, K) i32 leaves to visit this round (PQ order)
-    alive:    (Q, K) bool/int — lb < round-start k-th BSF (pruning mask)
-    bsf_d/e:  (Q, k) carried top-k buffer (ascending) / entry ids
-    -> the merged (Q, k) buffer, same semantics as the reference
-       ref.refine_topk_ref round, with no (Q, K*M, L) intermediate.
+def _refine_kernel_dma(ids_ref, alive_ref, q_ref, qsq_ref, bsfd_ref,
+                       bsfe_ref, xs_hbm, xn_hbm, outd_ref, oute_ref,
+                       xs_buf, xn_buf, xs_sem, xn_sem, *,
+                       leaf_capacity: int, kp: int, depth: int,
+                       n_slots: int):
+    """Mosaic structure, explicit DMA ring: grid (Q,) — one program per
+    query row walks its K PQ slots with a fori_loop, keeping up to
+    `depth` leaf copies (HBM -> VMEM ring buffer) in flight ahead of the
+    compute slot.  A pruned slot never starts a copy (explicit DMA
+    elision; no forward-fill needed), and the fold under the wait is the
+    same _rank_select as the pipelined kernel — bit-identical results.
     """
-    interpret = resolve_interpret(interpret)
-    Q, L = q.shape
-    K = leaf_ids.shape[1]
+    i = pl.program_id(0)
     M = leaf_capacity
-    NL = series.shape[0] // M
-    # lane-pad the buffer on Mosaic; exact width in interpret mode
-    kp = k if interpret else -(-k // 128) * 128
-    if kp != k:
-        bsf_d = jnp.pad(bsf_d, ((0, 0), (0, kp - k)), constant_values=BIG)
-        bsf_e = jnp.pad(bsf_e, ((0, 0), (0, kp - k)))
 
-    ids32 = leaf_ids.astype(jnp.int32)
-    alive32 = alive.astype(jnp.int32)
+    outd_ref[...] = bsfd_ref[...]
+    oute_ref[...] = bsfe_ref[...]
+
+    # the slot walk is unrolled (n_slots is static and small — it is
+    # round_leaves): slot indices into the ring are static, and the
+    # per-slot dot is the same straight-line op as the pipelined kernel's
+    # (bit-identical accumulation — a fori_loop-wrapped dot may compile
+    # to a different reduction order)
+    def start(j):
+        if j >= n_slots:                   # ring warmup past the last slot
+            return
+        slot = j % depth
+
+        @pl.when(alive_ref[i, j] != 0)     # pruned slot: no copy at all
+        def _():
+            pltpu.make_async_copy(
+                xs_hbm.at[pl.ds(ids_ref[i, j] * M, M), :],
+                xs_buf.at[slot], xs_sem.at[slot]).start()
+            pltpu.make_async_copy(
+                xn_hbm.at[pl.ds(ids_ref[i, j], 1), :],
+                xn_buf.at[slot], xn_sem.at[slot]).start()
+
+    for warm in range(depth - 1):          # fill the ring ahead of slot 0
+        start(warm)
+
+    for j in range(n_slots):
+        start(j + depth - 1)               # keep `depth` copies in flight
+        slot = j % depth
+
+        @pl.when(alive_ref[i, j] != 0)
+        def _fold(j=j, slot=slot):
+            pltpu.make_async_copy(
+                xs_hbm.at[pl.ds(ids_ref[i, j] * M, M), :],
+                xs_buf.at[slot], xs_sem.at[slot]).wait()
+            pltpu.make_async_copy(
+                xn_hbm.at[pl.ds(ids_ref[i, j], 1), :],
+                xn_buf.at[slot], xn_sem.at[slot]).wait()
+            q = q_ref[...].astype(jnp.float32)             # (1, L)
+            xs = xs_buf[slot].astype(jnp.float32)          # (M, L)
+            xn = xn_buf[slot]                              # (1, M)
+            dots = jax.lax.dot_general(q, xs, (((1,), (1,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+            d2 = jnp.maximum(qsq_ref[...] + xn - 2.0 * dots, 0.0)
+            cand_e = (ids_ref[i, j] * M
+                      + jax.lax.broadcasted_iota(jnp.int32, (1, M), 1))
+            u_d = jnp.concatenate([outd_ref[...], d2], axis=1)
+            u_e = jnp.concatenate([oute_ref[...], cand_e], axis=1)
+            outd_ref[...], oute_ref[...] = _rank_select(u_d, u_e, kp)
+
+
+def _refine_kernel_triton(ids_ref, alive_ref, q_ref, qsq_ref, bsfd_ref,
+                          bsfe_ref, xs_ref, xn_ref, outd_ref, oute_ref, *,
+                          leaf_capacity: int, kp: int, block_q: int,
+                          n_slots: int):
+    """Triton structure: grid (ceil(Q/block_q),) — each program owns
+    block_q query rows and gathers each (M, L) leaf block with a dynamic
+    pl.load from the full-array ref (GMEM pointer arithmetic; no
+    scalar-prefetch machinery exists on Triton).  Dead slots fold masked
+    BIG candidates — bit-identical to skipping, see the module docstring.
+    """
+    M = leaf_capacity
+    for r in range(block_q):               # static unroll over owned rows
+        q = pl.load(q_ref, (pl.dslice(r, 1), slice(None))
+                    ).astype(jnp.float32)                   # (1, L)
+        qsq = pl.load(qsq_ref, (pl.dslice(r, 1), slice(None)))
+        bd = pl.load(bsfd_ref, (pl.dslice(r, 1), slice(None)))  # (1, kp)
+        be = pl.load(bsfe_ref, (pl.dslice(r, 1), slice(None)))
+
+        # slot walk unrolled (n_slots = round_leaves, static and small):
+        # straight-line dots keep the reduction order bit-identical to
+        # the Mosaic kernels and the reference path
+        for j in range(n_slots):
+            leaf = ids_ref[r, j]
+            alv = alive_ref[r, j]
+            xs = pl.load(xs_ref, (pl.dslice(leaf * M, M), slice(None))
+                         ).astype(jnp.float32)              # (M, L)
+            xn = pl.load(xn_ref, (pl.dslice(leaf, 1), slice(None)))
+            dots = jax.lax.dot_general(q, xs, (((1,), (1,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+            d2 = jnp.maximum(qsq + xn - 2.0 * dots, 0.0)    # (1, M)
+            d2 = jnp.where(alv != 0, d2, BIG)               # mask, not skip
+            cand_e = (leaf * M
+                      + jax.lax.broadcasted_iota(jnp.int32, (1, M), 1))
+            u_d = jnp.concatenate([bd, d2], axis=1)
+            u_e = jnp.concatenate([be, cand_e], axis=1)
+            bd, be = _rank_select(u_d, u_e, kp)
+
+        pl.store(outd_ref, (pl.dslice(r, 1), slice(None)), bd)
+        pl.store(oute_ref, (pl.dslice(r, 1), slice(None)), be)
+
+
+def _refine_mosaic(q, q_sq, series, sq_norms, ids32, alive32, bsf_d, bsf_e,
+                   *, M: int, kp: int, interpret: bool):
+    """dma_depth == 1: the scalar-prefetch grid-(Q, K) kernel with the
+    BlockSpec pipeliner's implicit double-buffering + forward-fill DMA
+    elision."""
+    Q, L = q.shape
+    K = ids32.shape[1]
+    NL = series.shape[0] // M
     # DMA elision for pruned slots: a dead slot repeats the last alive
     # slot's leaf id (slot 0's id when the row starts dead — that block is
     # fetched at j == 0 regardless), so consecutive grid steps address the
     # same block and the pipeliner skips the copy.  Dead programs never
     # read the block, and alive slots keep their own id (the forward fill
     # maps an alive slot to itself), so results are unchanged.
-    slot = jnp.arange(alive32.shape[1], dtype=jnp.int32)[None, :]
+    slot = jnp.arange(K, dtype=jnp.int32)[None, :]
     last_alive = jax.lax.cummax(jnp.where(alive32 != 0, slot, -1), axis=1)
     ids32 = jnp.take_along_axis(ids32, jnp.maximum(last_alive, 0), axis=1)
     xn = sq_norms.astype(jnp.float32).reshape(NL, M)
@@ -181,7 +309,7 @@ def refine_topk(q: jnp.ndarray, q_sq: jnp.ndarray, series: jnp.ndarray,
     if not interpret:
         kwargs["compiler_params"] = tpu_compiler_params(
             ("parallel", "arbitrary"))
-    out_d, out_e = pl.pallas_call(
+    return pl.pallas_call(
         functools.partial(_refine_kernel, leaf_capacity=M, kp=kp),
         grid_spec=grid_spec,
         out_shape=[
@@ -191,4 +319,183 @@ def refine_topk(q: jnp.ndarray, q_sq: jnp.ndarray, series: jnp.ndarray,
         interpret=interpret,
         **kwargs,
     )(ids32, alive32, q, q_sq[:, None], bsf_d, bsf_e, series, xn)
+
+
+def _refine_mosaic_dma(q, q_sq, series, sq_norms, ids32, alive32, bsf_d,
+                       bsf_e, *, M: int, kp: int, depth: int,
+                       interpret: bool):
+    """dma_depth >= 2: series stays in HBM (pltpu.ANY) and the kernel
+    drives its own `depth`-deep make_async_copy ring."""
+    Q, L = q.shape
+    K = ids32.shape[1]
+    NL = series.shape[0] // M
+    xn = sq_norms.astype(jnp.float32).reshape(NL, M)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(Q,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda i, ids, al: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, ids, al: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, ids, al: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, ids, al: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),      # series: stay in HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),      # leaf norms
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kp), lambda i, ids, al: (i, 0)),
+            pl.BlockSpec((1, kp), lambda i, ids, al: (i, 0)),
+        ],
+        scratch_shapes=[
+            # ring in the STORED dtype — the copy moves leaf bytes as-is
+            # (bf16 leaves stream at bf16 width); the fold casts to f32
+            pltpu.VMEM((depth, M, L), series.dtype),   # leaf block ring
+            pltpu.VMEM((depth, 1, M), jnp.float32),    # leaf norm ring
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    kwargs = {}
+    if not interpret:
+        kwargs["compiler_params"] = tpu_compiler_params(("arbitrary",))
+    return pl.pallas_call(
+        functools.partial(_refine_kernel_dma, leaf_capacity=M, kp=kp,
+                          depth=depth, n_slots=K),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, kp), jnp.float32),
+            jax.ShapeDtypeStruct((Q, kp), jnp.int32),
+        ],
+        interpret=interpret,
+        **kwargs,
+    )(ids32, alive32, q, q_sq[:, None], bsf_d, bsf_e, series, xn)
+
+
+def _refine_triton(q, q_sq, series, sq_norms, ids32, alive32, bsf_d, bsf_e,
+                   *, M: int, kp: int, block_q: int, interpret: bool):
+    """Triton structure: pad Q to a block_q multiple (padded rows are
+    all-dead with BIG buffers — pure identity folds), launch one program
+    per query block, slice the padding back off."""
+    Q, L = q.shape
+    K = ids32.shape[1]
+    NL = series.shape[0] // M
+    xn = sq_norms.astype(jnp.float32).reshape(NL, M)
+
+    Qp = -(-Q // block_q) * block_q
+    if Qp != Q:
+        pad = ((0, Qp - Q), (0, 0))
+        q = jnp.pad(q, pad)
+        ids32 = jnp.pad(ids32, pad)
+        alive32 = jnp.pad(alive32, pad)                # padded rows dead
+        bsf_d = jnp.pad(bsf_d, pad, constant_values=BIG)
+        bsf_e = jnp.pad(bsf_e, pad)
+    qsq = jnp.pad(q_sq[:, None], ((0, Qp - Q), (0, 0)))
+
+    out_d, out_e = pl.pallas_call(
+        functools.partial(_refine_kernel_triton, leaf_capacity=M, kp=kp,
+                          block_q=block_q, n_slots=K),
+        grid=(Qp // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, K), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, L), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, kp), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, kp), lambda i: (i, 0)),
+            # full-array refs: the kernel body gathers with dynamic
+            # pl.load (GMEM pointers on Triton; materialized in interpret)
+            pl.BlockSpec((NL * M, L), lambda i: (0, 0)),
+            pl.BlockSpec((NL, M), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, kp), lambda i: (i, 0)),
+            pl.BlockSpec((block_q, kp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Qp, kp), jnp.float32),
+            jax.ShapeDtypeStruct((Qp, kp), jnp.int32),
+        ],
+        interpret=interpret,
+    )(ids32, alive32, q, qsq, bsf_d, bsf_e, series, xn)
+    return out_d[:Q], out_e[:Q]
+
+
+@functools.partial(jax.jit, static_argnames=("leaf_capacity", "k",
+                                             "interpret", "dma_depth",
+                                             "block_q", "lowering"))
+def refine_topk(q: jnp.ndarray, q_sq: jnp.ndarray, series: jnp.ndarray,
+                sq_norms: jnp.ndarray, leaf_ids: jnp.ndarray,
+                alive: jnp.ndarray, bsf_d: jnp.ndarray, bsf_e: jnp.ndarray,
+                *, leaf_capacity: int, k: int,
+                interpret: Optional[bool] = None,
+                dma_depth: int = 1, block_q: int = 1,
+                lowering: Optional[str] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One fused refinement round.
+
+    q:        (Q, L) f32 prepared queries
+    q_sq:     (Q,)   f32 ||q||^2
+    series:   (n_pad, L) leaf-ordered series (any float dtype; math in f32)
+    sq_norms: (n_pad,)   f32 ||x||^2 (padded rows pushed to 1e30)
+    leaf_ids: (Q, K) i32 leaves to visit this round (PQ order)
+    alive:    (Q, K) bool/int — lb < round-start k-th BSF (pruning mask)
+    bsf_d/e:  (Q, k) carried top-k buffer (ascending) / entry ids
+    dma_depth: Mosaic structure only — 1 uses the pipelined BlockSpec
+              kernel; >= 2 the explicit `depth`-deep DMA-ring kernel.
+    block_q:  Triton structure only — query rows per program.
+    lowering: kernel structure override ('mosaic' | 'triton' | None);
+              None resolves per platform via _compat.resolve_lowering.
+    -> the merged (Q, k) buffer, same semantics as the reference
+       ref.refine_topk_ref round, with no (Q, K*M, L) intermediate.
+       Every (lowering, dma_depth, block_q) combination returns the same
+       entries in the same order; the default structure is additionally
+       bit-identical in distances (see the module docstring's exactness
+       contract).
+    """
+    lowering, interpret = resolve_lowering(interpret, lowering)
+    if dma_depth < 1:
+        raise ValueError(f"dma_depth must be >= 1, got {dma_depth}")
+    if block_q < 1:
+        raise ValueError(f"block_q must be >= 1, got {block_q}")
+    if lowering == "mosaic" and block_q != 1:
+        raise ValueError(
+            f"block_q={block_q} is a Triton-structure knob; the Mosaic "
+            f"structure processes one query row per program (block_q=1)")
+    if lowering == "triton" and dma_depth != 1:
+        raise ValueError(
+            f"dma_depth={dma_depth} is a Mosaic-structure knob; Triton "
+            f"pipelines its gathers in hardware (dma_depth=1)")
+    Q, L = q.shape
+    K = leaf_ids.shape[1]
+    M = leaf_capacity
+    if lowering == "triton":
+        # Triton block shapes must be powers of two: pad the union width
+        # kp + M up, so the buffer carries (pow2 - M) BIG/0 filler slots
+        # that sort after every real candidate (same trick as the Mosaic
+        # lane padding, different alignment rule).  Applied in interpret
+        # mode too, so CI exercises the compiled shape logic.
+        kp = max(_pow2_pad(k + M) - M, k)
+    elif interpret:
+        kp = k                      # exact width in interpret mode
+    else:
+        kp = -(-k // 128) * 128     # lane-pad the buffer on Mosaic
+    if kp != k:
+        bsf_d = jnp.pad(bsf_d, ((0, 0), (0, kp - k)), constant_values=BIG)
+        bsf_e = jnp.pad(bsf_e, ((0, 0), (0, kp - k)))
+
+    ids32 = leaf_ids.astype(jnp.int32)
+    alive32 = alive.astype(jnp.int32)
+
+    if lowering == "triton":
+        out_d, out_e = _refine_triton(
+            q, q_sq, series, sq_norms, ids32, alive32, bsf_d, bsf_e,
+            M=M, kp=kp, block_q=block_q, interpret=interpret)
+    elif dma_depth >= 2 and K >= 2:
+        out_d, out_e = _refine_mosaic_dma(
+            q, q_sq, series, sq_norms, ids32, alive32, bsf_d, bsf_e,
+            M=M, kp=kp, depth=min(dma_depth, K), interpret=interpret)
+    else:
+        out_d, out_e = _refine_mosaic(
+            q, q_sq, series, sq_norms, ids32, alive32, bsf_d, bsf_e,
+            M=M, kp=kp, interpret=interpret)
     return out_d[:, :k], out_e[:, :k]

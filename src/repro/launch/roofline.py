@@ -277,3 +277,71 @@ def model_flops_for(cfg, shape) -> float:
                                    else 1)
     mult = 6 if shape.kind == "train" else 2
     return mult * n_active * tokens
+
+
+# ---------------------------------------------------------------------- #
+# refine-kernel roofline: the asserted %-of-roofline bench number
+# ---------------------------------------------------------------------- #
+#: nominal (peak_flops, hbm_bytes_per_s) per device-kind SUBSTRING.
+#: Matched case-insensitively against `jax.devices()[0].device_kind`;
+#: unknown kinds fall back to the per-chip TPU constants from
+#: launch.mesh (the denominators every dry-run number already uses).
+#: The cpu entry is a nominal modern-server figure — on CPU the kernels
+#: run in interpret mode, so `kernels/refine/roofline_frac` is a tiny
+#: correctness-trace number there, gated only as present-and-positive;
+#: on real accelerators the same row becomes a regression-gated
+#: fraction of hardware peak.
+DEVICE_PEAKS = {
+    "cpu": (2.0e11, 5.0e10),
+    "tpu": (PEAK_FLOPS_BF16, HBM_BW),
+    "a100": (312e12, 1555e9),
+    "h100": (989e12, 3350e9),
+    "v100": (125e12, 900e9),
+}
+
+
+def device_peaks(kind: Optional[str] = None) -> Tuple[float, float]:
+    """(peak_flops, hbm_bytes_per_s) for device kind `kind` (None = the
+    live device).  Substring match over `DEVICE_PEAKS`; unknown kinds
+    fall back to the TPU per-chip constants, so the fraction stays
+    computable (and comparable to the dry-run tables) everywhere."""
+    if kind is None:
+        import jax
+        d = jax.devices()[0]
+        kind = str(getattr(d, "device_kind", None) or jax.default_backend())
+    low = kind.lower()
+    for sub, peaks in DEVICE_PEAKS.items():
+        if sub in low:
+            return peaks
+    return PEAK_FLOPS_BF16, HBM_BW
+
+
+def refine_analytic(Q: int, K: int, M: int, L: int, k: int,
+                    dtype_bytes: int = 4) -> Dict[str, float]:
+    """Analytic cost of ONE refine round: flops + HBM bytes for the
+    fused kernel (each (M, L) leaf block streamed exactly once) and the
+    materializing ref path (gather written out + read back + source).
+    The single source of truth behind `benchmarks.roofline_table.
+    refine_rows` and the `kernels/refine/roofline_frac` bench row."""
+    flops = 2.0 * Q * K * M * L
+    leaf = float(dtype_bytes) * Q * K * M * L     # gathered member rows
+    small = 4.0 * Q * L + 12.0 * Q * k            # queries + BSF buffers
+    return {"flops": flops,
+            "bytes_fused": leaf + small,
+            "bytes_mat": 3.0 * leaf + small}
+
+
+def roofline_fraction(seconds: float, *, Q: int, K: int, M: int, L: int,
+                      k: int, dtype_bytes: int = 4,
+                      kind: Optional[str] = None) -> float:
+    """Fraction of the hardware roofline one measured refine round hit:
+    `max(t_compute, t_memory) / seconds` with the fused-path analytic
+    terms over `device_peaks(kind)`.  1.0 = the round ran exactly as
+    fast as the dominant roofline term allows; interpret-mode CPU
+    traces land orders of magnitude below (documented, not clamped)."""
+    if seconds <= 0:
+        raise ValueError(f"seconds must be > 0, got {seconds}")
+    peak_flops, hbm_bw = device_peaks(kind)
+    a = refine_analytic(Q, K, M, L, k, dtype_bytes)
+    bound = max(a["flops"] / peak_flops, a["bytes_fused"] / hbm_bw)
+    return bound / seconds

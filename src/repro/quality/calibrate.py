@@ -308,9 +308,15 @@ def _run_setting(index, q, k: int, rule: StopRule, backend: Optional[str],
     core, delta, alive, id0 = index.search_view()
     cfg = index.config
     bk = backend if backend is not None else cfg.backend
-    K = cfg.round_leaves
+    # the fully-resolved knobs serving will use (IndexConfig > fresh
+    # autotune table > defaults) — calibration must measure the same
+    # program it certifies
+    kn = index.search_knobs()
+    K = kn.round_leaves
+    dd, bq = (kn.dma_depth, kn.block_q) if bk == "pallas" else (1, 1)
     kw = dict(k=k, round_leaves=K, znorm=cfg.znorm, backend=bk,
-              pq_budget=cfg.pq_budget, **rule.lower())
+              pq_budget=kn.pq_budget, dma_depth=dd, block_q=bq,
+              **rule.lower())
     qj = jnp.asarray(q)
 
     def run():
@@ -328,7 +334,7 @@ def _run_setting(index, q, k: int, rule: StopRule, backend: Optional[str],
         ts.append(time.perf_counter() - t0)
     ts.sort()
     budget = core.n_leaves
-    for cap in (cfg.pq_budget, rule.max_leaves):
+    for cap in (kn.pq_budget, rule.max_leaves):
         if cap is not None:
             budget = min(budget, cap)
     visited = min(int(rounds) * K, budget)
@@ -368,8 +374,8 @@ def calibrate(index, *, ks: Sequence[int] = (1, 5, 10),
     core, _, _, _ = index.search_view()
     n_leaves = core.n_leaves
     grid_leaves = (tuple(leaves_grid) if leaves_grid is not None
-                   else _default_leaves_grid(n_leaves,
-                                             index.config.round_leaves))
+                   else _default_leaves_grid(
+                       n_leaves, index.search_knobs().round_leaves))
     settings = [StopRule(eps=e, max_leaves=m)
                 for m in grid_leaves for e in eps_grid]
 

@@ -432,15 +432,24 @@ class QueryEngine:
         self._index = index
         self.config = cfg
         icfg = index.config
+        # resolve the index-side knobs ONCE, through the same chain
+        # search() uses (IndexConfig > fresh autotune table > static
+        # defaults); the resolved values land in Knobs and therefore in
+        # plan_key, so a retuned table can never alias a stale AOT plan
+        # or result-cache entry
+        kn = index.search_knobs()
+        bk = cfg.backend if cfg.backend is not None else icfg.backend
         self._knobs = Knobs(
             round_leaves=(cfg.round_leaves if cfg.round_leaves is not None
-                          else icfg.round_leaves),
+                          else kn.round_leaves),
             znorm=icfg.znorm,
             max_rounds=cfg.max_rounds,
-            backend=cfg.backend if cfg.backend is not None else icfg.backend,
+            backend=bk,
             pq_budget=(cfg.pq_budget if cfg.pq_budget is not None
-                       else icfg.pq_budget),
-            sync_every=cfg.sync_every)
+                       else kn.pq_budget),
+            sync_every=cfg.sync_every,
+            dma_depth=kn.dma_depth if bk == "pallas" else 1,
+            block_q=kn.block_q if bk == "pallas" else 1)
         self.plans = PlanCache(donate=cfg.donate)
         self._batcher = MicroBatcher(cfg.max_batch)
         self._cv = threading.Condition(threading.RLock())

@@ -53,7 +53,8 @@ from repro.core.search import (build_sharded_plan, merge_delta_topk,
 from repro.runtime.sharding import mesh_sig
 
 _PLAN_STATICS = ("k", "round_leaves", "znorm", "max_rounds", "backend",
-                 "pq_budget", "stop_eps", "stop_leaves")
+                 "pq_budget", "stop_eps", "stop_leaves",
+                 "dma_depth", "block_q")
 _SNAP_STATICS = _PLAN_STATICS + ("n_base",)
 
 
@@ -67,7 +68,11 @@ class Knobs:
     all-reduce cadence); local plans ignore it.  `stop_eps` /
     `stop_leaves` are the approximate-search early-termination knobs
     (repro.quality.StopRule.lower()); their defaults compile the exact
-    program."""
+    program.  `dma_depth` / `block_q` are the autotune-resolved kernel
+    knobs (Mosaic DMA ring depth, Triton query-block rows): resolved
+    from the index's AutotuneTable at engine construction, so a retuned
+    table changes this dataclass and therefore — via `plan_key` — can
+    never alias a stale AOT plan or result-cache entry."""
     round_leaves: int = 8
     znorm: bool = True
     max_rounds: Optional[int] = None
@@ -76,6 +81,8 @@ class Knobs:
     sync_every: int = 1
     stop_eps: float = 0.0
     stop_leaves: Optional[int] = None
+    dma_depth: int = 1
+    block_q: int = 1
 
 
 def plan_key(k: int, knobs: Knobs) -> tuple:
@@ -232,7 +239,9 @@ class PlanCache:
                     znorm=knobs.znorm, backend=knobs.backend,
                     pq_budget=knobs.pq_budget,
                     stop_eps=knobs.stop_eps,
-                    stop_leaves=knobs.stop_leaves))
+                    stop_leaves=knobs.stop_leaves,
+                    dma_depth=knobs.dma_depth,
+                    block_q=knobs.block_q))
                 self._sharded_jits[key] = fn
             return fn
 
@@ -269,7 +278,8 @@ class PlanCache:
         kw = dict(k=k, round_leaves=knobs.round_leaves, znorm=knobs.znorm,
                   max_rounds=knobs.max_rounds, backend=knobs.backend,
                   pq_budget=knobs.pq_budget, stop_eps=knobs.stop_eps,
-                  stop_leaves=knobs.stop_leaves)
+                  stop_leaves=knobs.stop_leaves,
+                  dma_depth=knobs.dma_depth, block_q=knobs.block_q)
         has_delta = snapshot.delta is not None
         if has_alive:
             lowered = self._jitted(True).lower(

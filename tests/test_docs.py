@@ -32,13 +32,14 @@ def _read(rel: str) -> str:
 # docs freshness
 # --------------------------------------------------------------------- #
 # a verbatim row citation: `fig3/...`, `fig5/...`, `serve/...`,
-# `build/...`, `maint/...`, `quality/...` in backticks.  Shorthand
+# `build/...`, `maint/...`, `quality/...`, `kernels/...` in backticks.
+# Shorthand
 # families (`build/pipeline/w{2,4}`, `fig3/query/*/ref`, `serve/...`)
 # fall outside the character class or the filter below and are not
 # checked — EXPERIMENTS.md must cite at least MIN_CITATIONS exact names
 # so the check cannot go vacuous.
 ROW_RE = re.compile(
-    r"`((?:fig\d+|serve|build|maint|quality)/[A-Za-z0-9_/.-]+)`")
+    r"`((?:fig\d+|serve|build|maint|quality|kernels)/[A-Za-z0-9_/.-]+)`")
 MIN_CITATIONS = 10
 
 
@@ -61,6 +62,12 @@ def test_experiments_cites_only_committed_bench_rows():
     assert quality, (
         "EXPERIMENTS.md §Approximate search must cite at least one "
         "committed `quality/...` bench row verbatim")
+    kernels = [c for c in cited if c.startswith("kernels/")]
+    assert kernels, (
+        "EXPERIMENTS.md §Autotune must cite at least one committed "
+        "`kernels/...` bench row verbatim")
+    assert "kernels/refine/roofline_frac" in cited, (
+        "EXPERIMENTS.md must cite the asserted roofline_frac row")
 
 
 def test_docs_exist_and_linked_from_readme():
@@ -77,7 +84,8 @@ def test_docs_exist_and_linked_from_readme():
     serving = _read("docs/SERVING.md")
     for knob in ("max_batch", "linger_ms", "workers", "donate",
                  "auto_compact_rows", "sync_every", "help_after_ms",
-                 "latency_tiers", "recall_target"):
+                 "latency_tiers", "recall_target",
+                 "round_leaves", "dma_depth", "block_q"):
         assert knob in serving, f"SERVING.md lost the {knob} knob"
 
 
